@@ -1,0 +1,21 @@
+"""Shared timing helper: name,us_per_call,derived CSV rows."""
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def timed(name: str, fn: Callable, *, reps: int = 5, derived: str = "") -> Row:
+    fn()                       # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    dt = (time.perf_counter() - t0) / reps
+    return (name, dt * 1e6, derived() if callable(derived) else derived)
+
+
+def emit(rows: List[Row]) -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,49 @@
+"""Paper Figure 2: break-even (2a) and indifference (2b/2c) surfaces."""
+
+import numpy as np
+
+from repro.core import sustain
+from repro.core.sustain import Duty, SECONDS_PER_DAY, SECONDS_PER_YEAR
+from benchmarks.bench_util import timed
+
+ACTIVITIES = [0.1, 0.25, 0.5, 0.75, 1.0]
+SLEEPS = [0.0, 0.5, 1.0]
+
+
+def run():
+    rows = []
+    rm_i = sustain.platform_from_hw("rm_pim", "alexnet", "inference_ternary",
+                                    per_module=True)
+    ddr = sustain.platform_from_hw("ddr3_pim", "alexnet", "inference_ternary",
+                                   per_module=True)
+
+    surf = {}
+
+    def fig2a():
+        surf["a"] = sustain.surface(rm_i, ddr, ACTIVITIES, SLEEPS, "breakeven",
+                                    ref_throughput=ddr.throughput)
+        return surf["a"]
+
+    rows.append(timed("fig2a/breakeven_surface", fig2a,
+                      derived=lambda: (
+                          f"t_B(a=1)={surf['a'][0, -1] * 365:.0f}d;"
+                          f"t_B(a=0.5)={surf['a'][0, -3] * 365:.0f}d;"
+                          f"corner={surf['a'][-1, 0]:.1f}yr")))
+
+    for bench, tag in (("alexnet", "fig2b"), ("vgg16", "fig2c")):
+        gpu = sustain.platform_from_hw("gpu", bench, "train_fp32")
+        rm = sustain.platform_from_hw("rm_pim", bench, "train_fp32")
+
+        def fig(gpu=gpu, rm=rm, store=tag):
+            surf[store] = sustain.surface(gpu, rm, ACTIVITIES, SLEEPS,
+                                          "indifference",
+                                          ref_throughput=rm.throughput)
+            return surf[store]
+
+        cross = sustain.crossover_activity(gpu, rm, ref_throughput=rm.throughput)
+        rows.append(timed(f"{tag}/indifference_surface_{bench}", fig,
+                          derived=f"gpu_beats_rm_above_activity={cross:.3f}"))
+    rows.append(("fig2/paper_claims", 0.0,
+                 "breakeven~1yr@full;~500d@50%;alexnet crossover 40%;"
+                 "vgg crossover 51%;fpga dominated"))
+    return rows

@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: oracle timing + interpret-mode validation.
+
+On this CPU container the Pallas kernels run in interpret mode (Python-speed
+— correctness only); the timed path is the jnp oracle, which is also what XLA
+executes for the CPU smoke models. TPU wall-times come from the roofline
+terms of the dry-run instead.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.quant import ternary
+from benchmarks.bench_util import timed
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # ternary matmul: oracle throughput + kernel-vs-oracle max error
+    m, k, n = 256, 2048, 512
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    tw = ternary.ternarize(w)
+    oracle_fn = jax.jit(ref.ternary_matmul_ref)
+    oracle = lambda: oracle_fn(x, tw.q, tw.scale)
+    flops = 2 * m * k * n
+    rows.append(timed(
+        "kernel/ternary_matmul_oracle", lambda: oracle().block_until_ready(),
+        derived=f"shape={m}x{k}x{n};flops={flops:.2e}"))
+    kern = ops.ternary_matmul(x, tw)
+    err = float(jnp.abs(kern - oracle()).max())
+    rows.append(("kernel/ternary_matmul_interpret_vs_oracle", 0.0,
+                 f"max_err={err:.2e}"))
+
+    # flash attention oracle + kernel error
+    b, s, h, d = 2, 256, 8, 64
+    q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(key, 2), (b, s, 2, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 3), (b, s, 2, d), jnp.float32)
+    oracle_fa_fn = jax.jit(partial(ref.attention_ref, scale=d ** -0.5,
+                                   causal=True))
+    oracle_fa = lambda: oracle_fa_fn(q, kk, v)
+    rows.append(timed(
+        "kernel/flash_attention_oracle",
+        lambda: oracle_fa().block_until_ready(),
+        derived=f"shape=b{b}s{s}h{h}kv2d{d}"))
+    fa = ops.flash_attention(q, kk, v, causal=True)
+    err = float(jnp.abs(fa - oracle_fa()).max())
+    rows.append(("kernel/flash_attention_interpret_vs_oracle", 0.0,
+                 f"max_err={err:.2e}"))
+    return rows

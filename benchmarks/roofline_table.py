@@ -1,0 +1,74 @@
+"""§Roofline: the 40-cell table from the dry-run JSONL + sustainability
+columns (the paper's metric applied to the TPU fleet)."""
+
+import json
+import os
+from typing import Dict, List
+
+from repro.core import energy, grid, hw, lca
+from repro.core import roofline as rl
+
+_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+RESULTS = [os.path.join(_DIR, n) for n in
+           ("dryrun_baseline.jsonl", "hc_a.jsonl", "hc_b.jsonl",
+            "hc_c.jsonl", "hc_extra.jsonl")]
+
+
+def load_records(paths=None) -> Dict[str, dict]:
+    """Latest record per (arch, shape, mesh); §Perf-overridden runs get a
+    '+opt' key so baseline and optimized rows coexist."""
+    recs: Dict[str, dict] = {}
+    for path in paths or RESULTS:
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                key = r["label"] + ("+opt" if r.get("overrides") else "")
+                r = dict(r, label=key)
+                recs[key] = r
+    return recs
+
+
+def _terms(r: dict) -> rl.RooflineTerms:
+    return rl.RooflineTerms(
+        flops_per_device=r["flops_per_device"],
+        bytes_per_device=r["bytes_per_device"],
+        collective_bytes_per_device=r["collective_bytes_per_device"],
+        n_devices=r["n_devices"], label=r["label"])
+
+
+def run():
+    rows: List = []
+    recs = load_records()
+    singles = [r for r in recs.values()
+               if r.get("ok") and r["mesh"] == "16x16"]
+    if not singles:
+        rows.append(("roofline/missing", 0.0,
+                     "run launch.dryrun first (results/dryrun_baseline.jsonl)"))
+        return rows
+    for r in sorted(singles, key=lambda r: r["label"]):
+        t = _terms(r)
+        se = energy.step_energy(t)
+        gco2_1k = {s: energy.carbon_per_1k_steps(t, s) for s in ("NY", "TX")}
+        tokens = max(r.get("tokens_per_step", 1.0), 1.0)
+        opt = "+opt" if r["label"].endswith("+opt") else ""
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}{opt}", 0.0,
+            f"bound={r['bound']};comp={r['compute_s']:.3g}s;"
+            f"mem={r['memory_s']:.3g}s;coll={r['collective_s']:.3g}s;"
+            f"frac={r['roofline_fraction']:.3f};"
+            f"MODEL/HLO={r['useful_flops_ratio']:.2f};"
+            f"J/step={se.energy_j:.3g};"
+            f"gCO2/1kstep NY={gco2_1k['NY']:.1f} TX={gco2_1k['TX']:.1f};"
+            f"J/token={se.energy_j / tokens:.3g}"))
+    multi_ok = sum(1 for r in recs.values()
+                   if r.get("ok") and r["mesh"] == "2x16x16")
+    rows.append(("roofline/multi_pod_pass", 0.0,
+                 f"{multi_ok} multi-pod cells compiled OK (pod axis shards)"))
+    # fleet embodied amortization headline (the paper's question at scale)
+    emb = lca.tpu_package_embodied_mj() * 1e6 * 256
+    rows.append(("roofline/fleet_embodied", 0.0,
+                 f"256-chip pod embodied={emb/1e9:.1f}GJ="
+                 f"{grid.joules_to_gco2(emb, 'NY')/1e6:.1f}tCO2eq(NY fab)"))
+    return rows

@@ -1,0 +1,24 @@
+"""Paper Table 1: grid-mix carbon intensities."""
+
+from repro.core import grid
+from benchmarks.bench_util import timed
+
+
+def run():
+    rows = []
+    mixes = {}
+
+    def compute():
+        nonlocal mixes
+        mixes = grid.all_mix_intensities()
+        return mixes
+
+    rows.append(timed("table1/grid_mixes", compute,
+                      derived=lambda: ";".join(
+                          f"{s}={v:.0f}gCO2eq/kWh" for s, v in mixes.items())))
+    for state, paper in grid.PAPER_MIX_ROW.items():
+        got = grid.mix_intensity(state)
+        rows.append((f"table1/{state}", 0.0,
+                     f"computed={got:.1f};paper={paper:.0f};"
+                     f"delta={abs(got-paper):.2f}"))
+    return rows

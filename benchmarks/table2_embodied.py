@@ -1,0 +1,27 @@
+"""Paper Table 2: embodied energy & carbon per die (all LCA studies)."""
+
+from repro.core import lca
+from benchmarks.bench_util import timed
+
+
+def run():
+    rows = []
+    t2 = {}
+
+    def compute():
+        nonlocal t2
+        t2 = lca.table2()
+        return t2
+
+    rows.append(timed("table2/recompute_all", compute, derived=""))
+    for label, row in t2.items():
+        ref = lca.PAPER_TABLE2[label]
+        rows.append((
+            f"table2/{label}", 0.0,
+            f"PE={row['pe_kwh']:.0f}kWh(paper {ref['pe_kwh']:.0f});"
+            f"E={row['mj_die']:.2f}MJ(paper {ref['mj_die']});"
+            f"AZ={row['az']:.0f}({ref['az']});NY={row['ny']:.0f}({ref['ny']})"))
+    rows.append(("table2/tpu_v5e_package", 0.0,
+                 f"estimate={lca.tpu_package_embodied_mj():.1f}MJ;"
+                 "beyond-paper (PPACE 5nm logic + HBM)"))
+    return rows

@@ -1,0 +1,28 @@
+"""Paper Table 3: per-watt and per-gCO2eq efficiency of every accelerator."""
+
+from repro.core import energy
+from benchmarks.bench_util import timed
+
+
+def run():
+    rows = []
+    cases = [("alexnet", "inference_ternary"), ("alexnet", "train_fp32"),
+             ("vgg16", "train_fp32")]
+    tables = {}
+
+    def compute():
+        for b, p in cases:
+            tables[(b, p)] = energy.table3_efficiency(b, p)
+        return tables
+
+    rows.append(timed("table3/recompute_all", compute))
+    for (b, p), table in tables.items():
+        for dev, row in table.items():
+            ref = energy.PAPER_TABLE3_EFF.get((b, p, dev))
+            rows.append((
+                f"table3/{b}/{p}/{dev}", 0.0,
+                f"{row['per_w']:.2f}{row['unit']}/W;"
+                f"{row['carbon_eff_min']:.2f}-{row['carbon_eff_max']:.2f}"
+                f"{row['carbon_eff_unit']}"
+                + (f";paper={ref[0]}-{ref[1]}" if ref else "")))
+    return rows

@@ -1,0 +1,8 @@
+"""Architecture registry: the 10 assigned archs + the paper's own CNNs.
+
+``get(arch_id)`` -> ArchSpec; ``REGISTRY`` lists all. Each arch module defines
+``SPEC`` with the exact assigned config plus a reduced smoke config of the
+same family.
+"""
+
+from repro.configs.base import ArchSpec, ShapeSpec, SHAPES, get, REGISTRY  # noqa: F401

@@ -1,0 +1,43 @@
+"""starcoder2-7b [dense]: 32L d_model=4608 36H (GQA kv=4) d_ff=18432
+vocab=49152 — GQA, RoPE. [arXiv:2402.19173; hf]
+
+36 heads don't divide the 16-way model axis: the sharding layer replicates
+heads and TPs the (non-gated) FFN — a deliberate §Perf baseline/hillclimb.
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.transformer import BlockSpec, LMConfig
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="starcoder2-7b",
+        d_model=4608, n_heads=36, n_kv_heads=4, d_ff=18432, vocab=49152,
+        head_dim=128,
+        pattern=(BlockSpec(),), repeats=32,
+        act="gelu", mlp_gated=False, rope_theta=1e5,
+        tie_embeddings=True, remat="full",
+        # §Perf HC-A: context-parallel attention + seq-sharded residual —
+        # the 36-head TP fallback otherwise replicates attention across the
+        # model axis (collective term 399 s -> 4.1 s on prefill_32k)
+        sp_attention=True, sp_residual=True,
+    )
+
+
+def make_smoke() -> LMConfig:
+    return LMConfig(
+        name="starcoder2-smoke",
+        d_model=72, n_heads=6, n_kv_heads=2, d_ff=144, vocab=128, head_dim=16,
+        pattern=(BlockSpec(),), repeats=3,
+        act="gelu", mlp_gated=False, remat="none",
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="starcoder2-7b", family="dense", kind="lm",
+    make_config=make_config, make_smoke=make_smoke,
+    params_nominal=7e9, long_context_ok=False,
+    source="arXiv:2402.19173; hf",
+    notes="36H % 16 != 0 -> heads replicate on model axis (baseline); "
+          "pure full attention -> long_500k skipped",
+)

@@ -1,0 +1,44 @@
+"""whisper-large-v3 [audio]: enc-dec, 32+32L d_model=1280 20H d_ff=5120
+vocab=51866 — conv frontend is a STUB (input_specs provides precomputed mel
+frame embeddings). [arXiv:2212.04356; unverified]
+
+20 heads don't divide the 16-way model axis -> heads replicate, FFN TPs
+(same fallback family as starcoder2). Decode shapes run (enc-dec has a
+decoder); long_500k skipped (30 s audio context makes 500k decode
+architecturally meaningless).
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.encdec import EncDecConfig
+
+
+def make_config() -> EncDecConfig:
+    return EncDecConfig(
+        name="whisper-large-v3",
+        n_enc_layers=32, n_dec_layers=32,
+        d_model=1280, n_heads=20, d_ff=5120, vocab=51866,
+        n_audio_ctx=1500, act="gelu",
+        # §Perf HC-A (same fallback family as starcoder2): 20 heads don't
+        # divide the 16-way model axis -> context-parallel attention
+        sp_attention=True,
+    )
+
+
+def make_smoke() -> EncDecConfig:
+    return EncDecConfig(
+        name="whisper-smoke",
+        n_enc_layers=2, n_dec_layers=2,
+        d_model=64, n_heads=4, d_ff=128, vocab=128,
+        n_audio_ctx=16, act="gelu",
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="whisper-large-v3", family="audio", kind="encdec",
+    make_config=make_config, make_smoke=make_smoke,
+    params_nominal=1.55e9, long_context_ok=False,
+    source="arXiv:2212.04356; unverified",
+    notes="modality frontend stubbed: input_specs provides (B,1500,d) frame "
+          "embeddings; train_4k/prefill_32k drive the decoder at the LM "
+          "shape grid (mechanical; beyond whisper's 448-token design)",
+)

@@ -1,0 +1,29 @@
+"""Core sustainability engine — the paper's primary contribution.
+
+Layers (see DESIGN.md §1):
+  hw          platform database (paper Table 2/3 devices + TPU v5e fleet target)
+  grid        grid-mix carbon intensity (Table 1)
+  lca         process-LCA embodied energy/carbon (Table 2)
+  sustain     Eq. 1 indifference/break-even + GreenChip duty model (Fig. 2)
+  energy      operational energy & Table-3 efficiency columns
+  roofline    three-term roofline from compiled XLA artifacts
+  accounting  CarbonAccountant (live holistic accounting in train/serve loops)
+  advisor     platform/fleet decision procedure
+"""
+
+from repro.core import (  # noqa: F401
+    accounting,
+    advisor,
+    energy,
+    grid,
+    hw,
+    lca,
+    roofline,
+    sustain,
+)
+
+CarbonAccountant = accounting.CarbonAccountant
+AccountantConfig = accounting.AccountantConfig
+RooflineTerms = roofline.RooflineTerms
+Duty = sustain.Duty
+Platform = sustain.Platform

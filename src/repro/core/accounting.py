@@ -1,0 +1,141 @@
+"""CarbonAccountant — the paper's holistic evaluation wired into the runtime.
+
+A first-class training/serving-loop component: every step reports its wall
+time (measured, or the roofline bound when dry-running), the accountant
+accumulates operational energy/carbon, tracks the fleet's embodied budget
+(paper Eq. 1's M term), and answers "has this deployment amortized its
+embodied energy yet?" — the paper's core question, asked live.
+
+Thread-safe and cheap (pure python floats); the Trainer calls ``observe_step``
+outside jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+import time
+from typing import Dict, Optional
+
+from repro.core import grid, hw, lca, roofline as rl
+
+SECONDS_PER_YEAR = 365.0 * 86400.0
+
+
+@dataclasses.dataclass
+class AccountantConfig:
+    device: str = "tpu_v5e"
+    n_devices: int = 1
+    grid_mix: str = "NY"
+    # Embodied energy per device (J). None -> auto from the LCA layer.
+    embodied_j_per_device: Optional[float] = None
+    # Duty model for extrapolations (activity of the fleet over its life).
+    activity: float = 1.0
+    sleep_ratio: float = 0.0
+    service_years: float = 3.0
+
+
+class CarbonAccountant:
+    def __init__(self, config: AccountantConfig):
+        self.config = config
+        self._spec = hw.DEVICES[config.device]
+        if config.embodied_j_per_device is not None:
+            self._embodied_j_dev = config.embodied_j_per_device
+        elif config.device == "tpu_v5e":
+            self._embodied_j_dev = lca.tpu_package_embodied_mj() * 1e6
+        else:
+            self._embodied_j_dev = lca.embodied_energy_mj(self._spec) * 1e6
+        self._lock = threading.Lock()
+        self._steps = 0
+        self._tokens = 0.0
+        self._active_s = 0.0
+        self._wall_start = time.monotonic()
+
+    # -- observation ---------------------------------------------------------
+
+    def observe_step(self, step_time_s: float, n_tokens: float = 0.0) -> None:
+        with self._lock:
+            self._steps += 1
+            self._tokens += n_tokens
+            self._active_s += step_time_s
+
+    def observe_roofline(self, terms: rl.RooflineTerms, n_tokens: float = 0.0) -> None:
+        """Dry-run variant: bill the roofline-bound step time."""
+        self.observe_step(terms.step_time_s, n_tokens)
+
+    # -- accounting ----------------------------------------------------------
+
+    @property
+    def embodied_j(self) -> float:
+        return self._embodied_j_dev * self.config.n_devices
+
+    @property
+    def operational_j(self) -> float:
+        """Energy so far: active time at P_active + residual wall time idle."""
+        p = self._spec.power
+        wall = max(time.monotonic() - self._wall_start, self._active_s)
+        idle_s = wall - self._active_s
+        return self.config.n_devices * (self._active_s * p.active_w
+                                        + idle_s * p.idle_w)
+
+    @property
+    def operational_active_j(self) -> float:
+        return self.config.n_devices * self._active_s * self._spec.power.active_w
+
+    def carbon_g(self, *, include_embodied: bool = True,
+                 fab_mix: Optional[str] = None) -> float:
+        g = grid.joules_to_gco2(self.operational_j, self.config.grid_mix)
+        if include_embodied:
+            g += grid.joules_to_gco2(self.embodied_j, fab_mix or self.config.grid_mix)
+        return g
+
+    def amortized_fraction(self) -> float:
+        """Operational / (operational + embodied): how far into the lifecycle
+        the deployment is. The paper: embodied can be 80-90% for edge."""
+        op = self.operational_active_j
+        total = op + self.embodied_j
+        return op / total if total > 0 else 0.0
+
+    def breakeven_vs(self, rival_power_w: float) -> float:
+        """Years to amortize this fleet's embodied energy against a rival
+        platform whose average power for the same work is ``rival_power_w``
+        (Eq. 1's t_B at the observed duty)."""
+        from repro.core import sustain
+        p_self = sustain.average_power_w(self._spec.power, self.config.activity,
+                                         self.config.sleep_ratio)
+        p_self_total = p_self * self.config.n_devices
+        dp = rival_power_w - p_self_total
+        if dp <= 0:
+            return float("inf")
+        return self.embodied_j / dp / SECONDS_PER_YEAR
+
+    def report(self) -> Dict:
+        op = self.operational_active_j
+        return {
+            "device": self.config.device,
+            "n_devices": self.config.n_devices,
+            "grid_mix": self.config.grid_mix,
+            "steps": self._steps,
+            "tokens": self._tokens,
+            "active_s": self._active_s,
+            "embodied_j": self.embodied_j,
+            "embodied_gco2": grid.joules_to_gco2(self.embodied_j, self.config.grid_mix),
+            "operational_j": op,
+            "operational_gco2": grid.joules_to_gco2(op, self.config.grid_mix),
+            "amortized_fraction": self.amortized_fraction(),
+            "tokens_per_j": (self._tokens / op) if op > 0 else None,
+            "gco2_per_mtoken": (grid.joules_to_gco2(op, self.config.grid_mix)
+                                / (self._tokens / 1e6)) if self._tokens else None,
+        }
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.report(), f, indent=2)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        r = self.report()
+        return (f"CarbonAccountant(steps={r['steps']}, "
+                f"op={r['operational_j']:.3g} J, "
+                f"embodied={r['embodied_j']:.3g} J, "
+                f"amortized={r['amortized_fraction']:.2%})")

@@ -1,0 +1,5 @@
+"""Data pipeline substrate."""
+
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, TokenPipeline, make_pipeline,
+)

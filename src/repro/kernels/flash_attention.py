@@ -1,0 +1,118 @@
+"""Flash attention (online-softmax) Pallas TPU kernel.
+
+The serving/long-context hot spot: tiled attention with O(bq*bk) VMEM working
+set instead of O(Sq*Sk) HBM traffic. Supports causal masking, sliding windows
+(gemma3's local layers), and GQA via the kv-head index map (no K/V
+replication in memory).
+
+Grid: (batch, q_heads, Sq/bq, Sk/bk) with the K sweep innermost; running
+max/denominator/accumulator live in VMEM scratch. Block sizes MXU/VPU-aligned
+(128 lanes).
+
+Validated in interpret mode against ref.attention_ref across a shape/dtype/
+mask sweep (tests/test_kernels_attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, n_k_blocks: int):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    diff = q_pos - k_pos
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask &= diff >= 0
+    if window > 0:
+        mask &= diff < window
+
+    # skip fully-masked K blocks (the causal upper triangle / outside-window)
+    @pl.when(jnp.any(mask))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                                 # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                              # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                     # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    scale: float, causal: bool = True, window: int = -1,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Sq, H, D), k/v: (B, Sk, Hkv, D) with H % Hkv == 0.
+
+    Sq % block_q == 0 and Sk % block_k == 0 (ops.py pads otherwise).
+    Returns (B, Sq, H, D) in q.dtype.
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
+
+    # layout: heads-major so each (b, h) pair owns contiguous seq blocks
+    qt = q.transpose(0, 2, 1, 3)       # (B, H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)       # (B, Hkv, Sk, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          n_k_blocks=nk),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, rep=rep: (bi, hi // rep, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, rep=rep: (bi, hi // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

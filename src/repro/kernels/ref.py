@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contracts)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ternary_matmul_ref(x: jnp.ndarray, q: jnp.ndarray,
+                       scale: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    """y = (x @ q) * scale with q int8 {-1,0,1}, fp32 accumulation."""
+    out_dtype = out_dtype or x.dtype
+    acc = jnp.dot(x.astype(jnp.float32), q.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return (acc * scale.astype(jnp.float32)).astype(out_dtype)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  scale: float, causal: bool = True,
+                  window: int = -1) -> jnp.ndarray:
+    """Naive softmax attention with GQA/causal/window semantics matching the
+    flash kernel. q: (B,Sq,H,D), k/v: (B,Sk,Hkv,D)."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    rep = h // hkv
+    qg = q.reshape(b, sq, hkv, rep, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("bqhrd,bnhd->bhrqn", qg * scale, kf)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    diff = q_pos - k_pos
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= diff >= 0
+    if window > 0:
+        mask &= diff < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrqn,bnhd->bqhrd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)

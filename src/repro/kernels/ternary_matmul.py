@@ -1,0 +1,86 @@
+"""PIM-adapted ternary matmul Pallas TPU kernel.
+
+The paper's inference engine (PIRM/ELP^2IM) computes ternary CNN inference
+multiplication-free with bulk bit-line operations inside the memory array.
+The TPU-native adaptation (DESIGN.md §2):
+
+* weights stay **int8 {-1,0,+1}** in HBM — 2x less DMA traffic than bf16 and
+  4x less than fp32: the PIM "compute where the data lives" insight becomes
+  "move 4x fewer bytes through the HBM->VMEM pipe" on a TPU, which is exactly
+  what bounds batch-1..32 inference;
+* the multiply-free accumulation maps onto the MXU with an in-VMEM sign-plane
+  dequant (a select, not a multiply) feeding a fp32-accumulating dot — on a
+  systolic array the ±1 dot *is* the add/subtract network PIM builds on
+  bit-lines;
+* per-output-channel scales are applied once per (bm, bn) tile on the VPU.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; fp32 accumulator lives in VMEM scratch
+across the K sweep. Block sizes default to MXU-aligned 128/256/512.
+
+Validated in interpret mode against ref.ternary_matmul_ref over a
+shape x dtype sweep (tests/test_kernels_ternary.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ternary_matmul_kernel(x_ref, q_ref, scale_ref, o_ref, acc_ref, *,
+                           n_k_blocks: int):
+    """One (bm, bn) output tile; program_id(2) sweeps K blocks."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    # sign-plane dequant: int8 {-1,0,1} -> x.dtype via select network (VPU),
+    # then a fp32-accumulating MXU dot.
+    q = q_ref[...].astype(x.dtype)
+    acc_ref[...] += jax.lax.dot(x, q, preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k_blocks - 1)
+    def _finish():
+        scale = scale_ref[...].astype(jnp.float32)          # (1, bn)
+        o_ref[...] = (acc_ref[...] * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret", "out_dtype"))
+def ternary_matmul(x: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray, *,
+                   block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                   interpret: bool = False,
+                   out_dtype=None) -> jnp.ndarray:
+    """y[m,n] = (sum_k x[m,k] * q[k,n]) * scale[n], q in int8 {-1,0,1}.
+
+    Shapes must be multiples of the block sizes (ops.py pads otherwise).
+    """
+    m, k = x.shape
+    k2, n = q.shape
+    assert k == k2 and scale.shape == (n,), (x.shape, q.shape, scale.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, n, k), (block_m, block_n, block_k))
+    out_dtype = out_dtype or x.dtype
+    nk = k // block_k
+
+    return pl.pallas_call(
+        functools.partial(_ternary_matmul_kernel, n_k_blocks=nk),
+        grid=(m // block_m, n // block_n, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, q, scale.reshape(1, n))

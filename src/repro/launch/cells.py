@@ -1,0 +1,407 @@
+"""Cell builder: (architecture x input-shape x mesh) -> lowerable step.
+
+A *cell* packages everything the dry-run and the roofline need:
+  * the step function (train_step / prefill_step / decode_step),
+  * ShapeDtypeStruct stand-ins for every input (weak-type-correct, shardable,
+    zero allocation),
+  * in/out shardings derived from the logical-axes trees via
+    parallel.sharding (with the long-context rule override for batch=1),
+  * MODEL_FLOPS accounting inputs (param counts, tokens/step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cfgbase
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tf_lib
+from repro.models import common as mcommon
+from repro.optim import AdamWConfig, apply_updates, init_opt_state
+from repro.optim.adamw import opt_state_axes
+from repro.parallel import sharding as sh
+from repro.parallel.ctx import activation_sharding
+
+PyTree = Any
+
+PARAM_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+
+_KV_DTYPES = {"bf16": jnp.bfloat16, "fp8": jnp.float8_e4m3fn}
+
+
+def _cache_dtype(cfg) -> Any:
+    return _KV_DTYPES[getattr(cfg, "kv_cache_dtype", "bf16")]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str                        # train | prefill | decode
+    step_fn: Callable
+    args_sds: Tuple                  # ShapeDtypeStructs, positional
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    n_params_total: float
+    n_params_active: float
+    tokens_per_step: float
+    rules: Any = None
+    notes: str = ""
+    # analytic live-HBM estimate (bytes/device): args + remat-saved carries +
+    # workspace. The CPU-backend temp_size stores scan saves in fp32 (a
+    # layout artifact the TPU pipeline elides — EXPERIMENTS.md §Dry-run), so
+    # fits-HBM is judged on this as well as the raw CPU temp.
+    analytic_live_bytes: float = 0.0
+
+    def lower(self, mesh: Mesh):
+        rules = self.rules or sh.DEFAULT_RULES
+        with mesh, activation_sharding(mesh, rules):
+            jitted = jax.jit(self.step_fn,
+                             in_shardings=self.in_shardings,
+                             out_shardings=self.out_shardings,
+                             donate_argnums=self.donate_argnums)
+            return jitted.lower(*self.args_sds)
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _shardify(tree_sds: PyTree, axes_tree: PyTree, mesh: Mesh, rules) -> PyTree:
+    return sh.shardings_for_tree(tree_sds, axes_tree, mesh, rules)
+
+
+def _ns(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _live_bytes_estimate(mesh: Mesh, *, kind: str, n_params: float,
+                         n_layers: int, d_model: int, tokens: float,
+                         opt_bytes_per_param: float = 4.0,
+                         cache_bytes: float = 0.0) -> float:
+    """Per-device live-HBM estimate: params(+grads) + optimizer + bf16
+    remat-saved carries + 2 GB workspace."""
+    n_model = mesh.shape.get("model", 1)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    params_dev = n_params * 2.0 / n_model            # bf16, TP-sharded
+    if kind == "train":
+        opt_dev = n_params * opt_bytes_per_param / n_model
+        grads_dev = params_dev                        # bf16 grads
+        tokens_dev = tokens / max(n_dev // n_model, 1)
+        carries_dev = n_layers * tokens_dev * d_model * 2.0
+        return params_dev + opt_dev + grads_dev + carries_dev + 2e9
+    return params_dev + cache_bytes / n_dev + 2e9
+
+
+def _adamw_for(arch: cfgbase.ArchSpec) -> AdamWConfig:
+    # memory-lean fleet default: bf16 moments, no fp32 master. kimi-k2 (1T)
+    # additionally drops to int8 moments (DESIGN.md §10 / configs note).
+    state = "int8" if arch.params_nominal >= 5e11 else "bf16"
+    return AdamWConfig(lr=3e-4, state_dtype=state, use_master=False,
+                       grad_clip=1.0)
+
+
+# -----------------------------------------------------------------------------
+# LM cells
+# -----------------------------------------------------------------------------
+
+def _lm_batch_sds(cfg: tf_lib.LMConfig, shape: cfgbase.ShapeSpec,
+                  for_train: bool) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if for_train:
+        batch["labels"] = _sds((b, s), jnp.int32)
+    if cfg.pos_emb == "mrope":
+        batch["positions"] = _sds((b, s, 3), jnp.int32)
+    if cfg.vision_tokens > 0:
+        batch["vision_embeds"] = _sds((b, cfg.vision_tokens, cfg.d_model),
+                                      PARAM_DTYPE)
+    return batch
+
+
+def _lm_batch_axes(cfg: tf_lib.LMConfig, for_train: bool) -> Dict[str, tuple]:
+    axes = {"tokens": ("batch", "seq")}
+    if for_train:
+        axes["labels"] = ("batch", "seq")
+    if cfg.pos_emb == "mrope":
+        axes["positions"] = ("batch", "seq", None)
+    if cfg.vision_tokens > 0:
+        axes["vision_embeds"] = ("batch", None, "embed")
+    return axes
+
+
+def build_lm_cell(arch: cfgbase.ArchSpec, shape: cfgbase.ShapeSpec,
+                  mesh: Mesh, *, overrides: Optional[dict] = None) -> Cell:
+    cfg: tf_lib.LMConfig = arch.make_config()
+    overrides = dict(overrides or {})
+    # "_fsdp": ZeRO-3-style weight/optimizer sharding over the DP axes in
+    # ADDITION to TP (per-layer all-gathers traded for fitting HBM) — §Perf
+    fsdp = overrides.pop("_fsdp", False)
+    # "_weights_int8": serve linear weights int8 (paper C5; §Perf HC-C iter 3)
+    w8 = overrides.pop("_weights_int8", False)
+    overrides_flags = {"kv_seq_shard": overrides.pop("_kv_seq_shard", False)}
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    rules = (sh.LONG_CONTEXT_RULES if shape.global_batch == 1
+             else sh.DEFAULT_RULES)
+    param_rules = dict(rules)
+    if fsdp:
+        param_rules["embed"] = ("pod", "data")
+
+    params_ax = jax.eval_shape(partial(tf_lib.init_lm, cfg=cfg,
+                                       dtype=PARAM_DTYPE),
+                               jax.random.PRNGKey(0))
+    params_sds, params_axes = params_ax.params, params_ax.axes
+    n_params = sum(float(np.prod(x.shape)) for x in jax.tree.leaves(params_sds))
+    if w8:
+        from repro.quant.int8 import quantize_params_for_serving
+        params_sds, params_axes = quantize_params_for_serving(
+            params_sds, params_axes)
+    param_shardings = _shardify(params_sds, params_axes, mesh, param_rules)
+    n_active = _active_params(arch, cfg, n_params)
+
+    if shape.kind == "train":
+        opt_cfg = _adamw_for(arch)
+        opt_sds = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg),
+                                 params_sds)
+        opt_axes = opt_state_axes(params_axes, opt_cfg)
+        opt_shardings = _shardify(opt_sds, opt_axes, mesh, param_rules)
+        batch_sds = _lm_batch_sds(cfg, shape, True)
+        batch_ax = _lm_batch_axes(cfg, True)
+        batch_shardings = _shardify(batch_sds, batch_ax, mesh, rules)
+
+        def train_step(params, opt_state, batch):
+            def loss(p):
+                return tf_lib.loss_fn(p, cfg, batch)
+            (l, aux), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            # pin gradients to the PARAM shardings in the param dtype —
+            # without this the partitioner reshards fp32 grad accumulations
+            # inside the backward loop (measured ~0.9 TB/dev of fp32 grad
+            # AR/AG on qwen1.5-110b; §Perf HC-B iter 4)
+            grads = jax.tree.map(
+                lambda g, pa, sh_: jax.lax.with_sharding_constraint(
+                    g.astype(pa.dtype), sh_),
+                grads, params, param_shardings)
+            new_p, new_s, om = apply_updates(params, grads, opt_state, opt_cfg)
+            return new_p, new_s, {"loss": l, **om}
+
+        return Cell(
+            arch_id=arch.arch_id, shape_name=shape.name, kind="train",
+            step_fn=train_step,
+            args_sds=(params_sds, opt_sds, batch_sds),
+            in_shardings=(param_shardings, opt_shardings, batch_shardings),
+            out_shardings=(param_shardings, opt_shardings, None),
+            donate_argnums=(0, 1),
+            n_params_total=n_params, n_params_active=n_active,
+            tokens_per_step=shape.global_batch * shape.seq_len,
+            rules=rules,
+            analytic_live_bytes=_live_bytes_estimate(
+                mesh, kind="train", n_params=n_params,
+                n_layers=cfg.n_layers, d_model=cfg.d_model,
+                tokens=shape.global_batch * shape.seq_len,
+                opt_bytes_per_param=(2.0 if opt_cfg.state_dtype == "int8"
+                                     else 4.0)),
+        )
+
+    if shape.kind == "prefill":
+        batch_sds = _lm_batch_sds(cfg, shape, False)
+        batch_ax = _lm_batch_axes(cfg, False)
+        batch_shardings = _shardify(batch_sds, batch_ax, mesh, rules)
+        kv_dtype = _cache_dtype(cfg)
+        caches_sds = jax.eval_shape(
+            partial(tf_lib.init_caches, cfg, shape.global_batch,
+                    shape.seq_len, kv_dtype))
+        cache_shardings = _shardify(caches_sds, tf_lib.caches_axes(cfg),
+                                    mesh, rules)
+
+        def prefill_step(params, batch):
+            logits, caches = tf_lib.prefill(
+                params, cfg, batch["tokens"],
+                max_len=shape.seq_len,
+                vision_embeds=batch.get("vision_embeds"),
+                cache_dtype=kv_dtype)
+            return logits, caches
+
+        return Cell(
+            arch_id=arch.arch_id, shape_name=shape.name, kind="prefill",
+            step_fn=prefill_step,
+            args_sds=(params_sds, batch_sds),
+            in_shardings=(param_shardings, batch_shardings),
+            out_shardings=(None, cache_shardings),
+            donate_argnums=(),
+            n_params_total=n_params, n_params_active=n_active,
+            tokens_per_step=shape.global_batch * shape.seq_len,
+            rules=rules,
+            analytic_live_bytes=_live_bytes_estimate(
+                mesh, kind="prefill", n_params=n_params,
+                n_layers=cfg.n_layers, d_model=cfg.d_model,
+                tokens=shape.global_batch * shape.seq_len,
+                cache_bytes=sum(float(np.prod(x.shape)) * x.dtype.itemsize
+                                for x in jax.tree.leaves(caches_sds))),
+        )
+
+    # decode
+    # "_kv_seq_shard": flash-decoding style — shard KV caches on SEQ over the
+    # model axis (softmax reductions psum tiny partials) instead of head_dim
+    # (which psums full per-layer logits for MQA/low-kv archs); §Perf extra
+    kv_seq = overrides_flags.get("kv_seq_shard", False)
+    cache_rules = dict(rules, seq="model") if kv_seq else rules
+    caches_sds = jax.eval_shape(
+        partial(tf_lib.init_caches, cfg, shape.global_batch, shape.seq_len,
+                _cache_dtype(cfg)))
+    cache_shardings = _shardify(caches_sds, tf_lib.caches_axes(cfg), mesh,
+                                cache_rules)
+    token_sds = _sds((shape.global_batch, 1), jnp.int32)
+    pos_sds = _sds((), jnp.int32)
+    tok_spec = sh.spec_for((shape.global_batch, 1), ("batch", "seq"), mesh, rules)
+
+    def decode(params, token, pos, caches):
+        return tf_lib.decode_step(params, cfg, token, pos, caches)
+
+    return Cell(
+        arch_id=arch.arch_id, shape_name=shape.name, kind="decode",
+        step_fn=decode,
+        args_sds=(params_sds, token_sds, pos_sds, caches_sds),
+        in_shardings=(param_shardings, _ns(mesh, tok_spec), _ns(mesh, P()),
+                      cache_shardings),
+        out_shardings=(None, cache_shardings),
+        donate_argnums=(3,),
+        n_params_total=n_params, n_params_active=n_active,
+        tokens_per_step=shape.global_batch,
+        rules=rules,
+    )
+
+
+def _active_params(arch: cfgbase.ArchSpec, cfg, n_params: float) -> float:
+    if arch.family != "moe":
+        return n_params
+    # experts contribute active_fraction; everything else fully active
+    moe = cfg.moe_cfg
+    expert_params = (cfg.repeats * len(cfg.pattern) * moe.n_experts
+                     * 3 * moe.d_model * moe.d_ff)
+    return n_params - expert_params * (1.0 - arch.active_fraction)
+
+
+# -----------------------------------------------------------------------------
+# Enc-dec (whisper) cells
+# -----------------------------------------------------------------------------
+
+_ENC_CACHE_AXES = {
+    "self": {"k": ("stack", "batch", "seq", "heads", "head_dim"),
+             "v": ("stack", "batch", "seq", "heads", "head_dim")},
+    "cross": {"k": ("stack", "batch", "seq", "heads", "head_dim"),
+              "v": ("stack", "batch", "seq", "heads", "head_dim")},
+}
+
+
+def build_encdec_cell(arch: cfgbase.ArchSpec, shape: cfgbase.ShapeSpec,
+                      mesh: Mesh, *, overrides: Optional[dict] = None) -> Cell:
+    cfg: encdec_lib.EncDecConfig = arch.make_config()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    rules = (sh.LONG_CONTEXT_RULES if shape.global_batch == 1
+             else sh.DEFAULT_RULES)
+    params_ax = jax.eval_shape(
+        partial(encdec_lib.init_encdec, cfg=cfg, dtype=PARAM_DTYPE),
+        jax.random.PRNGKey(0))
+    params_sds, params_axes = params_ax.params, params_ax.axes
+    param_shardings = _shardify(params_sds, params_axes, mesh, rules)
+    n_params = sum(float(np.prod(x.shape)) for x in jax.tree.leaves(params_sds))
+    b, s = shape.global_batch, shape.seq_len
+
+    frames_sds = _sds((b, cfg.n_audio_ctx, cfg.d_model), PARAM_DTYPE)
+    frames_spec = sh.spec_for((b, cfg.n_audio_ctx, cfg.d_model),
+                              ("batch", None, "embed"), mesh, rules)
+
+    if shape.kind == "train":
+        opt_cfg = _adamw_for(arch)
+        opt_sds = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), params_sds)
+        opt_shardings = _shardify(opt_sds, opt_state_axes(params_axes, opt_cfg),
+                                  mesh, rules)
+        batch_sds = {"frames": frames_sds,
+                     "tokens": _sds((b, s), jnp.int32),
+                     "labels": _sds((b, s), jnp.int32)}
+        tok_spec = sh.spec_for((b, s), ("batch", "seq"), mesh, rules)
+        batch_shardings = {"frames": _ns(mesh, frames_spec),
+                           "tokens": _ns(mesh, tok_spec),
+                           "labels": _ns(mesh, tok_spec)}
+
+        def train_step(params, opt_state, batch):
+            def loss(p):
+                return encdec_lib.loss_fn(p, cfg, batch)
+            (l, aux), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            new_p, new_s, om = apply_updates(params, grads, opt_state, opt_cfg)
+            return new_p, new_s, {"loss": l, **om}
+
+        return Cell(arch.arch_id, shape.name, "train", train_step,
+                    (params_sds, opt_sds, batch_sds),
+                    (param_shardings, opt_shardings, batch_shardings),
+                    (param_shardings, opt_shardings, None), (0, 1),
+                    n_params, n_params, b * s, rules=rules)
+
+    if shape.kind == "prefill":
+        batch_sds = {"frames": frames_sds, "tokens": _sds((b, s), jnp.int32)}
+        tok_spec = sh.spec_for((b, s), ("batch", "seq"), mesh, rules)
+        batch_shardings = {"frames": _ns(mesh, frames_spec),
+                           "tokens": _ns(mesh, tok_spec)}
+
+        def prefill_step(params, batch):
+            enc_out = encdec_lib.encode(params, cfg, batch["frames"])
+            logits = encdec_lib.decode_train(params, cfg, batch["tokens"],
+                                             enc_out)
+            return logits[:, -1:]
+
+        return Cell(arch.arch_id, shape.name, "prefill", prefill_step,
+                    (params_sds, batch_sds),
+                    (param_shardings, batch_shardings), None, (),
+                    n_params, n_params, b * s, rules=rules)
+
+    # decode
+    caches_sds = jax.eval_shape(
+        partial(encdec_lib.init_dec_caches, cfg, b, s, CACHE_DTYPE))
+    cache_shardings = _shardify(caches_sds, _ENC_CACHE_AXES, mesh, rules)
+    token_sds = _sds((b, 1), jnp.int32)
+    tok_spec = sh.spec_for((b, 1), ("batch", "seq"), mesh, rules)
+
+    def decode(params, token, pos, caches):
+        return encdec_lib.decode_step(params, cfg, token, pos, caches)
+
+    return Cell(arch.arch_id, shape.name, "decode", decode,
+                (params_sds, token_sds, _sds((), jnp.int32), caches_sds),
+                (param_shardings, _ns(mesh, tok_spec), _ns(mesh, P()),
+                 cache_shardings),
+                (None, cache_shardings), (3,),
+                n_params, n_params, b, rules=rules,
+                analytic_live_bytes=_live_bytes_estimate(
+                    mesh, kind="decode", n_params=n_params,
+                    n_layers=cfg.n_layers, d_model=cfg.d_model,
+                    tokens=shape.global_batch,
+                    cache_bytes=sum(float(np.prod(x.shape)) * x.dtype.itemsize
+                                    for x in jax.tree.leaves(caches_sds))))
+
+
+# -----------------------------------------------------------------------------
+# public entry
+# -----------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               overrides: Optional[dict] = None) -> Cell:
+    arch = cfgbase.get(arch_id)
+    shape = cfgbase.SHAPES[shape_name]
+    if shape_name not in arch.shapes:
+        raise ValueError(
+            f"{arch_id} skips {shape_name} (see DESIGN.md §8): {arch.notes}")
+    if arch.kind == "lm":
+        return build_lm_cell(arch, shape, mesh, overrides=overrides)
+    if arch.kind == "encdec":
+        return build_encdec_cell(arch, shape, mesh, overrides=overrides)
+    raise ValueError(f"{arch_id} ({arch.kind}) has no mesh cells")

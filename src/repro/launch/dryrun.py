@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * .lower().compile() must succeed on the 16x16 single-pod mesh AND the
+    2x16x16 multi-pod mesh for every assigned cell;
+  * memory_analysis() -> per-device bytes (does it fit 16 GB HBM?);
+  * cost_analysis()  -> per-device FLOPs/bytes for the §Roofline terms;
+  * HLO text         -> collective bytes (core.roofline parser).
+
+Results append to a JSON file consumed by benchmarks/roofline_table.py and
+EXPERIMENTS.md. One cell per process by default (isolation + parallel fan-out
+from the orchestrator); ``--arch all`` loops in-process when asked.
+
+NOTE: the two lines above MUST stay the first statements in this module —
+jax locks the device count on first init.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import base as cfgbase
+from repro.core import flops as flops_lib
+from repro.core import roofline as rl
+from repro.launch import cells as cells_lib
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             overrides: Optional[dict] = None) -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(len(mesh.devices.reshape(-1)))
+    label = f"{arch_id}/{shape_name}/{'multi' if multi_pod else 'single'}"
+    rec: Dict = {"arch": arch_id, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "n_devices": n_dev, "label": label,
+                 "overrides": overrides or {}}
+    t0 = time.time()
+    try:
+        cell = cells_lib.build_cell(arch_id, shape_name, mesh, overrides)
+        lowered = cell.lower(mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        terms = rl.from_compiled(compiled, n_dev, label=label)
+        # XLA cost_analysis counts while bodies ONCE (scanned layers!) — the
+        # jaxpr-walk gives exact semantic flops & a fusion-aware traffic
+        # estimate (core.flops). XLA numbers kept for reference.
+        analytic = flops_lib.cost_of_fn(cell.step_fn, *cell.args_sds,
+                                        n_devices=n_dev)
+        xla_flops_dev = terms.flops_per_device
+        xla_bytes_dev = terms.bytes_per_device
+        terms.flops_per_device = analytic["flops_per_device"]
+        terms.bytes_per_device = analytic["traffic_per_device"]
+        model_flops = (
+            rl.model_flops_train(cell.n_params_active, cell.tokens_per_step)
+            if cell.kind == "train" else
+            rl.model_flops_infer(cell.n_params_active, cell.tokens_per_step))
+
+        hbm = 16 * 1024**3
+        per_dev_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                         + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        rec.update(
+            ok=True,
+            kind=cell.kind,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            n_params_total=cell.n_params_total,
+            n_params_active=cell.n_params_active,
+            tokens_per_step=cell.tokens_per_step,
+            model_flops=model_flops,
+            memory=dict(
+                argument=mem.argument_size_in_bytes,
+                output=mem.output_size_in_bytes,
+                temp=mem.temp_size_in_bytes,
+                alias=mem.alias_size_in_bytes,
+                per_device_live=per_dev_bytes,
+                fits_hbm=bool(per_dev_bytes <= hbm),
+                analytic_live=cell.analytic_live_bytes,
+                fits_hbm_analytic=bool(cell.analytic_live_bytes <= hbm),
+            ),
+            flops_per_device=terms.flops_per_device,
+            bytes_per_device=terms.bytes_per_device,
+            xla_flops_per_device=xla_flops_dev,
+            xla_bytes_per_device=xla_bytes_dev,
+            flops_by_prim=analytic["by_prim"],
+            collective_bytes_per_device=terms.collective_bytes_per_device,
+            collective_detail=terms.collective_detail,
+            compute_s=terms.compute_s,
+            memory_s=terms.memory_s,
+            collective_s=terms.collective_s,
+            bound=terms.bound,
+            step_time_s=terms.step_time_s,
+            useful_flops_ratio=terms.useful_flops_ratio(model_flops),
+            roofline_fraction=terms.roofline_fraction(model_flops),
+        )
+    except Exception as e:  # recorded, not raised: the table shows the bug
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True,
+                    help="arch id or 'all' (LM/enc-dec archs)")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all' (arch-applicable shapes)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None, help="append-JSONL output path")
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of LMConfig overrides (perf experiments)")
+    args = ap.parse_args()
+
+    arch_ids = (cfgbase.all_arch_ids(lm_only=True) if args.arch == "all"
+                else [args.arch])
+    overrides = json.loads(args.override) if args.override else None
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch_id in arch_ids:
+        arch = cfgbase.get(arch_id)
+        shapes = arch.shapes if args.shape == "all" else [args.shape]
+        for shape_name in shapes:
+            for multi in meshes:
+                rec = run_cell(arch_id, shape_name, multi, overrides)
+                results.append(rec)
+                status = "OK " if rec.get("ok") else "FAIL"
+                extra = (f"bound={rec.get('bound')} "
+                         f"t={rec.get('step_time_s', 0):.4f}s "
+                         f"fit={rec.get('memory', {}).get('fits_hbm')}"
+                         if rec.get("ok") else rec.get("error"))
+                print(f"[{status}] {rec['label']:45s} "
+                      f"wall={rec['wall_s']:6.1f}s {extra}", flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells OK")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

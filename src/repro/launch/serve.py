@@ -1,0 +1,57 @@
+"""Serving launcher: batched request serving with carbon accounting.
+
+CPU-runnable with --smoke (reduced configs); production decode shapes are
+proven via launch.dryrun (decode_32k / long_500k cells).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfgbase
+from repro.core import accounting
+from repro.models import transformer as tf_lib
+from repro.serve import ServeEngine, ServeConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--grid-mix", default="NY")
+    args = ap.parse_args()
+
+    if not args.smoke:
+        raise SystemExit("full-scale serving needs a TPU fleet; use --smoke "
+                         "or `python -m repro.launch.dryrun` for the decode "
+                         "cells.")
+    arch = cfgbase.get(args.arch)
+    if arch.kind != "lm":
+        raise SystemExit(f"serve launcher supports LM archs; {args.arch} is "
+                         f"{arch.kind}")
+    cfg = arch.make_smoke()
+    params = tf_lib.init_lm(jax.random.PRNGKey(0), cfg, dtype=jnp.float32).params
+    acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+        device="tpu_v5e", n_devices=jax.device_count(), grid_mix=args.grid_mix))
+    eng = ServeEngine(params, cfg, ServeConfig(max_slots=args.slots,
+                                               max_len=256), accountant=acct)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, size=rng.integers(4, 12))
+        eng.submit(prompt, max_tokens=args.max_tokens)
+    done = eng.run_until_drained()
+    for r in done:
+        print(f"req {r.uid}: prompt_len={len(r.prompt)} -> {r.generated}")
+    print("carbon report:", json.dumps(acct.report(), default=float))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Training launcher: full FT loop on a (possibly multi-pod) mesh.
+
+CPU-friendly path: ``--smoke`` runs the arch's reduced config end-to-end
+(real steps, real checkpoints, real accounting). The production path takes
+``--mesh single|multi`` and shards params/optimizer/data exactly as the
+dry-run proves out; on this CPU container the full configs are exercised via
+``launch.dryrun`` instead.
+
+Example (the (b) end-to-end driver uses this):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-27b --smoke \
+      --steps 200 --ckpt-dir /tmp/ckpt --grid-mix NY
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfgbase
+from repro.core import accounting
+from repro.data import DataConfig, make_pipeline
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tf_lib
+from repro.optim import AdamWConfig
+from repro.optim.schedules import warmup_cosine
+from repro.checkpoint import CheckpointConfig
+from repro.train import TrainConfig, Trainer
+from repro.train.ft import HeartbeatWriter
+
+
+def build_smoke_trainer(arch_id: str, *, steps: int, ckpt_dir: Optional[str],
+                        grid_mix: str = "NY", seed: int = 0,
+                        global_batch: int = 8, seq_len: int = 64,
+                        heartbeat_dir: Optional[str] = None,
+                        lr: float = 3e-3) -> Trainer:
+    arch = cfgbase.get(arch_id)
+    cfg = arch.make_smoke()
+    key = jax.random.PRNGKey(seed)
+    if arch.kind == "encdec":
+        params = encdec_lib.init_encdec(key, cfg, dtype=jnp.float32).params
+        frames = np.zeros((global_batch, cfg.n_audio_ctx, cfg.d_model),
+                          np.float32)
+
+        def loss_fn(p, batch):
+            b = dict(batch)
+            b["frames"] = jnp.asarray(frames)
+            return encdec_lib.loss_fn(p, cfg, b)
+        vocab = cfg.vocab
+    else:
+        params = tf_lib.init_lm(key, cfg, dtype=jnp.float32).params
+        vision = (np.zeros((global_batch, cfg.vision_tokens, cfg.d_model),
+                           np.float32) if cfg.vision_tokens else None)
+
+        def loss_fn(p, batch):
+            b = dict(batch)
+            if vision is not None:
+                b["vision_embeds"] = jnp.asarray(vision)
+            return tf_lib.loss_fn(p, cfg, b)
+        vocab = cfg.vocab
+
+    pipeline = make_pipeline(DataConfig(
+        vocab=vocab, seq_len=seq_len, global_batch=global_batch,
+        seed=seed, source="markov"))
+    acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+        device="tpu_v5e", n_devices=jax.device_count(), grid_mix=grid_mix))
+    hb = (HeartbeatWriter(heartbeat_dir, host_id="host0")
+          if heartbeat_dir else None)
+    trainer = Trainer(
+        loss_fn=loss_fn, params=params,
+        opt_cfg=AdamWConfig(lr=warmup_cosine(lr, max(steps // 10, 1), steps)),
+        train_cfg=TrainConfig(num_steps=steps, log_every=max(steps // 10, 1),
+                              checkpoint_every=max(steps // 4, 1)),
+        pipeline=pipeline,
+        ckpt_cfg=(CheckpointConfig(directory=ckpt_dir) if ckpt_dir else None),
+        accountant=acct, heartbeat=hb)
+    return trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--grid-mix", default="NY")
+    ap.add_argument("--report", default=None, help="write accounting JSON")
+    args = ap.parse_args()
+
+    if not args.smoke:
+        raise SystemExit(
+            "full-scale training needs a TPU fleet; on this container use "
+            "`python -m repro.launch.dryrun` (the compile-time proof) or "
+            "--smoke (the runnable reduced config).")
+
+    tr = build_smoke_trainer(args.arch, steps=args.steps,
+                             ckpt_dir=args.ckpt_dir, grid_mix=args.grid_mix)
+    tr.install_preemption_handler()
+    if args.resume:
+        restored = tr.maybe_restore()
+        print(f"resume: {'restored step ' + str(tr.step_num) if restored else 'fresh'}")
+    metrics = tr.run()
+    print("final metrics:", json.dumps(metrics))
+    if tr.accountant:
+        rep = tr.accountant.report()
+        print("carbon report:", json.dumps(rep, default=float))
+        if args.report:
+            with open(args.report, "w") as f:
+                json.dump({"metrics": metrics, "carbon": rep}, f, default=float)
+
+
+if __name__ == "__main__":
+    main()

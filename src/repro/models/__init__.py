@@ -1,0 +1,10 @@
+"""Pure-JAX functional model zoo.
+
+Every architecture is a (init, apply) pair over plain-dict pytrees; logical
+sharding axes are carried in a parallel "axes" pytree produced at init time
+(see models.common.Axed). The 10 assigned architectures are all expressible
+through models.transformer.LMConfig block schedules (+ encdec for Whisper);
+the paper's own CNNs live in models.cnn.
+"""
+
+from repro.models import common  # noqa: F401

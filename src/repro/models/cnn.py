@@ -1,0 +1,159 @@
+"""The paper's own CNN benchmarks: AlexNet and VGG-16.
+
+These are the workloads behind Table 3 / Fig. 2: ternary-quantized inference
+(PIM execution model, ELP^2IM/PIRM) and FP32 training (FPIRM / ref [1]).
+Implemented NHWC with jax.lax convolutions; FC layers route through the
+quantized-matmul path when a quant spec is given (see repro.quant and the
+PIM-adapted Pallas kernel in repro.kernels).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Axed, group_dict, leaf
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    features: int
+    kernel: int
+    stride: int = 1
+    padding: str = "SAME"
+    pool: int = 0          # maxpool window (0 = none)
+    pool_stride: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    convs: Tuple[ConvSpec, ...]
+    fcs: Tuple[int, ...]
+    num_classes: int = 1000
+    image_size: int = 224
+    in_channels: int = 3
+    dropout: float = 0.5   # inference path ignores; train uses rng
+
+
+ALEXNET = CNNConfig(
+    name="alexnet",
+    convs=(
+        ConvSpec(64, 11, 4, "SAME", pool=3, pool_stride=2),
+        ConvSpec(192, 5, 1, "SAME", pool=3, pool_stride=2),
+        ConvSpec(384, 3), ConvSpec(256, 3),
+        ConvSpec(256, 3, pool=3, pool_stride=2),
+    ),
+    fcs=(4096, 4096),
+)
+
+VGG16 = CNNConfig(
+    name="vgg16",
+    convs=(
+        ConvSpec(64, 3), ConvSpec(64, 3, pool=2, pool_stride=2),
+        ConvSpec(128, 3), ConvSpec(128, 3, pool=2, pool_stride=2),
+        ConvSpec(256, 3), ConvSpec(256, 3), ConvSpec(256, 3, pool=2, pool_stride=2),
+        ConvSpec(512, 3), ConvSpec(512, 3), ConvSpec(512, 3, pool=2, pool_stride=2),
+        ConvSpec(512, 3), ConvSpec(512, 3), ConvSpec(512, 3, pool=2, pool_stride=2),
+    ),
+    fcs=(4096, 4096),
+)
+
+
+def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Axed:
+    parts: Dict[str, Axed] = {}
+    c_in = cfg.in_channels
+    for i, cs in enumerate(cfg.convs):
+        k1, key = jax.random.split(key)
+        w = common.fan_in_init(k1, (cs.kernel, cs.kernel, c_in, cs.features),
+                               fan_in=cs.kernel * cs.kernel * c_in, dtype=dtype)
+        parts[f"conv{i}"] = group_dict({
+            "w": leaf(w, "spatial", "spatial", "channels", "channels"),
+            "b": leaf(jnp.zeros((cs.features,), dtype), "channels")})
+        c_in = cs.features
+    # flatten size: run shapes forward
+    hw = cfg.image_size
+    for cs in cfg.convs:
+        hw = -(-hw // cs.stride)
+        if cs.pool:
+            hw = max((hw - cs.pool) // cs.pool_stride + 1, 1)
+    flat = hw * hw * c_in
+    dims = (flat,) + tuple(cfg.fcs) + (cfg.num_classes,)
+    for i in range(len(dims) - 1):
+        k1, key = jax.random.split(key)
+        w = common.fan_in_init(k1, (dims[i], dims[i + 1]), dtype=dtype)
+        parts[f"fc{i}"] = group_dict({
+            "w": leaf(w, "ffn", "ffn"),
+            "b": leaf(jnp.zeros((dims[i + 1],), dtype), "ffn")})
+    return group_dict(parts)
+
+
+def _conv_block(p, cs: ConvSpec, x: jnp.ndarray) -> jnp.ndarray:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (cs.stride, cs.stride), cs.padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y + p["b"].astype(y.dtype))
+    if cs.pool:
+        y = jax.lax.reduce_window(
+            y, -jnp.inf, jax.lax.max, (1, cs.pool, cs.pool, 1),
+            (1, cs.pool_stride, cs.pool_stride, 1), "VALID")
+    return y
+
+
+def forward(params, cfg: CNNConfig, images: jnp.ndarray, *,
+            train: bool = False, rng: Optional[jax.Array] = None,
+            matmul_fn=None) -> jnp.ndarray:
+    """images: (B,H,W,C) -> logits (B,num_classes).
+
+    ``matmul_fn(x, w) -> y`` overrides FC matmuls (quantized / Pallas path).
+    """
+    mm = matmul_fn or (lambda a, w: a @ w.astype(a.dtype))
+    x = images
+    for i, cs in enumerate(cfg.convs):
+        x = _conv_block(params[f"conv{i}"], cs, x)
+    x = x.reshape(x.shape[0], -1)
+    n_fc = len(cfg.fcs) + 1
+    for i in range(n_fc):
+        p = params[f"fc{i}"]
+        x = mm(x, p["w"]) + p["b"].astype(x.dtype)
+        if i < n_fc - 1:
+            x = jax.nn.relu(x)
+            if train and rng is not None and cfg.dropout > 0:
+                rng, sub = jax.random.split(rng)
+                keep = jax.random.bernoulli(sub, 1 - cfg.dropout, x.shape)
+                x = jnp.where(keep, x / (1 - cfg.dropout), 0.0)
+    return x
+
+
+def loss_fn(params, cfg: CNNConfig, batch: Dict[str, jnp.ndarray],
+            rng: Optional[jax.Array] = None) -> Tuple[jnp.ndarray, Dict]:
+    logits = forward(params, cfg, batch["images"], train=True, rng=rng)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    ce = jnp.mean(logz - ll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return ce, {"ce": ce, "acc": acc}
+
+
+def flops_per_image(cfg: CNNConfig) -> float:
+    """Analytic MACs*2 per image (for GFLOPS-style throughput accounting)."""
+    fl = 0.0
+    hw = cfg.image_size
+    c_in = cfg.in_channels
+    for cs in cfg.convs:
+        hw_out = -(-hw // cs.stride)
+        fl += 2.0 * hw_out * hw_out * cs.kernel * cs.kernel * c_in * cs.features
+        hw = hw_out
+        if cs.pool:
+            hw = max((hw - cs.pool) // cs.pool_stride + 1, 1)
+        c_in = cs.features
+    flat = hw * hw * c_in
+    dims = (flat,) + tuple(cfg.fcs) + (cfg.num_classes,)
+    for i in range(len(dims) - 1):
+        fl += 2.0 * dims[i] * dims[i + 1]
+    return fl

@@ -1,0 +1,174 @@
+"""Functional-module substrate: params as dict pytrees + logical-axis trees.
+
+No flax/haiku on this box — we roll a minimal, explicit system:
+
+* a module's ``init(key, cfg) -> Axed`` returns ``Axed(params, axes)`` where
+  ``axes`` mirrors ``params`` with a tuple of logical axis names per leaf
+  (``None`` entries for never-sharded dims).
+* ``apply(params, ...)`` is a plain function.
+* ``parallel.sharding`` maps logical axes -> mesh axes with divisibility
+  fallbacks to produce PartitionSpec trees.
+
+Logical axis vocabulary (single source of truth: AXES):
+  batch seq vocab embed heads kv_heads head_dim ffn experts stack
+  ssm_inner ssm_state ssm_group conv spatial channels
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+AXES = frozenset({
+    "batch", "seq", "seq_tp", "vocab", "embed", "heads", "kv_heads", "head_dim",
+    "ffn", "experts", "stack", "ssm_inner", "ssm_state", "ssm_group",
+    "conv", "spatial", "channels", None,
+})
+
+
+def _freeze_axes(x):
+    """Axes tree (nested dicts of axis-name tuples) -> hashable static form."""
+    if isinstance(x, dict):
+        return ("d", tuple(sorted((k, _freeze_axes(v)) for k, v in x.items())))
+    if isinstance(x, tuple):
+        return ("t", tuple(_freeze_axes(v) if isinstance(v, (dict, tuple)) else v
+                           for v in x))
+    return x
+
+
+def _thaw_axes(x):
+    if isinstance(x, tuple) and len(x) == 2 and x[0] == "d":
+        return {k: _thaw_axes(v) for k, v in x[1]}
+    if isinstance(x, tuple) and len(x) == 2 and x[0] == "t":
+        return tuple(_thaw_axes(v) if isinstance(v, tuple) else v for v in x[1])
+    return x
+
+
+@dataclasses.dataclass
+class Axed:
+    """A params pytree together with its logical-axes pytree (same structure).
+
+    Registered as a JAX pytree: ``params`` are the children, ``axes`` ride
+    along as hashable static aux data — so init functions stay traceable
+    (eval_shape / vmap / jit all work on functions returning Axed).
+    """
+    params: PyTree
+    axes: PyTree
+
+    def map_params(self, fn: Callable[[jnp.ndarray], jnp.ndarray]) -> "Axed":
+        return Axed(jax.tree.map(fn, self.params), self.axes)
+
+
+jax.tree_util.register_pytree_node(
+    Axed,
+    lambda a: ((a.params,), _freeze_axes(a.axes)),
+    lambda aux, children: Axed(children[0], _thaw_axes(aux)),
+)
+
+
+def leaf(value: jnp.ndarray, *axes: Optional[str]) -> Axed:
+    if len(axes) != value.ndim:
+        raise ValueError(f"{len(axes)} axes for rank-{value.ndim} param")
+    for a in axes:
+        if a not in AXES:
+            raise ValueError(f"unknown logical axis {a!r}")
+    return Axed(value, tuple(axes))
+
+
+def group(**kv: Axed) -> Axed:
+    """Combine child Axed values into a dict node."""
+    return Axed({k: v.params for k, v in kv.items()},
+                {k: v.axes for k, v in kv.items()})
+
+
+def group_dict(kv: Dict[str, Axed]) -> Axed:
+    return Axed({k: v.params for k, v in kv.items()},
+                {k: v.axes for k, v in kv.items()})
+
+
+def stack_axed(items: Sequence[Axed]) -> Axed:
+    """Stack identically-structured Axed pytrees along a new leading 'stack'
+    dim (the scan-over-layers layout)."""
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *[i.params for i in items])
+    axes = jax.tree.map(
+        lambda a: ("stack",) + a if isinstance(a, tuple) else a,
+        items[0].axes, is_leaf=lambda x: isinstance(x, tuple))
+    return Axed(params, axes)
+
+
+def vmap_init(init_fn: Callable[[jax.Array], Axed], key: jax.Array,
+              n: int) -> Axed:
+    """Initialize ``n`` stacked copies of a module (scan layout) via vmap."""
+    keys = jax.random.split(key, n)
+    example = jax.eval_shape(init_fn, keys[0])
+    params = jax.vmap(lambda k: init_fn(k).params)(keys)
+    axes = jax.tree.map(
+        lambda a: ("stack",) + a if isinstance(a, tuple) else a,
+        example.axes, is_leaf=lambda x: isinstance(x, tuple))
+    return Axed(params, axes)
+
+
+# -----------------------------------------------------------------------------
+# Initializers
+# -----------------------------------------------------------------------------
+
+def trunc_normal(key: jax.Array, shape: Sequence[int], stddev: float,
+                 dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def fan_in_init(key: jax.Array, shape: Sequence[int], fan_in: Optional[int] = None,
+                dtype=jnp.float32) -> jnp.ndarray:
+    fi = fan_in if fan_in is not None else int(np.prod(shape[:-1])) or 1
+    return trunc_normal(key, shape, 1.0 / math.sqrt(fi), dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    """Mixed-precision policy: bf16 params/compute, fp32 reductions/master."""
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    accum_dtype: Any = jnp.float32
+
+    def cast_compute(self, x: jnp.ndarray) -> jnp.ndarray:
+        return x.astype(self.compute_dtype)
+
+
+FP32 = DTypePolicy(jnp.float32, jnp.float32, jnp.float32)
+BF16 = DTypePolicy(jnp.bfloat16, jnp.bfloat16, jnp.float32)
+
+
+# -----------------------------------------------------------------------------
+# Pytree utilities
+# -----------------------------------------------------------------------------
+
+def count_params(params: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(params))
+
+
+def tree_paths(params: PyTree) -> Dict[str, Tuple[int, ...]]:
+    out = {}
+    for path, x in jax.tree_util.tree_flatten_with_path(params)[0]:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[name] = tuple(x.shape)
+    return out
+
+
+def assert_finite(tree: PyTree, what: str = "tree") -> None:
+    for path, x in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if not bool(jnp.isfinite(x).all()):
+            name = "/".join(str(getattr(p, "key", p)) for p in path)
+            raise AssertionError(f"non-finite values in {what}:{name}")

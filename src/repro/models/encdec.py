@@ -1,0 +1,230 @@
+"""Encoder-decoder transformer (Whisper-large-v3 backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed mel-frame embeddings (B, n_audio_ctx, d_model). The encoder adds
+sinusoidal positions and runs bidirectional attention; the decoder runs causal
+self-attention + cross-attention with learned positions.
+
+Decode uses self-attn KV caches plus precomputed cross-attn K/V ("cross
+cache") built at prefill from the encoder output.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, layers
+from repro.models.common import Axed, group_dict
+from repro.models.layers import AttnConfig, KVCache
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    n_audio_ctx: int = 1500
+    act: str = "gelu"
+    sp_attention: bool = False   # 20 heads don't divide 16: context parallel
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return ((self.vocab + 127) // 128) * 128
+
+    def attn_cfg(self, causal: bool) -> AttnConfig:
+        return AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                          n_kv_heads=self.n_heads, head_dim=self.head_dim,
+                          qkv_bias=True, causal=causal, pos_emb="none",
+                          sp=self.sp_attention)
+
+    @property
+    def n_layers(self) -> int:
+        return self.n_enc_layers + self.n_dec_layers
+
+
+def sinusoids(length: int, channels: int) -> jnp.ndarray:
+    """Whisper's sinusoidal position embedding."""
+    log_timescale = jnp.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    scaled = jnp.arange(length)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+def _init_enc_block(key, cfg: EncDecConfig, dtype) -> Axed:
+    k1, k2 = jax.random.split(key)
+    return group_dict({
+        "norm_attn": layers.init_layernorm(cfg.d_model),
+        "attn": layers.init_attention(k1, cfg.attn_cfg(causal=False), dtype),
+        "norm_ffn": layers.init_layernorm(cfg.d_model),
+        "mlp": layers.init_mlp(k2, cfg.d_model, cfg.d_ff, gated=False, dtype=dtype),
+    })
+
+
+def _init_dec_block(key, cfg: EncDecConfig, dtype) -> Axed:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return group_dict({
+        "norm_self": layers.init_layernorm(cfg.d_model),
+        "self_attn": layers.init_attention(k1, cfg.attn_cfg(causal=True), dtype),
+        "norm_cross": layers.init_layernorm(cfg.d_model),
+        "cross_attn": layers.init_attention(k2, cfg.attn_cfg(causal=False), dtype),
+        "norm_ffn": layers.init_layernorm(cfg.d_model),
+        "mlp": layers.init_mlp(k3, cfg.d_model, cfg.d_ff, gated=False, dtype=dtype),
+    })
+
+
+def init_encdec(key, cfg: EncDecConfig, dtype=jnp.bfloat16) -> Axed:
+    keys = jax.random.split(key, 6)
+    max_dec_pos = 32768  # learned decoder positions (sized for the shape grid)
+    return group_dict({
+        "embed": layers.init_embed(keys[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "pos_dec": common.leaf(
+            common.trunc_normal(keys[1], (max_dec_pos, cfg.d_model), 0.01, dtype),
+            "seq", "embed"),
+        "enc": common.vmap_init(lambda k: _init_enc_block(k, cfg, dtype),
+                                keys[2], cfg.n_enc_layers),
+        "dec": common.vmap_init(lambda k: _init_dec_block(k, cfg, dtype),
+                                keys[3], cfg.n_dec_layers),
+        "norm_enc": layers.init_layernorm(cfg.d_model),
+        "norm_dec": layers.init_layernorm(cfg.d_model),
+    })
+
+
+# -----------------------------------------------------------------------------
+# Encoder
+# -----------------------------------------------------------------------------
+
+def encode(params, cfg: EncDecConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, n_audio_ctx, d_model) precomputed embeddings (stub frontend)."""
+    b, s, _ = frames.shape
+    x = frames + sinusoids(s, cfg.d_model).astype(frames.dtype)[None]
+    acfg = cfg.attn_cfg(causal=False)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, p):
+        h = layers.layer_norm(p["norm_attn"], x)
+        x = x + layers.attention(p["attn"], acfg, h, positions)
+        h = layers.layer_norm(p["norm_ffn"], x)
+        x = x + layers.mlp(p["mlp"], h, cfg.act)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc"])
+    return layers.layer_norm(params["norm_enc"], x)
+
+
+# -----------------------------------------------------------------------------
+# Decoder
+# -----------------------------------------------------------------------------
+
+def decode_train(params, cfg: EncDecConfig, tokens: jnp.ndarray,
+                 enc_out: jnp.ndarray) -> jnp.ndarray:
+    """Teacher-forced decoder. tokens (B,S) -> logits (B,S,V)."""
+    b, s = tokens.shape
+    x = layers.embed(params["embed"], tokens)
+    x = x + params["pos_dec"][:s].astype(x.dtype)[None]
+    self_cfg, cross_cfg = cfg.attn_cfg(True), cfg.attn_cfg(False)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, p):
+        h = layers.layer_norm(p["norm_self"], x)
+        x = x + layers.attention(p["self_attn"], self_cfg, h, positions)
+        h = layers.layer_norm(p["norm_cross"], x)
+        x = x + layers.cross_attention(p["cross_attn"], cross_cfg, h, enc_out)
+        h = layers.layer_norm(p["norm_ffn"], x)
+        x = x + layers.mlp(p["mlp"], h, cfg.act)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec"])
+    x = layers.layer_norm(params["norm_dec"], x)
+    return layers.unembed(params["embed"], x)
+
+
+def loss_fn(params, cfg: EncDecConfig, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    enc_out = encode(params, cfg, batch["frames"])
+    logits = decode_train(params, cfg, batch["tokens"], enc_out)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - ll)
+    return ce, {"ce": ce, "tokens": jnp.asarray(labels.size, jnp.float32)}
+
+
+# -- serving -------------------------------------------------------------------
+
+def init_dec_caches(cfg: EncDecConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16):
+    kv = lambda slen: KVCache(
+        k=jnp.zeros((cfg.n_dec_layers, batch, slen, cfg.n_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((cfg.n_dec_layers, batch, slen, cfg.n_heads, cfg.head_dim), dtype))
+    return {"self": kv(max_len), "cross": kv(cfg.n_audio_ctx)}
+
+
+def build_cross_cache(params, cfg: EncDecConfig, enc_out: jnp.ndarray) -> KVCache:
+    """Precompute per-layer cross-attention K/V from the encoder output."""
+    def body(_, p):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out,
+                       p["cross_attn"]["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out,
+                       p["cross_attn"]["wv"].astype(enc_out.dtype))
+        k = k + p["cross_attn"]["bk"].astype(k.dtype)
+        v = v + p["cross_attn"]["bv"].astype(v.dtype)
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, None, params["dec"])
+    return KVCache(k=ks, v=vs)
+
+
+def decode_step(params, cfg: EncDecConfig, token: jnp.ndarray, pos: jnp.ndarray,
+                caches) -> Tuple[jnp.ndarray, Dict]:
+    """One decoder token. caches = {"self": KVCache(L,...), "cross": KVCache(L,...)}."""
+    b = token.shape[0]
+    x = layers.embed(params["embed"], token)
+    x = x + jax.lax.dynamic_slice(params["pos_dec"], (pos, 0),
+                                  (1, cfg.d_model)).astype(x.dtype)[None]
+    self_cfg, cross_cfg = cfg.attn_cfg(True), cfg.attn_cfg(False)
+
+    def body(x, inp):
+        p, kself, vself, kcross, vcross = inp
+        h = layers.layer_norm(p["norm_self"], x)
+        q, k_new, v_new = layers._project_qkv(p["self_attn"], self_cfg, h,
+                                              jnp.broadcast_to(pos[None, None], (b, 1)))
+        kc = jax.lax.dynamic_update_slice(kself, k_new.astype(kself.dtype),
+                                          (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vself, v_new.astype(vself.dtype),
+                                          (0, pos, 0, 0))
+        kpos = jnp.arange(kc.shape[1])[None]
+        mask = (kpos <= pos)[:, None, :]
+        out = layers.sdpa(q, kc, vc, mask, self_cfg.scale)
+        x = x + jnp.einsum("bshk,hkd->bsd", out,
+                           p["self_attn"]["wo"].astype(out.dtype))
+        # cross attention against the precomputed cache
+        h = layers.layer_norm(p["norm_cross"], x)
+        qc = jnp.einsum("bsd,dhk->bshk", h, p["cross_attn"]["wq"].astype(h.dtype))
+        qc = qc + p["cross_attn"]["bq"].astype(qc.dtype)
+        maskc = jnp.ones((b, 1, kcross.shape[1]), bool)
+        outc = layers.sdpa(qc, kcross, vcross, maskc, cross_cfg.scale)
+        x = x + jnp.einsum("bshk,hkd->bsd", outc,
+                           p["cross_attn"]["wo"].astype(outc.dtype))
+        h = layers.layer_norm(p["norm_ffn"], x)
+        x = x + layers.mlp(p["mlp"], h, cfg.act)
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec"], caches["self"].k, caches["self"].v,
+                  caches["cross"].k, caches["cross"].v))
+    x = layers.layer_norm(params["norm_dec"], x)
+    logits = layers.unembed(params["embed"], x)
+    return logits[..., :cfg.vocab], {"self": KVCache(k=ks, v=vs),
+                                     "cross": caches["cross"]}

@@ -1,0 +1,298 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Implements the chunked SSD algorithm for training/prefill (sequential scan
+over chunks; quadratic only within a chunk) and the O(1)-per-token recurrent
+form for decode. The chunked path is validated against the naive recurrence in
+tests/test_ssd.py.
+
+Block layout (faithful to Mamba2):
+  in: separate projections z, x, B, C, dt  (separate so TP sharding stays clean)
+  causal depthwise conv (width d_conv) over x, B, C
+  SSD core:  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T ;  y_t = C_t h_t + D x_t
+  gated RMSNorm(y * silu(z)) -> out projection
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, layers
+from repro.models.common import Axed, group, leaf
+from repro.parallel.ctx import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    d_model: int
+    d_state: int = 128          # N
+    head_dim: int = 64          # P
+    expand: int = 2
+    n_groups: int = 1           # G (B,C shared per group)
+    d_conv: int = 4
+    chunk: int = 256            # SSD chunk length (training/prefill)
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+
+def init_ssd(key, cfg: SSDConfig, dtype=jnp.float32) -> Axed:
+    kz, kx, kb, kc, kdt, ko, ka = jax.random.split(key, 7)
+    d, h, p, g, n = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    # dt bias such that softplus(bias) spans [dt_min, dt_max] (mamba init)
+    u = jax.random.uniform(ka, (h,), jnp.float32)
+    dt_init = jnp.exp(u * (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min))
+                      + jnp.log(cfg.dt_min))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))   # inverse softplus
+    a_init = jnp.log(jnp.linspace(1.0, 16.0, h))        # A in [-16,-1]
+    return group(
+        w_z=leaf(common.fan_in_init(kz, (d, h, p), fan_in=d, dtype=dtype),
+                 "embed", "heads", "head_dim"),
+        w_x=leaf(common.fan_in_init(kx, (d, h, p), fan_in=d, dtype=dtype),
+                 "embed", "heads", "head_dim"),
+        w_b=leaf(common.fan_in_init(kb, (d, g, n), fan_in=d, dtype=dtype),
+                 "embed", "ssm_group", "ssm_state"),
+        w_c=leaf(common.fan_in_init(kc, (d, g, n), fan_in=d, dtype=dtype),
+                 "embed", "ssm_group", "ssm_state"),
+        w_dt=leaf(common.fan_in_init(kdt, (d, h), fan_in=d, dtype=dtype),
+                  "embed", "heads"),
+        dt_bias=leaf(dt_bias.astype(jnp.float32), "heads"),
+        a_log=leaf(a_init.astype(jnp.float32), "heads"),
+        d_skip=leaf(jnp.ones((h,), jnp.float32), "heads"),
+        conv_x=leaf(common.trunc_normal(ko, (cfg.d_conv, h, p), 0.2, dtype),
+                    "conv", "heads", "head_dim"),
+        conv_b=leaf(jnp.zeros((cfg.d_conv, g, n), dtype), "conv", "ssm_group", "ssm_state"),
+        conv_c=leaf(jnp.zeros((cfg.d_conv, g, n), dtype), "conv", "ssm_group", "ssm_state"),
+        norm=init_rmsnorm_inner(h * p, dtype),
+        w_out=leaf(common.fan_in_init(jax.random.fold_in(ko, 1), (h, p, d),
+                                      fan_in=h * p, dtype=dtype),
+                   "heads", "head_dim", "embed"),
+    )
+
+
+def init_rmsnorm_inner(d: int, dtype) -> Axed:
+    return group(scale=leaf(jnp.ones((d,), dtype), "ssm_inner"))
+
+
+# -----------------------------------------------------------------------------
+# causal depthwise conv (width d_conv), full-sequence and incremental forms
+# -----------------------------------------------------------------------------
+
+def _causal_dwconv(x: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,...ch), kernel: (W,...ch). y_t = sum_i k_i x_{t-W+1+i}."""
+    w = kernel.shape[0]
+    y = x * kernel[-1].astype(x.dtype)
+    for i in range(w - 1):
+        shift = w - 1 - i
+        xs = jnp.pad(x, [(0, 0), (shift, 0)] + [(0, 0)] * (x.ndim - 2))[:, :-shift]
+        y = y + xs * kernel[i].astype(x.dtype)
+    return y
+
+
+def _dwconv_step(x_new: jnp.ndarray, conv_state: jnp.ndarray,
+                 kernel: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x_new: (B,1,...ch); conv_state: (B,W-1,...ch) past inputs."""
+    window = jnp.concatenate([conv_state, x_new], axis=1)     # (B,W,...)
+    y = jnp.einsum("bw...,w...->b...", window.astype(jnp.float32),
+                   kernel.astype(jnp.float32))[:, None]
+    return y.astype(x_new.dtype), window[:, 1:]
+
+
+# -----------------------------------------------------------------------------
+# SSD core
+# -----------------------------------------------------------------------------
+
+def ssd_naive(x, dt, a, b_mat, c_mat, init_state=None):
+    """Reference O(S·N·P) recurrence (oracle for tests). fp32.
+
+    x: (B,S,H,P) dt: (B,S,H) a: (H,) b/c: (B,S,H,N) (already group-expanded)
+    returns y: (B,S,H,P), final state (B,H,N,P)
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    state = (jnp.zeros((bsz, h, n, p), jnp.float32) if init_state is None
+             else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a)                                # (B,H)
+        xbar = xt * dtt[..., None]                              # (B,H,P)
+        state = (decay[..., None, None] * state
+                 + jnp.einsum("bhn,bhp->bhnp", bt, xbar))
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          b_mat.astype(jnp.float32).transpose(1, 0, 2, 3),
+          c_mat.astype(jnp.float32).transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, init_state=None):
+    """Chunked SSD (Mamba2 alg. 1): quadratic intra-chunk, linear inter-chunk.
+
+    Shapes as ssd_naive (b/c already expanded to heads). S % chunk == 0.
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    if s % chunk != 0:
+        # pad tail: dt=0 => decay 1 and x̄=0, so states are unaffected
+        pad = chunk - s % chunk
+        padded = ssd_chunked(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            a,
+            jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            chunk, init_state)
+        return padded[0][:, :s], padded[1]
+    nc = s // chunk
+    f32 = jnp.float32
+
+    # (B, nc, H, Q, ...)
+    xc = x.astype(f32).reshape(bsz, nc, chunk, h, p).transpose(0, 1, 3, 2, 4)
+    dtc = dt.astype(f32).reshape(bsz, nc, chunk, h).transpose(0, 1, 3, 2)
+    bc = b_mat.astype(f32).reshape(bsz, nc, chunk, h, n).transpose(0, 1, 3, 2, 4)
+    cc = c_mat.astype(f32).reshape(bsz, nc, chunk, h, n).transpose(0, 1, 3, 2, 4)
+
+    da = dtc * a[None, None, :, None]                   # (B,nc,H,Q) <= 0
+    cum = jnp.cumsum(da, axis=-1)                       # cumulative log-decay
+    xbar = xc * dtc[..., None]
+
+    # intra-chunk (masked quadratic attention-like form)
+    ldiff = cum[..., :, None] - cum[..., None, :]       # (B,nc,H,Q,Q)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    l_mat = jnp.where(tri, jnp.exp(ldiff), 0.0)
+    scores = jnp.einsum("bchqn,bchkn->bchqk", cc, bc) * l_mat
+    y_intra = jnp.einsum("bchqk,bchkp->bchqp", scores, xbar)
+
+    # chunk-final states: S_c = sum_j exp(cum_Q - cum_j) B_j (x̄_j)^T
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)         # (B,nc,H,Q)
+    s_chunk = jnp.einsum("bchqn,bchqp->bchnp", bc * decay_to_end[..., None], xbar)
+    chunk_decay = jnp.exp(cum[..., -1])                 # (B,nc,H)
+
+    # inter-chunk recurrence over nc chunks
+    h0 = (jnp.zeros((bsz, h, n, p), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(hprev, inp):
+        s_c, dec = inp                                   # (B,H,N,P), (B,H)
+        hnew = dec[..., None, None] * hprev + s_c
+        return hnew, hprev                               # emit state *entering* chunk
+
+    hfinal, h_in = jax.lax.scan(
+        step, h0, (s_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                 # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bchqn,bchnp->bchqp",
+                         cc * jnp.exp(cum)[..., None], h_in)
+    y = (y_intra + y_inter).transpose(0, 1, 3, 2, 4).reshape(bsz, s, h, p)
+    return y, hfinal
+
+
+# -----------------------------------------------------------------------------
+# Block-level apply
+# -----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SSDState:
+    conv_x: jnp.ndarray     # (B, W-1, H, P)
+    conv_b: jnp.ndarray     # (B, W-1, G, N)
+    conv_c: jnp.ndarray     # (B, W-1, G, N)
+    ssm: jnp.ndarray        # (B, H, N, P)
+
+jax.tree_util.register_dataclass(
+    SSDState, data_fields=["conv_x", "conv_b", "conv_c", "ssm"], meta_fields=[])
+
+
+def init_ssd_state(cfg: SSDConfig, batch: int, dtype=jnp.bfloat16) -> SSDState:
+    h, p, g, n, w = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state, cfg.d_conv
+    return SSDState(
+        conv_x=jnp.zeros((batch, w - 1, h, p), dtype),
+        conv_b=jnp.zeros((batch, w - 1, g, n), dtype),
+        conv_c=jnp.zeros((batch, w - 1, g, n), dtype),
+        ssm=jnp.zeros((batch, h, n, p), jnp.float32),
+    )
+
+
+def _expand_groups(t: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B,S,G,N) -> (B,S,H,N) by repeating each group H/G times."""
+    bsz, s, g, n = t.shape
+    rep = n_heads // g
+    return jnp.broadcast_to(t[:, :, :, None, :], (bsz, s, g, rep, n)
+                            ).reshape(bsz, s, n_heads, n)
+
+
+def _projections(params, cfg: SSDConfig, x: jnp.ndarray):
+    z = jnp.einsum("bsd,dhp->bshp", x, params["w_z"].astype(x.dtype))
+    xin = jnp.einsum("bsd,dhp->bshp", x, params["w_x"].astype(x.dtype))
+    b_raw = jnp.einsum("bsd,dgn->bsgn", x, params["w_b"].astype(x.dtype))
+    c_raw = jnp.einsum("bsd,dgn->bsgn", x, params["w_c"].astype(x.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["w_dt"].astype(x.dtype))
+    return z, xin, b_raw, c_raw, dt_raw
+
+
+def _finish(params, cfg: SSDConfig, y: jnp.ndarray, xin: jnp.ndarray,
+            z: jnp.ndarray) -> jnp.ndarray:
+    y = y + params["d_skip"][None, None, :, None] * xin.astype(jnp.float32)
+    y = y.astype(z.dtype) * jax.nn.silu(z)
+    bsz, s = y.shape[:2]
+    y = layers.rms_norm(params["norm"], y.reshape(bsz, s, -1))
+    y = y.reshape(bsz, s, cfg.n_heads, cfg.head_dim)
+    return jnp.einsum("bshp,hpd->bsd", y, params["w_out"].astype(y.dtype))
+
+
+def ssd_block(params, cfg: SSDConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence (training/prefill) Mamba2 block. x: (B,S,D)."""
+    z, xin, b_raw, c_raw, dt_raw = _projections(params, cfg, x)
+    xin = jax.nn.silu(_causal_dwconv(xin, params["conv_x"]))
+    b_raw = jax.nn.silu(_causal_dwconv(b_raw, params["conv_b"]))
+    c_raw = jax.nn.silu(_causal_dwconv(c_raw, params["conv_c"]))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    # group->head expansion loses the head sharding under GSPMD propagation;
+    # re-pin heads to the model axis (the SSD chunk tensors inherit it)
+    xin = constrain(xin, "batch", "seq", "heads", "head_dim")
+    dt = constrain(dt, "batch", "seq", "heads")
+    bm = _expand_groups(b_raw, cfg.n_heads).astype(jnp.float32)
+    cm = _expand_groups(c_raw, cfg.n_heads).astype(jnp.float32)
+    bm = constrain(bm, "batch", "seq", "heads", "ssm_state")
+    cm = constrain(cm, "batch", "seq", "heads", "ssm_state")
+    y, _ = ssd_chunked(xin.astype(jnp.float32), dt, a, bm, cm, cfg.chunk)
+    y = constrain(y, "batch", "seq", "heads", "head_dim")
+    return _finish(params, cfg, y, xin, z)
+
+
+def ssd_block_decode(params, cfg: SSDConfig, x: jnp.ndarray,
+                     state: SSDState) -> Tuple[jnp.ndarray, SSDState]:
+    """One-token decode. x: (B,1,D)."""
+    z, xin, b_raw, c_raw, dt_raw = _projections(params, cfg, x)
+    xin, conv_x = _dwconv_step(xin, state.conv_x, params["conv_x"])
+    b_raw, conv_b = _dwconv_step(b_raw, state.conv_b, params["conv_b"])
+    c_raw, conv_c = _dwconv_step(c_raw, state.conv_c, params["conv_c"])
+    xin, b_raw, c_raw = map(jax.nn.silu, (xin, b_raw, c_raw))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,1,H)
+    a = -jnp.exp(params["a_log"])
+    bm = _expand_groups(b_raw, cfg.n_heads).astype(jnp.float32)[:, 0]     # (B,H,N)
+    cm = _expand_groups(c_raw, cfg.n_heads).astype(jnp.float32)[:, 0]
+    dt0 = dt[:, 0]                                                        # (B,H)
+    decay = jnp.exp(dt0 * a)                                              # (B,H)
+    xbar = xin.astype(jnp.float32)[:, 0] * dt0[..., None]                 # (B,H,P)
+    ssm = (decay[..., None, None] * state.ssm
+           + jnp.einsum("bhn,bhp->bhnp", bm, xbar))
+    y = jnp.einsum("bhn,bhnp->bhp", cm, ssm)[:, None]                     # (B,1,H,P)
+    out = _finish(params, cfg, y, xin, z)
+    return out, SSDState(conv_x=conv_x, conv_b=conv_b, conv_c=conv_c, ssm=ssm)

@@ -1,0 +1,558 @@
+"""Decoder-only LM with composable per-layer block schedules.
+
+One config drives all assigned LM architectures:
+
+* dense GQA transformers (starcoder2, granite, qwen1.5, qwen2-vl backbone)
+* sliding-window:global patterns (gemma3's 5:1)
+* MoE FFNs (moonshot 64e/top-6, kimi-k2 384e/top-8)
+* SSM stacks (mamba2) and hybrid stacks with a shared attention block
+  invoked periodically (zamba2)
+
+The layer schedule is ``pattern x repeats + tail``. The repeated pattern is
+executed with ``jax.lax.scan`` over stacked parameters (HLO size independent
+of depth — essential for 512-device compiles); the tail runs unrolled.
+Blocks marked ``shared_attn`` reuse a single parameter set across all scan
+iterations (zamba2) while still owning per-invocation KV cache slots.
+
+Entry points: ``forward`` (training / logits), ``prefill`` (logits + caches),
+``decode_step`` (one token with caches) — the three things the dry-run cells
+lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, layers, moe as moe_lib, ssd as ssd_lib
+from repro.models.common import Axed, group_dict
+from repro.models.layers import AttnConfig, KVCache
+from repro.parallel.ctx import constrain
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    kind: str = "attn"          # "attn" | "ssd"
+    window: int = -1            # sliding window (attn); <0 = global
+    moe: bool = False           # MoE FFN instead of dense FFN
+    shared_attn: bool = False   # zamba2: use the single shared attention block
+    has_ffn: bool = True        # pure mamba blocks have no separate FFN
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    pattern: Tuple[BlockSpec, ...]
+    repeats: int
+    tail: Tuple[BlockSpec, ...] = ()
+    head_dim: Optional[int] = None
+    act: str = "silu"
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    pos_emb: str = "rope"                    # "rope" | "mrope" | "none"
+    mrope_sections: Tuple[int, int, int] = (0, 0, 0)
+    moe_cfg: Optional[moe_lib.MoEConfig] = None
+    ssd_cfg: Optional[ssd_lib.SSDConfig] = None
+    tie_embeddings: bool = True
+    vision_tokens: int = 0                   # qwen2-vl stub frontend
+    logit_softcap: float = 0.0
+    remat: str = "full"                      # "none" | "full" | "dots"
+    moe_group_size: int = 4096
+    ring_cache: bool = False                 # window-sized ring KV caches
+    z_loss: float = 0.0
+    mlp_gated: bool = True                   # False: classic 2-matrix MLP
+    # embedding/logit tables pad up so the vocab dim TP-shards (mamba2's
+    # 50280 and whisper's 51866 don't divide 16 — unpadded logits replicate
+    # at 13 GB/device; EXPERIMENTS.md §Perf iter 0). labels never reference
+    # pad ids; decode/prefill slice logits back to the true vocab.
+    vocab_pad_multiple: int = 128
+    # sequence-parallel knobs (§Perf HC-A / HC-B):
+    sp_attention: bool = False    # shard attention q on seq over model
+    sp_residual: bool = False     # keep the residual stream seq-sharded
+    # KV-cache storage dtype (§Perf HC-C): "bf16" | "fp8" (f8_e4m3; sdpa
+    # upcasts to fp32 so only storage/traffic changes)
+    kv_cache_dtype: str = "bf16"
+
+    @property
+    def padded_vocab(self) -> int:
+        m = max(self.vocab_pad_multiple, 1)
+        return ((self.vocab + m - 1) // m) * m
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.repeats + len(self.tail)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def attn_cfg(self, window: int = -1) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.resolved_head_dim,
+            qkv_bias=self.qkv_bias, rope_theta=self.rope_theta,
+            causal=True, window=window, pos_emb=self.pos_emb,
+            mrope_sections=self.mrope_sections, sp=self.sp_attention)
+
+
+# -----------------------------------------------------------------------------
+# Parameter init
+# -----------------------------------------------------------------------------
+
+def _init_block(key, cfg: LMConfig, spec: BlockSpec, dtype) -> Axed:
+    parts: Dict[str, Axed] = {}
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if spec.kind == "attn" and not spec.shared_attn:
+        parts["norm_attn"] = layers.init_rmsnorm(cfg.d_model)
+        parts["attn"] = layers.init_attention(k1, cfg.attn_cfg(spec.window), dtype)
+    elif spec.kind == "ssd":
+        parts["norm_ssd"] = layers.init_rmsnorm(cfg.d_model)
+        parts["ssd"] = ssd_lib.init_ssd(k2, cfg.ssd_cfg, dtype)
+    if spec.kind == "attn" and spec.has_ffn:
+        parts["norm_ffn"] = layers.init_rmsnorm(cfg.d_model)
+        if spec.moe:
+            parts["moe"] = moe_lib.init_moe(k3, cfg.moe_cfg, dtype)
+        else:
+            parts["mlp"] = layers.init_mlp(k4, cfg.d_model, cfg.d_ff,
+                                           gated=cfg.mlp_gated, dtype=dtype)
+    return group_dict(parts)
+
+
+def _has_shared(cfg: LMConfig) -> bool:
+    return any(s.shared_attn for s in tuple(cfg.pattern) + tuple(cfg.tail))
+
+
+def init_lm(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Axed:
+    keys = jax.random.split(key, 8)
+    parts: Dict[str, Axed] = {"embed": layers.init_embed(
+        keys[0], cfg.padded_vocab, cfg.d_model, dtype)}
+    # repeated pattern: one stacked entry per pattern position
+    for i, spec in enumerate(cfg.pattern):
+        if spec.shared_attn:
+            continue
+        parts[f"pat{i}"] = common.vmap_init(
+            lambda k, sp=spec: _init_block(k, cfg, sp, dtype),
+            jax.random.fold_in(keys[1], i), cfg.repeats)
+    for i, spec in enumerate(cfg.tail):
+        if spec.shared_attn:
+            continue
+        parts[f"tail{i}"] = _init_block(jax.random.fold_in(keys[2], i), cfg, spec, dtype)
+    if _has_shared(cfg):
+        shared = {"norm_attn": layers.init_rmsnorm(cfg.d_model),
+                  "attn": layers.init_attention(keys[3], cfg.attn_cfg(-1), dtype),
+                  "norm_ffn": layers.init_rmsnorm(cfg.d_model),
+                  "mlp": layers.init_mlp(keys[4], cfg.d_model, cfg.d_ff, dtype=dtype)}
+        parts["shared_attn"] = group_dict(shared)
+    parts["final_norm"] = layers.init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        parts["unembed"] = layers.init_unembed(keys[5], cfg.d_model,
+                                               cfg.padded_vocab, dtype)
+    return group_dict(parts)
+
+
+# -----------------------------------------------------------------------------
+# Block application (full-sequence)
+# -----------------------------------------------------------------------------
+
+def _apply_block(params, shared_params, cfg: LMConfig, spec: BlockSpec,
+                 x: jnp.ndarray, positions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if spec.kind == "attn":
+        p = shared_params if spec.shared_attn else params
+        acfg = cfg.attn_cfg(spec.window)
+        h = layers.rms_norm(p["norm_attn"], x)
+        x = x + layers.attention(p["attn"], acfg, h, positions)
+        if spec.shared_attn:
+            h = layers.rms_norm(p["norm_ffn"], x)
+            x = x + layers.mlp(p["mlp"], h, cfg.act)
+            return x, aux
+    elif spec.kind == "ssd":
+        h = layers.rms_norm(params["norm_ssd"], x)
+        x = x + ssd_lib.ssd_block(params["ssd"], cfg.ssd_cfg, h)
+    if spec.kind == "attn" and spec.has_ffn and not spec.shared_attn:
+        h = layers.rms_norm(params["norm_ffn"], x)
+        if spec.moe:
+            y, aux = moe_lib.moe_capacity(params["moe"], cfg.moe_cfg, h,
+                                          cfg.moe_group_size)
+            x = x + y
+        else:
+            x = x + layers.mlp(params["mlp"], h, cfg.act)
+    if cfg.sp_residual:
+        x = constrain(x, "batch", "seq_tp", None)
+    return x, aux
+
+
+def _remat(cfg: LMConfig, fn):
+    if cfg.remat == "none":
+        return fn
+
+    def fn_ob(carry, xs):
+        # barrier stops XLA hoisting convert(saved-carry-stack) out of the
+        # backward loop, which otherwise materializes a full fp32 copy of
+        # every layer's saved activations (+25 GB/device on mamba2 train_4k;
+        # EXPERIMENTS.md §Perf iter 0)
+        carry = jax.lax.optimization_barrier(carry)
+        return fn(carry, xs)
+
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn_ob, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn_ob)
+
+
+def _pattern_stack_params(params, cfg: LMConfig):
+    return {f"pat{i}": params[f"pat{i}"]
+            for i, s in enumerate(cfg.pattern) if not s.shared_attn}
+
+
+def forward(params, cfg: LMConfig, tokens: jnp.ndarray,
+            positions: Optional[jnp.ndarray] = None,
+            vision_embeds: Optional[jnp.ndarray] = None,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. tokens (B,S) -> (logits (B,S,V) fp32, aux)."""
+    b, s = tokens.shape
+    x = layers.embed(params["embed"], tokens)
+    if vision_embeds is not None and cfg.vision_tokens > 0:
+        x = jax.lax.dynamic_update_slice(
+            x, vision_embeds.astype(x.dtype), (0, 0, 0))
+    x = constrain(x, "batch", "seq", None)
+    if positions is None:
+        pos1d = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        positions = (jnp.broadcast_to(pos1d[..., None], (b, s, 3))
+                     if cfg.pos_emb == "mrope" else pos1d)
+    shared = params.get("shared_attn")
+
+    def body(carry, pat_params):
+        x, aux = carry
+        for i, spec in enumerate(cfg.pattern):
+            p = pat_params.get(f"pat{i}")
+            x, a = _apply_block(p, shared, cfg, spec, x, positions)
+            aux = aux + a
+        return (x, aux), None
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.repeats > 0:
+        (x, aux), _ = jax.lax.scan(_remat(cfg, body), (x, aux0),
+                                   _pattern_stack_params(params, cfg))
+    else:
+        aux = aux0
+    for i, spec in enumerate(cfg.tail):
+        p = params.get(f"tail{i}")
+        x, a = _apply_block(p, shared, cfg, spec, x, positions)
+        aux = aux + a
+    x = layers.rms_norm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.apply_unembed(params["unembed"], x)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def loss_fn(params, cfg: LMConfig, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token cross-entropy (+ MoE aux + optional z-loss)."""
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          positions=batch.get("positions"),
+                          vision_embeds=batch.get("vision_embeds"))
+    labels = batch["labels"]
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - label_logit) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = nll.sum() / denom
+    total = ce + aux
+    if cfg.z_loss > 0:
+        total = total + cfg.z_loss * ((logz * mask) ** 2).sum() / denom
+    return total, {"ce": ce, "aux": aux, "tokens": denom}
+
+
+# -----------------------------------------------------------------------------
+# Caches (decode)
+# -----------------------------------------------------------------------------
+
+def _cache_len(cfg: LMConfig, spec: BlockSpec, max_len: int) -> int:
+    if cfg.ring_cache and spec.window > 0:
+        return min(spec.window, max_len)
+    return max_len
+
+
+def init_caches(cfg: LMConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> Dict[str, PyTree]:
+    """Cache pytree: pattern positions stacked over repeats, tail single."""
+    caches: Dict[str, PyTree] = {}
+    kvh, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def one(spec: BlockSpec, stacked: bool):
+        if spec.kind == "attn":
+            clen = _cache_len(cfg, spec, max_len)
+            shape = (cfg.repeats,) if stacked else ()
+            kv = KVCache(
+                k=jnp.zeros(shape + (batch, clen, kvh, dh), dtype),
+                v=jnp.zeros(shape + (batch, clen, kvh, dh), dtype))
+            # per-row ring position tags (rows decode at independent positions
+            # under the serving engine's vmapped path)
+            pos = jnp.full(shape + (batch, clen), -1, jnp.int32)
+            return {"kv": kv, "pos": pos}
+        st = ssd_lib.init_ssd_state(cfg.ssd_cfg, batch, dtype)
+        if stacked:
+            st = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (cfg.repeats,) + a.shape), st)
+        return {"ssd": st}
+
+    for i, spec in enumerate(cfg.pattern):
+        caches[f"pat{i}"] = one(spec, stacked=True)
+    for i, spec in enumerate(cfg.tail):
+        caches[f"tail{i}"] = one(spec, stacked=False)
+    return caches
+
+
+def _decode_attn(p, cfg: LMConfig, spec: BlockSpec, x, cache, pos):
+    """One-token attention against a (possibly ring) cache."""
+    acfg = cfg.attn_cfg(spec.window)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    if cfg.pos_emb == "mrope":
+        positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
+    q, k_new, v_new = layers._project_qkv(p["attn"], acfg, x, positions)
+    kv, pos_tags = cache["kv"], cache["pos"]
+    clen = kv.k.shape[1]
+    slot = pos % clen          # ring slot; == pos when the cache is full-length
+    k = jax.lax.dynamic_update_slice(kv.k, k_new.astype(kv.k.dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(kv.v, v_new.astype(kv.v.dtype), (0, slot, 0, 0))
+    pos_col = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    pos_tags = jax.lax.dynamic_update_slice(pos_tags, pos_col, (0, slot))
+    q_pos = positions[..., 0] if positions.ndim == 3 else positions
+    mask = layers.attention_mask(q_pos, pos_tags, causal=True,
+                                 window=spec.window)
+    mask &= (pos_tags >= 0)[:, None, :]
+    out = layers.sdpa(q, k, v, mask, acfg.scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, layers.wl(p["attn"]["wo"], out.dtype))
+    return y, {"kv": KVCache(k=k, v=v), "pos": pos_tags}
+
+
+def _decode_block(params, shared_params, cfg: LMConfig, spec: BlockSpec,
+                  x, cache, pos):
+    if spec.kind == "attn":
+        p = shared_params if spec.shared_attn else params
+        h = layers.rms_norm(p["norm_attn"], x)
+        y, cache = _decode_attn(p, cfg, spec, h, cache, pos)
+        x = x + y
+        if spec.shared_attn:
+            h = layers.rms_norm(p["norm_ffn"], x)
+            return x + layers.mlp(p["mlp"], h, cfg.act), cache
+    else:
+        h = layers.rms_norm(params["norm_ssd"], x)
+        y, st = ssd_lib.ssd_block_decode(params["ssd"], cfg.ssd_cfg, h,
+                                         cache["ssd"])
+        x = x + y
+        cache = {"ssd": st}
+    if spec.kind == "attn" and spec.has_ffn and not spec.shared_attn:
+        h = layers.rms_norm(params["norm_ffn"], x)
+        if spec.moe:
+            y, _ = moe_lib.moe_capacity(params["moe"], cfg.moe_cfg, h,
+                                        group_size=h.shape[0] * h.shape[1])
+            x = x + y
+        else:
+            x = x + layers.mlp(params["mlp"], h, cfg.act)
+    return x, cache
+
+
+def decode_step(params, cfg: LMConfig, token: jnp.ndarray, pos: jnp.ndarray,
+                caches: Dict[str, PyTree]
+                ) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """One decode step. token (B,1) int32, pos () int32 -> (logits (B,1,V), caches)."""
+    x = layers.embed(params["embed"], token)
+    shared = params.get("shared_attn")
+
+    pat_caches = {f"pat{i}": caches[f"pat{i}"] for i in range(len(cfg.pattern))}
+
+    def body(x, inp):
+        pat_params, pat_cache = inp
+        new_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, nc = _decode_block(pat_params.get(f"pat{i}"), shared, cfg, spec,
+                                  x, pat_cache[f"pat{i}"], pos)
+            new_cache[f"pat{i}"] = nc
+        return x, new_cache
+
+    new_caches: Dict[str, PyTree] = {}
+    if cfg.repeats > 0:
+        x, new_pat = jax.lax.scan(body, x,
+                                  (_pattern_stack_params(params, cfg), pat_caches))
+        new_caches.update(new_pat)
+    for i, spec in enumerate(cfg.tail):
+        x, nc = _decode_block(params.get(f"tail{i}"), shared, cfg, spec, x,
+                              caches[f"tail{i}"], pos)
+        new_caches[f"tail{i}"] = nc
+    x = layers.rms_norm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.apply_unembed(params["unembed"], x)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits[..., :cfg.vocab], new_caches
+
+
+def caches_axes(cfg: LMConfig) -> Dict[str, PyTree]:
+    """Logical-axes tree mirroring init_caches (dataclass fields as dicts —
+    the form parallel.sharding._tree_map2 consumes)."""
+    def one(spec: BlockSpec, stacked: bool):
+        pre = ("stack",) if stacked else ()
+        if spec.kind == "attn":
+            kv_ax = pre + ("batch", "seq", "kv_heads", "head_dim")
+            return {"kv": {"k": kv_ax, "v": kv_ax},
+                    "pos": pre + ("batch", "seq")}
+        st = {"conv_x": ("batch", "conv", "heads", "head_dim"),
+              "conv_b": ("batch", "conv", "ssm_group", "ssm_state"),
+              "conv_c": ("batch", "conv", "ssm_group", "ssm_state"),
+              "ssm": ("batch", "heads", "ssm_state", "head_dim")}
+        if stacked:
+            st = {k: ("stack",) + v for k, v in st.items()}
+        return {"ssd": st}
+
+    out: Dict[str, PyTree] = {}
+    for i, spec in enumerate(cfg.pattern):
+        out[f"pat{i}"] = one(spec, stacked=True)
+    for i, spec in enumerate(cfg.tail):
+        out[f"tail{i}"] = one(spec, stacked=False)
+    return out
+
+
+# -----------------------------------------------------------------------------
+# Prefill: forward + cache construction
+# -----------------------------------------------------------------------------
+
+def prefill(params, cfg: LMConfig, tokens: jnp.ndarray,
+            max_len: Optional[int] = None,
+            vision_embeds: Optional[jnp.ndarray] = None,
+            cache_dtype=jnp.bfloat16):
+    """Process a prompt, returning (last-token logits, filled caches).
+
+    Implemented as full-sequence forward per block, materializing K/V into
+    decode caches (sized ``max_len``, default prompt length).
+    """
+    b, s = tokens.shape
+    max_len = max_len or s
+    caches = init_caches(cfg, b, max_len, cache_dtype)
+    x = layers.embed(params["embed"], tokens)
+    if vision_embeds is not None and cfg.vision_tokens > 0:
+        x = jax.lax.dynamic_update_slice(x, vision_embeds.astype(x.dtype), (0, 0, 0))
+    pos1d = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    positions = (jnp.broadcast_to(pos1d[..., None], (b, s, 3))
+                 if cfg.pos_emb == "mrope" else pos1d)
+    shared = params.get("shared_attn")
+
+    def fill_attn(p, spec, x, cache):
+        acfg = cfg.attn_cfg(spec.window)
+        h = layers.rms_norm(p["norm_attn"], x)
+        q, k, v = layers._project_qkv(p["attn"], acfg, h, positions)
+        if s > layers._CHUNKED_SDPA_THRESHOLD:
+            out = layers.sdpa_q_chunked(q, k, v, pos1d, pos1d, causal=True,
+                                        window=spec.window, scale=acfg.scale)
+        else:
+            mask = layers.attention_mask(pos1d, pos1d, causal=True,
+                                         window=spec.window)
+            out = layers.sdpa(q, k, v, mask, acfg.scale)
+        y = jnp.einsum("bshk,hkd->bsd", out, layers.wl(p["attn"]["wo"], out.dtype))
+        kv, pos_tags = cache["kv"], cache["pos"]
+        clen = kv.k.shape[1]
+        bsz = x.shape[0]
+        if clen >= s:
+            kc = jax.lax.dynamic_update_slice(kv.k, k.astype(kv.k.dtype), (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(kv.v, v.astype(kv.v.dtype), (0, 0, 0, 0))
+            ptags = jax.lax.dynamic_update_slice(
+                pos_tags,
+                jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (bsz, s)),
+                (0, 0))
+        else:  # ring: keep the last clen positions
+            kc = k[:, s - clen:].astype(kv.k.dtype)
+            vc = v[:, s - clen:].astype(kv.v.dtype)
+            ptags1 = jnp.arange(s - clen, s, dtype=jnp.int32)
+            # rotate so that slot j holds the position with pos % clen == j
+            roll = (s - clen) % clen
+            kc, vc = jnp.roll(kc, roll, 1), jnp.roll(vc, roll, 1)
+            ptags = jnp.broadcast_to(jnp.roll(ptags1, roll, 0)[None], (bsz, clen))
+        return x + y, {"kv": KVCache(k=kc, v=vc), "pos": ptags}
+
+    def fill_block(p, spec, x, cache):
+        if spec.kind == "attn":
+            pp = shared if spec.shared_attn else p
+            x, cache = fill_attn(pp, spec, x, cache)
+            if spec.shared_attn:
+                h = layers.rms_norm(pp["norm_ffn"], x)
+                return x + layers.mlp(pp["mlp"], h, cfg.act), cache
+        else:
+            h = layers.rms_norm(p["norm_ssd"], x)
+            scfg = cfg.ssd_cfg
+            z, xin, b_raw, c_raw, dt_raw = ssd_lib._projections(p["ssd"], scfg, h)
+            # conv states carry the last d_conv-1 *pre-activation* inputs
+            conv_x_state = xin[:, -(scfg.d_conv - 1):]
+            conv_b_state = b_raw[:, -(scfg.d_conv - 1):]
+            conv_c_state = c_raw[:, -(scfg.d_conv - 1):]
+            xin_c = jax.nn.silu(ssd_lib._causal_dwconv(xin, p["ssd"]["conv_x"]))
+            b_c = jax.nn.silu(ssd_lib._causal_dwconv(b_raw, p["ssd"]["conv_b"]))
+            c_c = jax.nn.silu(ssd_lib._causal_dwconv(c_raw, p["ssd"]["conv_c"]))
+            dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["ssd"]["dt_bias"])
+            a = -jnp.exp(p["ssd"]["a_log"])
+            bm = ssd_lib._expand_groups(b_c, scfg.n_heads).astype(jnp.float32)
+            cm = ssd_lib._expand_groups(c_c, scfg.n_heads).astype(jnp.float32)
+            y, final = ssd_lib.ssd_chunked(xin_c.astype(jnp.float32), dt, a, bm, cm,
+                                           scfg.chunk)
+            x = x + ssd_lib._finish(p["ssd"], scfg, y, xin_c, z)
+            st = ssd_lib.SSDState(conv_x=conv_x_state.astype(cache["ssd"].conv_x.dtype),
+                                  conv_b=conv_b_state.astype(cache["ssd"].conv_b.dtype),
+                                  conv_c=conv_c_state.astype(cache["ssd"].conv_c.dtype),
+                                  ssm=final)
+            cache = {"ssd": st}
+        if spec.kind == "attn" and spec.has_ffn and not spec.shared_attn:
+            h = layers.rms_norm(p["norm_ffn"], x)
+            if spec.moe:
+                y, _ = moe_lib.moe_capacity(p["moe"], cfg.moe_cfg, h,
+                                            cfg.moe_group_size)
+                x = x + y
+            else:
+                x = x + layers.mlp(p["mlp"], h, cfg.act)
+        return x, cache
+
+    def body(x, inp):
+        pat_params, pat_cache = inp
+        new_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, nc = fill_block(pat_params.get(f"pat{i}") if not spec.shared_attn
+                               else None, spec, x, pat_cache[f"pat{i}"])
+            new_cache[f"pat{i}"] = nc
+        return x, new_cache
+
+    pat_caches = {f"pat{i}": caches[f"pat{i}"] for i in range(len(cfg.pattern))}
+    new_caches: Dict[str, PyTree] = {}
+    if cfg.repeats > 0:
+        # no remat: prefill is inference (no gradient tape to save)
+        x, new_pat = jax.lax.scan(body, x,
+                                  (_pattern_stack_params(params, cfg), pat_caches))
+        new_caches.update(new_pat)
+    for i, spec in enumerate(cfg.tail):
+        x, nc = fill_block(params.get(f"tail{i}"), spec, x, caches[f"tail{i}"])
+        new_caches[f"tail{i}"] = nc
+    x = layers.rms_norm(params["final_norm"], x[:, -1:])
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.apply_unembed(params["unembed"], x)
+    return logits[..., :cfg.vocab], new_caches

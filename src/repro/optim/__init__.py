@@ -1,0 +1,6 @@
+"""Optimizers & schedules (pure JAX; no optax on this box)."""
+
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, init_opt_state, apply_updates, global_norm, clip_by_global_norm,
+)
+from repro.optim import schedules  # noqa: F401

@@ -1,0 +1,41 @@
+"""Learning-rate schedules (callables of the int32 step)."""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def constant(lr: float) -> Callable:
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0) -> Callable:
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn
+
+
+def warmup_rsqrt(peak: float, warmup_steps: int) -> Callable:
+    def fn(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        warm = peak * s / max(warmup_steps, 1)
+        decay = peak * math.sqrt(warmup_steps) / jnp.sqrt(s)
+        return jnp.where(s < warmup_steps, warm, decay)
+    return fn
+
+
+def linear_decay(peak: float, warmup_steps: int, total_steps: int) -> Callable:
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        return jnp.where(s < warmup_steps, warm, peak * (1 - t))
+    return fn

@@ -1,0 +1,3 @@
+"""Distribution layer: meshes, sharding rules, compression, pipeline."""
+
+from repro.parallel import sharding  # noqa: F401

@@ -1,0 +1,166 @@
+"""Logical-axis -> mesh sharding rules with divisibility fallbacks.
+
+Params (and caches/activations) carry logical axis names (models.common.Axed).
+This module maps them to PartitionSpecs for a concrete mesh:
+
+* default rules: batch->DP axes ("pod","data"), TP dims ("heads", "ffn",
+  "vocab", "experts", "ssm-inner") -> "model", everything else replicated;
+* **divisibility fallback**: a dim is only sharded if its size divides the
+  mesh-axis size — this is what makes starcoder2 (36 heads) and whisper
+  (20 heads) lower cleanly on a 16-way model axis (heads replicate; the FFN
+  still TPs; the §Perf log tracks the cost);
+* **conflict resolution**: one mesh axis appears at most once per spec
+  (left-to-right priority — e.g. MoE w_in (experts, embed, ffn) shards
+  experts, not ffn, on "model");
+* rule overrides per shape cell (e.g. long_500k: batch=1 -> shard "seq" on
+  the DP axes instead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# default logical->mesh rules (order of dict irrelevant; per-leaf resolution
+# is left-to-right over dims)
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # context/sequence-parallel axis: only constrained by archs that opt in
+    # (sp_attention / sp_residual; see EXPERIMENTS.md §Perf HC-A/HC-B)
+    "seq_tp": "model",
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    # head_dim shards on "model" ONLY when heads/kv_heads couldn't (conflict
+    # resolution is left-to-right): gives MQA/low-kv archs (granite kv=1,
+    # kimi kv=8, whisper 20H) sharded KV caches instead of replicated ones.
+    "head_dim": "model",
+    "ffn": "model",
+    "experts": "model",
+    "stack": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_group": None,
+    "conv": None,
+    "spatial": None,
+    "channels": None,
+    None: None,
+}
+
+# long-context (batch-unshardable) override: sequence-parallel over DP axes
+LONG_CONTEXT_RULES = dict(DEFAULT_RULES, batch=None, seq=("pod", "data"),
+                          seq_tp=None)
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def _present(mesh: Mesh, axes: MeshAxes) -> MeshAxes:
+    """Drop mesh axes that don't exist on this mesh (e.g. 'pod' single-pod)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.shape else None
+    kept = tuple(a for a in axes if a in mesh.shape)
+    if not kept:
+        return None
+    return kept[0] if len(kept) == 1 else kept
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]], mesh: Mesh,
+             rules: Optional[Mapping[str, MeshAxes]] = None) -> P:
+    """PartitionSpec for one leaf given its logical axes."""
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    entries = []
+    for dim, ax in zip(shape, axes):
+        mesh_ax = _present(mesh, rules.get(ax))
+        if mesh_ax is None:
+            entries.append(None)
+            continue
+        flat = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+        if any(a in used for a in flat):
+            entries.append(None)          # conflict: left-to-right priority
+            continue
+        if dim % _axis_size(mesh, mesh_ax) != 0:
+            entries.append(None)          # divisibility fallback
+            continue
+        used.update(flat)
+        entries.append(mesh_ax)
+    while entries and entries[-1] is None:
+        entries.pop()                      # canonical trailing-None trim
+    return P(*entries)
+
+
+def specs_for_tree(params_shapes: Any, axes_tree: Any, mesh: Mesh,
+                   rules: Optional[Mapping[str, MeshAxes]] = None) -> Any:
+    """PartitionSpec pytree matching ``params_shapes`` (arrays or SDS)."""
+    def one(leaf_shape, ax):
+        shape = leaf_shape.shape if hasattr(leaf_shape, "shape") else leaf_shape
+        if ax is None or not isinstance(ax, tuple):
+            return P()
+        return spec_for(shape, ax, mesh, rules)
+
+    return _tree_map2(one, params_shapes, axes_tree)
+
+
+def _tree_map2(fn, shapes_tree, axes_tree):
+    """tree.map over (params, axes) where axes leaves are tuples."""
+    if isinstance(shapes_tree, dict):
+        return {k: _tree_map2(fn, shapes_tree[k], axes_tree[k])
+                for k in shapes_tree}
+    # dataclass-pytrees (KVCache/SSDState) mirror into dicts in the axes tree
+    if hasattr(shapes_tree, "__dataclass_fields__"):
+        vals = {f: _tree_map2(fn, getattr(shapes_tree, f), axes_tree[f])
+                for f in shapes_tree.__dataclass_fields__}
+        return type(shapes_tree)(**vals)
+    return fn(shapes_tree, axes_tree)
+
+
+def shardings_for_tree(params_shapes: Any, axes_tree: Any, mesh: Mesh,
+                       rules: Optional[Mapping[str, MeshAxes]] = None) -> Any:
+    specs = specs_for_tree(params_shapes, axes_tree, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def batch_spec(mesh: Mesh, batch_size: int, *, seq_len: int,
+               long_context: bool = False) -> P:
+    """Input spec for (batch, seq) token arrays."""
+    rules = LONG_CONTEXT_RULES if long_context else DEFAULT_RULES
+    return spec_for((batch_size, seq_len), ("batch", "seq"), mesh, rules)
+
+
+def summarize(specs_tree: Any) -> Dict[str, int]:
+    """Histogram of spec strings (debugging / EXPERIMENTS.md)."""
+    out: Dict[str, int] = {}
+    for leaf in jax.tree.leaves(specs_tree,
+                                is_leaf=lambda x: isinstance(x, P)):
+        key = str(leaf)
+        out[key] = out.get(key, 0) + 1
+    return out

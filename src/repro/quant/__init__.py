@@ -1,0 +1,9 @@
+"""Model reduction (paper C5): ternary / binary / int8 quantization.
+
+The paper's PIM inference engine computes ternary (w in {-1,0,1}) or binary
+CNN inference multiplication-free; training stays FP32. This package provides
+the weight-reduction transforms; the TPU-native execution of the ternary
+matmul lives in repro.kernels.ternary_matmul.
+"""
+
+from repro.quant import ternary, int8  # noqa: F401

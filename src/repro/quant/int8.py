@@ -1,0 +1,103 @@
+"""Symmetric per-channel int8 quantization.
+
+Used for (a) the int8 serving mode of the LM zoo and (b) the error-feedback
+gradient compression in parallel/compression.py (the cross-pod DP axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Int8Weight:
+    q: jnp.ndarray        # int8
+    scale: jnp.ndarray    # fp32, per-last-dim-channel
+
+jax.tree_util.register_dataclass(Int8Weight, data_fields=["q", "scale"],
+                                 meta_fields=[])
+
+
+def quantize(w: jnp.ndarray, axis: int = -1) -> Int8Weight:
+    w32 = w.astype(jnp.float32)
+    red = tuple(i for i in range(w32.ndim) if i != (axis % w32.ndim))
+    amax = jnp.max(jnp.abs(w32), axis=red, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+    return Int8Weight(q=q, scale=scale.astype(jnp.float32))
+
+
+def dequantize(iw: Int8Weight, dtype=jnp.float32) -> jnp.ndarray:
+    return (iw.q.astype(jnp.float32) * iw.scale).astype(dtype)
+
+
+def quantize_stochastic(w: jnp.ndarray, rng: jax.Array,
+                        axis: int = -1) -> Int8Weight:
+    """Stochastic rounding variant (unbiased; used by gradient compression)."""
+    w32 = w.astype(jnp.float32)
+    red = tuple(i for i in range(w32.ndim) if i != (axis % w32.ndim))
+    amax = jnp.max(jnp.abs(w32), axis=red, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    scaled = w32 / scale
+    noise = jax.random.uniform(rng, scaled.shape) - 0.5
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return Int8Weight(q=q, scale=scale.astype(jnp.float32))
+
+
+def quant_error(w: jnp.ndarray, iw: Int8Weight) -> float:
+    wd = dequantize(iw)
+    num = jnp.linalg.norm(w.astype(jnp.float32) - wd)
+    den = jnp.maximum(jnp.linalg.norm(w.astype(jnp.float32)), 1e-12)
+    return float(num / den)
+
+
+# -----------------------------------------------------------------------------
+# Int8-weight serving mode (paper C5 applied to the LM zoo; §Perf HC-C iter 3)
+# -----------------------------------------------------------------------------
+
+# weight-leaf names the serving transform quantizes (linear layers only —
+# embeddings/norms/router stay high-precision, mirroring quantize_tree)
+SERVING_QUANT_KEYS = frozenset({"wq", "wk", "wv", "wo", "w_in", "w_gate",
+                                "w_out", "w_z", "w_x"})
+
+
+def _q8_leaf(w, stacked: bool):
+    """array or ShapeDtypeStruct -> {"q8","s8"} (per-layer scale if stacked)."""
+    if isinstance(w, jax.ShapeDtypeStruct):
+        s_shape = (w.shape[0],) if stacked else ()
+        return {"q8": jax.ShapeDtypeStruct(w.shape, jnp.int8),
+                "s8": jax.ShapeDtypeStruct(s_shape, jnp.float32)}
+    w32 = jnp.asarray(w, jnp.float32)
+    red = tuple(range(1, w32.ndim)) if stacked else tuple(range(w32.ndim))
+    amax = jnp.max(jnp.abs(w32), axis=red, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+    return {"q8": q, "s8": scale.reshape((w32.shape[0],) if stacked else ())}
+
+
+def quantize_params_for_serving(params, axes):
+    """(params, axes) -> int8-served versions: selected linear weights become
+    {"q8": int8, "s8": fp32 per-layer scale}; everything else passes through.
+    Works on arrays AND ShapeDtypeStruct trees (dry-run). The model consumes
+    them transparently via models.layers.wl."""
+    def walk(p, a):
+        if isinstance(p, dict):
+            out_p, out_a = {}, {}
+            for k in p:
+                if (k in SERVING_QUANT_KEYS and not isinstance(p[k], dict)
+                        and getattr(p[k], "ndim", 0) >= 2):
+                    stacked = isinstance(a[k], tuple) and len(a[k]) > 0 \
+                        and a[k][0] == "stack"
+                    out_p[k] = _q8_leaf(p[k], stacked)
+                    out_a[k] = {"q8": a[k],
+                                "s8": ("stack",) if stacked else ()}
+                else:
+                    out_p[k], out_a[k] = walk(p[k], a[k])
+            return out_p, out_a
+        return p, a
+
+    return walk(params, axes)

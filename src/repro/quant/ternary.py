@@ -1,0 +1,103 @@
+"""Ternary & binary weight reduction (TWN-style), the paper's inference mode.
+
+Ternarization (Ternary Weight Networks): threshold Δ = 0.7·E|w| per output
+channel; q = sign(w)·1[|w|>Δ]; scale α = E[|w| : |w|>Δ]. w ≈ α·q with
+q ∈ {-1,0,+1} stored as int8 (the PIM bulk-bitwise representation; the Pallas
+kernel consumes q/α directly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class TernaryWeight:
+    q: jnp.ndarray        # int8 in {-1,0,1}, same shape as w
+    scale: jnp.ndarray    # per-output-channel fp32 scale (broadcast on last dim)
+
+jax.tree_util.register_dataclass(TernaryWeight, data_fields=["q", "scale"],
+                                 meta_fields=[])
+
+
+def ternarize(w: jnp.ndarray, threshold_scale: float = 0.7) -> TernaryWeight:
+    """Per-output-channel (last dim) TWN ternarization."""
+    w32 = w.astype(jnp.float32)
+    red_axes = tuple(range(w32.ndim - 1))
+    delta = threshold_scale * jnp.mean(jnp.abs(w32), axis=red_axes, keepdims=True)
+    q = jnp.where(jnp.abs(w32) > delta, jnp.sign(w32), 0.0)
+    nz = jnp.maximum(jnp.sum(jnp.abs(q), axis=red_axes), 1.0)
+    scale = jnp.sum(jnp.abs(w32) * jnp.abs(q), axis=red_axes) / nz
+    return TernaryWeight(q=q.astype(jnp.int8), scale=scale.astype(jnp.float32))
+
+
+def binarize(w: jnp.ndarray) -> TernaryWeight:
+    """BWN binarization: q = sign(w), alpha = E|w| (a ternary with no zeros)."""
+    w32 = w.astype(jnp.float32)
+    red_axes = tuple(range(w32.ndim - 1))
+    q = jnp.where(w32 >= 0, 1.0, -1.0)
+    scale = jnp.mean(jnp.abs(w32), axis=red_axes)
+    return TernaryWeight(q=q.astype(jnp.int8), scale=scale.astype(jnp.float32))
+
+
+def dequantize(tw: TernaryWeight, dtype=jnp.float32) -> jnp.ndarray:
+    return (tw.q.astype(jnp.float32) * tw.scale).astype(dtype)
+
+
+def quant_error(w: jnp.ndarray, tw: TernaryWeight) -> float:
+    """Relative L2 reconstruction error."""
+    wd = dequantize(tw)
+    num = jnp.linalg.norm(w.astype(jnp.float32) - wd)
+    den = jnp.maximum(jnp.linalg.norm(w.astype(jnp.float32)), 1e-12)
+    return float(num / den)
+
+
+# -- bitplane packing (the PIM representation adapted for the TPU kernel) ----
+
+def to_bitplanes(tw: TernaryWeight) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q in {-1,0,1} -> (plus, minus) uint8 planes with q = plus - minus."""
+    plus = (tw.q > 0).astype(jnp.uint8)
+    minus = (tw.q < 0).astype(jnp.uint8)
+    return plus, minus
+
+
+def from_bitplanes(plus: jnp.ndarray, minus: jnp.ndarray,
+                   scale: jnp.ndarray) -> TernaryWeight:
+    q = plus.astype(jnp.int8) - minus.astype(jnp.int8)
+    return TernaryWeight(q=q, scale=scale)
+
+
+# -- pytree-level model reduction ---------------------------------------------
+
+def quantize_tree(params: Any, *, mode: str = "ternary",
+                  predicate: Optional[Callable[[str, jnp.ndarray], bool]] = None
+                  ) -> Any:
+    """Quantize every >=2-D weight leaf (by default) in a params pytree.
+
+    Leaves selected by ``predicate(path, leaf)`` become TernaryWeight nodes;
+    others pass through. Use with ``dequantize_tree`` or a quant-aware matmul.
+    """
+    fn = {"ternary": ternarize, "binary": binarize}[mode]
+
+    def pred(path: str, x) -> bool:
+        if predicate is not None:
+            return predicate(path, x)
+        return hasattr(x, "ndim") and x.ndim >= 2 and "embed" not in path
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, x in flat:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        out.append(fn(x) if pred(name, x) else x)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def dequantize_tree(params: Any, dtype=jnp.float32) -> Any:
+    def de(x):
+        return dequantize(x, dtype) if isinstance(x, TernaryWeight) else x
+    return jax.tree.map(de, params,
+                        is_leaf=lambda x: isinstance(x, TernaryWeight))

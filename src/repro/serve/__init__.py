@@ -1,0 +1,3 @@
+"""Serving substrate: KV-cache engine with continuous batching."""
+
+from repro.serve.engine import ServeEngine, ServeConfig, Request  # noqa: F401

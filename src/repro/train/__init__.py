@@ -1,0 +1,3 @@
+"""Training runtime: step builder, Trainer with FT hooks, elastic utilities."""
+
+from repro.train.loop import TrainConfig, Trainer, make_train_step  # noqa: F401

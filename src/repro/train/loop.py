@@ -1,0 +1,176 @@
+"""Training loop: step builder (grad-accum, remat, mixed precision) + Trainer.
+
+The Trainer wires together every FT feature:
+  * CheckpointManager (atomic/async/keep-k) with auto-resume-latest,
+  * data-pipeline state in the checkpoint manifest (exact stream replay),
+  * heartbeat + straggler detection hooks (train.ft),
+  * SIGTERM-preemption -> synchronous final checkpoint,
+  * CarbonAccountant observation per step (the paper's holistic accounting,
+    live in the loop).
+
+``make_train_step`` builds the pure step function; distribution is supplied
+by jitting it with shardings from parallel.sharding (see launch/train.py for
+the mesh-scale path; the Trainer itself also runs single-device for the
+examples).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import accounting
+from repro.checkpoint import CheckpointManager, CheckpointConfig
+from repro.optim import AdamWConfig, apply_updates, init_opt_state
+from repro.train import ft as ft_lib
+
+PyTree = Any
+LossFn = Callable[[PyTree, Dict[str, jnp.ndarray]], Tuple[jnp.ndarray, Dict]]
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    num_steps: int = 100
+    grad_accum: int = 1
+    log_every: int = 10
+    checkpoint_every: int = 100
+    seed: int = 0
+    donate: bool = True
+
+
+def make_train_step(loss_fn: LossFn, opt_cfg: AdamWConfig,
+                    grad_accum: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With grad_accum > 1, batch leading dim must be (grad_accum * mb) and is
+    scanned in microbatches (activation memory / overlap knob).
+    """
+
+    def grads_of(params, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, aux, grads
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, aux, grads = grads_of(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, loss_sum = carry
+                loss, _aux, grads = grads_of(params, mb)
+                acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                   acc, grads)
+                return (acc, loss_sum + loss), None
+
+            micro_batch = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                    *x.shape[1:]), batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(micro, (zeros, 0.0), micro_batch)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss_sum / grad_accum
+            aux = {}
+        new_params, new_state, opt_metrics = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **opt_metrics}
+        if isinstance(aux, dict):
+            metrics.update({k: v for k, v in aux.items()
+                            if jnp.ndim(v) == 0})
+        return new_params, new_state, metrics
+
+    return step
+
+
+class Trainer:
+    def __init__(self, *, loss_fn: LossFn, params: PyTree,
+                 opt_cfg: AdamWConfig, train_cfg: TrainConfig,
+                 pipeline, ckpt_cfg: Optional[CheckpointConfig] = None,
+                 accountant: Optional[accounting.CarbonAccountant] = None,
+                 heartbeat: Optional[ft_lib.HeartbeatWriter] = None,
+                 jit_kwargs: Optional[dict] = None):
+        self.loss_fn = loss_fn
+        self.params = params
+        self.opt_cfg = opt_cfg
+        self.cfg = train_cfg
+        self.pipeline = pipeline
+        self.opt_state = init_opt_state(params, opt_cfg)
+        self.accountant = accountant
+        self.heartbeat = heartbeat
+        self.ckpt = CheckpointManager(ckpt_cfg) if ckpt_cfg else None
+        self.step_num = 0
+        self.metrics_log: list = []
+        self._preempted = False
+        step = make_train_step(loss_fn, opt_cfg, train_cfg.grad_accum)
+        kwargs = dict(jit_kwargs or {})
+        if train_cfg.donate:
+            kwargs.setdefault("donate_argnums", (0, 1))
+        self._jit_step = jax.jit(step, **kwargs)
+
+    # -- FT ---------------------------------------------------------------------
+
+    def install_preemption_handler(self) -> None:
+        def _handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, _handler)
+        except ValueError:
+            pass  # not on main thread (tests) — caller sets _preempted directly
+
+    def maybe_restore(self) -> bool:
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return False
+        tree = {"params": self.params, "opt": self.opt_state}
+        step, restored, extra = self.ckpt.restore(target=tree)
+        self.params, self.opt_state = restored["params"], restored["opt"]
+        self.step_num = step
+        if "data_state" in extra:
+            self.pipeline.restore(extra["data_state"])
+        return True
+
+    def save(self, wait: bool = False) -> None:
+        if self.ckpt is None:
+            return
+        self.ckpt.save(self.step_num,
+                       {"params": self.params, "opt": self.opt_state},
+                       extra={"data_state": self.pipeline.state})
+        if wait:
+            self.ckpt.wait()
+
+    # -- loop ---------------------------------------------------------------------
+
+    def run(self, num_steps: Optional[int] = None) -> Dict[str, float]:
+        n = num_steps or self.cfg.num_steps
+        target = self.step_num + n
+        last_metrics: Dict[str, float] = {}
+        while self.step_num < target and not self._preempted:
+            batch_np = self.pipeline.batch_at(self.step_num)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            t0 = time.monotonic()
+            self.params, self.opt_state, metrics = self._jit_step(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.monotonic() - t0
+            self.step_num += 1
+            self.pipeline.restore({"step": self.step_num})
+            if self.accountant is not None:
+                n_tokens = float(np.prod(batch_np["tokens"].shape)) \
+                    if "tokens" in batch_np else 0.0
+                self.accountant.observe_step(dt, n_tokens)
+            if self.heartbeat is not None:
+                self.heartbeat.beat(self.step_num, dt)
+            if self.step_num % self.cfg.log_every == 0 or self.step_num == target:
+                last_metrics = {k: float(v) for k, v in metrics.items()}
+                last_metrics["step_time_s"] = dt
+                self.metrics_log.append({"step": self.step_num, **last_metrics})
+            if self.ckpt and self.step_num % self.cfg.checkpoint_every == 0:
+                self.save()
+        if self._preempted:
+            self.save(wait=True)   # preemption: synchronous final checkpoint
+        if self.ckpt:
+            self.ckpt.wait()
+        return last_metrics

@@ -1,0 +1,37 @@
+"""Dry-run machinery on a small fake mesh (cells -> lower -> compile ->
+roofline terms), via subprocess so the main process stays single-device."""
+
+from tests._mp import run_multidevice
+
+
+def test_cell_lowering_small_mesh():
+    out = run_multidevice("""
+import jax, jax.numpy as jnp, dataclasses
+from repro.configs import base as cfgbase
+from repro.launch import cells as cells_lib
+from repro.launch.mesh import make_mesh
+from repro.core import roofline as rl, flops as fl
+
+mesh = make_mesh((2, 4), ("data", "model"))
+
+# shrink the shape grid so the smoke config lowers fast
+cfgbase.SHAPES["train_4k"] = dataclasses.replace(
+    cfgbase.SHAPES["train_4k"], seq_len=64, global_batch=8)
+cfgbase.SHAPES["decode_32k"] = dataclasses.replace(
+    cfgbase.SHAPES["decode_32k"], seq_len=128, global_batch=8)
+
+arch = cfgbase.get("gemma3-27b")
+small = dataclasses.replace(arch, make_config=arch.make_smoke)
+
+for shape_name in ("train_4k", "decode_32k"):
+    cell = cells_lib.build_cell.__wrapped__ if False else None
+    cell = cells_lib.build_lm_cell(small, cfgbase.SHAPES[shape_name], mesh)
+    compiled = cell.lower(mesh).compile()
+    terms = rl.from_compiled(compiled, 8, label=shape_name)
+    analytic = fl.cost_of_fn(cell.step_fn, *cell.args_sds, n_devices=8)
+    assert analytic["flops_per_device"] > 0
+    ma = compiled.memory_analysis()
+    print(shape_name, "ok", terms.bound, int(analytic["flops_per_device"]))
+print("OK")
+""", n_devices=8, timeout=900)
+    assert "OK" in out

@@ -1,0 +1,91 @@
+"""Table-3 efficiency reproduction + fleet energy model."""
+
+import pytest
+
+from repro.core import energy, roofline as rl
+
+
+class TestTable3:
+    CASES = [
+        ("alexnet", "inference_ternary", "ddr3_pim", 42.4, "FPS"),
+        ("alexnet", "inference_ternary", "rm_pim", 526.0, "FPS"),
+        ("alexnet", "train_fp32", "gpu", 63.4, "GFLOPS"),
+        ("alexnet", "train_fp32", "rm_pim", 8.97, "GFLOPS"),
+        ("alexnet", "train_fp32", "fpga", 4.46, "GFLOPS"),
+        ("vgg16", "train_fp32", "gpu", 41.6, "GFLOPS"),
+        ("vgg16", "train_fp32", "rm_pim", 14.37, "GFLOPS"),
+        ("vgg16", "train_fp32", "fpga", 6.09, "GFLOPS"),
+    ]
+
+    @pytest.mark.parametrize("bench,phase,dev,per_w,unit", CASES)
+    def test_efficiency_per_watt(self, bench, phase, dev, per_w, unit):
+        row = energy.table3_efficiency(bench, phase)[dev]
+        assert row["per_w"] == pytest.approx(per_w, rel=0.01)
+
+    @pytest.mark.parametrize("bench,phase,dev", [
+        ("alexnet", "inference_ternary", "ddr3_pim"),
+        ("alexnet", "train_fp32", "gpu"),
+        ("alexnet", "train_fp32", "rm_pim"),
+        ("alexnet", "train_fp32", "fpga"),
+        ("vgg16", "train_fp32", "gpu"),
+        ("vgg16", "train_fp32", "rm_pim"),
+        ("vgg16", "train_fp32", "fpga"),
+    ])
+    def test_carbon_efficiency_ranges_match_paper(self, bench, phase, dev):
+        row = energy.table3_efficiency(bench, phase)[dev]
+        lo, hi = energy.PAPER_TABLE3_EFF[(bench, phase, dev)]
+        assert row["carbon_eff_min"] == pytest.approx(lo, rel=0.02)
+        assert row["carbon_eff_max"] == pytest.approx(hi, rel=0.02)
+
+    def test_rm_inference_paper_inconsistency_flagged(self):
+        """The paper's 4.6-10.8 MF/gCO2eq is ~6.5% above what its own
+        526 FPS/W implies (DESIGN.md §10) — we must compute the consistent
+        value, not the typo."""
+        row = energy.table3_efficiency("alexnet", "inference_ternary")["rm_pim"]
+        lo, hi = energy.PAPER_TABLE3_EFF[("alexnet", "inference_ternary",
+                                          "rm_pim")]
+        assert row["carbon_eff_min"] == pytest.approx(lo, rel=0.08)
+        assert row["carbon_eff_min"] < lo   # computed value is lower
+        assert row["carbon_eff_max"] == pytest.approx(hi, rel=0.08)
+
+    def test_order_of_magnitude_rm_vs_ddr3(self):
+        """Paper: RM PIM gives order-of-magnitude MF/gCO2eq over DDR3 PIM."""
+        eff = energy.table3_efficiency("alexnet", "inference_ternary")
+        ratio = eff["rm_pim"]["carbon_eff_min"] / eff["ddr3_pim"]["carbon_eff_min"]
+        assert ratio > 10.0
+
+
+class TestFleetEnergy:
+    def _terms(self):
+        return rl.RooflineTerms(flops_per_device=1.97e13,   # 0.1 s compute
+                                bytes_per_device=40.95e9,   # 0.05 s memory
+                                collective_bytes_per_device=1e9,  # 0.02 s
+                                n_devices=256)
+
+    def test_bound_and_step_time(self):
+        t = self._terms()
+        assert t.bound == "compute"
+        assert t.step_time_s == pytest.approx(0.1)
+        assert t.step_time_no_overlap_s == pytest.approx(0.17)
+
+    def test_step_energy_scales_with_devices(self):
+        t = self._terms()
+        se = energy.step_energy(t)
+        assert se.energy_j == pytest.approx(0.1 * 256 * 200.0)
+
+    def test_carbon_follows_grid_mix(self):
+        t = self._terms()
+        se = energy.step_energy(t)
+        assert se.carbon_g("TX") > se.carbon_g("NY") * 2
+
+    def test_roofline_fraction_bounds(self):
+        t = self._terms()
+        model_flops = 0.8 * t.flops_per_device * t.n_devices
+        frac = t.roofline_fraction(model_flops)
+        assert 0 < frac <= 1.0
+        assert frac == pytest.approx(0.8)
+
+    def test_tokens_per_joule(self):
+        t = self._terms()
+        tpj = energy.tokens_per_joule(t, n_tokens=1e6)
+        assert tpj == pytest.approx(1e6 / (0.1 * 256 * 200.0))

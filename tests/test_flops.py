@@ -1,0 +1,81 @@
+"""Analytic jaxpr flops walker: exactness on known programs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import flops as fl
+
+
+def test_single_matmul():
+    def f(a, b):
+        return a @ b
+    sds = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    c = fl.cost_of_fn(f, sds(32, 64), sds(64, 128))
+    assert c["flops_global"] == pytest.approx(2 * 32 * 64 * 128)
+
+
+def test_batched_einsum():
+    def f(a, b):
+        return jnp.einsum("bik,bkj->bij", a, b)
+    sds = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    c = fl.cost_of_fn(f, sds(4, 8, 16), sds(4, 16, 32))
+    assert c["flops_global"] == pytest.approx(2 * 4 * 8 * 16 * 32)
+
+
+def test_scan_multiplies_by_length():
+    w = jnp.zeros((16, 16))
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+    c = fl.cost_of_fn(f, jax.ShapeDtypeStruct((4, 16), jnp.float32))
+    assert c["flops_global"] == pytest.approx(7 * 2 * 4 * 16 * 16)
+
+
+def test_grad_includes_backward():
+    w_sds = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    x = jnp.ones((4, 16))
+
+    def loss(w):
+        return jnp.sum(x @ w)
+    c_f = fl.cost_of_fn(loss, w_sds)
+    c_g = fl.cost_of_fn(jax.grad(loss), w_sds)
+    assert c_g["flops_global"] >= c_f["flops_global"]
+
+
+def test_remat_recompute_counted():
+    w = jnp.zeros((16, 16))
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(jax.checkpoint(body), x, None, length=5)
+        return jnp.sum(y)
+    g = jax.grad(f)
+    c = fl.cost_of_fn(g, jax.ShapeDtypeStruct((4, 16), jnp.float32))
+    # fwd 5 matmuls + bwd per-step recompute (1 matmul) + 2 transpose matmuls
+    base = 2 * 4 * 16 * 16
+    assert c["flops_global"] >= 10 * base * 0.99
+
+
+def test_conv_flops():
+    def f(x, k):
+        return jax.lax.conv_general_dilated(
+            x, k, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = jax.ShapeDtypeStruct((1, 8, 8, 3), jnp.float32)
+    k = jax.ShapeDtypeStruct((3, 3, 3, 16), jnp.float32)
+    c = fl.cost_of_fn(f, x, k)
+    assert c["flops_global"] == pytest.approx(2 * 8 * 8 * 16 * 3 * 3 * 3,
+                                              rel=0.01)
+
+
+def test_traffic_positive_and_per_device_split():
+    def f(a, b):
+        return a @ b
+    sds = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    c = fl.cost_of_fn(f, sds(32, 64), sds(64, 128), n_devices=4)
+    assert c["traffic_bytes_global"] >= (32 * 64 + 64 * 128 + 32 * 128) * 4
+    assert c["flops_per_device"] == pytest.approx(c["flops_global"] / 4)

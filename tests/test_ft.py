@@ -1,0 +1,91 @@
+"""Heartbeats, straggler detection, elastic mesh planning."""
+
+import json
+import os
+
+import pytest
+
+from repro.train import ft
+
+
+def _beat(directory, host, step, ewma, t):
+    w = ft.HeartbeatWriter(directory, host)
+    w._step_time = ewma           # bypass EWMA warmup for test determinism
+    w.beat(step, ewma, now=t)
+
+
+class TestMonitor:
+    def test_all_healthy(self, tmp_path):
+        d = str(tmp_path)
+        for h in ("h0", "h1", "h2"):
+            _beat(d, h, 10, 1.0, t=1000.0)
+        mon = ft.HealthMonitor(d)
+        healthy, dead, strag = mon.assess(now=1001.0)
+        assert healthy == ["h0", "h1", "h2"] and not dead and not strag
+
+    def test_dead_host_detected(self, tmp_path):
+        d = str(tmp_path)
+        _beat(d, "h0", 10, 1.0, t=1000.0)
+        _beat(d, "h1", 10, 1.0, t=900.0)   # stale
+        mon = ft.HealthMonitor(d, ft.MonitorConfig(dead_after_s=60))
+        healthy, dead, _ = mon.assess(now=1000.0)
+        assert dead == ["h1"] and healthy == ["h0"]
+
+    def test_straggler_needs_strikes(self, tmp_path):
+        d = str(tmp_path)
+        cfg = ft.MonitorConfig(straggler_factor=2.0, strikes_to_exclude=3)
+        mon = ft.HealthMonitor(d, cfg)
+        for h, t in (("h0", 1.0), ("h1", 1.0), ("h2", 5.0)):
+            _beat(d, h, 10, t, t=1000.0)
+        for i in range(2):
+            _, _, strag = mon.assess(now=1000.0)
+            assert strag == []            # not yet: strikes accumulate
+        _, _, strag = mon.assess(now=1000.0)
+        assert strag == ["h2"]
+
+    def test_recovered_straggler_resets_strikes(self, tmp_path):
+        d = str(tmp_path)
+        cfg = ft.MonitorConfig(straggler_factor=2.0, strikes_to_exclude=2)
+        mon = ft.HealthMonitor(d, cfg)
+        for h, t in (("h0", 1.0), ("h1", 1.0), ("h2", 5.0)):
+            _beat(d, h, 10, t, t=1000.0)
+        mon.assess(now=1000.0)
+        _beat(d, "h2", 11, 1.0, t=1000.5)   # recovered
+        mon.assess(now=1001.0)
+        _beat(d, "h2", 12, 5.0, t=1001.5)   # slow again: strikes restart at 1
+        _, _, strag = mon.assess(now=1002.0)
+        assert strag == []
+
+    def test_torn_heartbeat_skipped(self, tmp_path):
+        d = str(tmp_path)
+        _beat(d, "h0", 3, 1.0, t=1000.0)
+        with open(os.path.join(d, "h1.json"), "w") as f:
+            f.write("{not json")
+        mon = ft.HealthMonitor(d)
+        healthy, dead, _ = mon.assess(now=1000.5)
+        assert healthy == ["h0"]
+
+
+class TestElasticPlanner:
+    def test_full_two_pods(self):
+        pl = ft.ElasticPlanner(chips_per_host=4, model_parallel=16)
+        plan = pl.plan(n_healthy_hosts=128)    # 512 chips
+        assert plan.mesh_shape == (2, 16, 16)
+        assert plan.mesh_axes == ("pod", "data", "model")
+
+    def test_shrink_below_pod(self):
+        pl = ft.ElasticPlanner(chips_per_host=4, model_parallel=16)
+        plan = pl.plan(n_healthy_hosts=50)     # 200 chips -> (12, 16) = 192
+        assert plan.mesh_shape == (12, 16)
+        assert plan.dp_size == 12
+
+    def test_restart_only_on_shape_change(self):
+        pl = ft.ElasticPlanner(chips_per_host=4, model_parallel=16)
+        p1 = pl.plan(64)
+        p2 = pl.plan(64, current=p1)
+        assert p1.restart_required and not p2.restart_required
+
+    def test_infeasible_raises(self):
+        pl = ft.ElasticPlanner(chips_per_host=1, model_parallel=16)
+        with pytest.raises(RuntimeError):
+            pl.plan(8)

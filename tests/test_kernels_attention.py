@@ -1,0 +1,66 @@
+"""Flash-attention Pallas kernel vs. the jnp oracle: shape/mask/GQA sweep."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+CASES = [
+    # (b, sq, h, hkv, d)
+    (1, 128, 4, 4, 64),
+    (2, 256, 8, 2, 64),
+    (1, 128, 4, 1, 128),
+    (2, 128, 2, 2, 32),
+]
+
+
+@pytest.mark.parametrize("b,s,h,hkv,d", CASES)
+@pytest.mark.parametrize("window", [-1, 32], ids=["global", "win32"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_flash_matches_oracle(b, s, h, hkv, d, window, dtype):
+    key = jax.random.PRNGKey(s + h)
+    q = jax.random.normal(key, (b, s, h, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, window=window)
+    expect = ref.attention_ref(q, k, v, scale=d ** -0.5, causal=True,
+                               window=window)
+    atol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=atol)
+
+
+def test_ragged_seq_padding():
+    """Non-multiple sequence lengths go through the padded path."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 100, 2, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 100, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 100, 2, 32))
+    out = ops.flash_attention(q, k, v, causal=True)
+    expect = ref.attention_ref(q, k, v, scale=32 ** -0.5, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+def test_noncausal_small():
+    key = jax.random.PRNGKey(4)
+    q = jax.random.normal(key, (1, 64, 2, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 64, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 64, 2, 32))
+    out = ops.flash_attention(q, k, v, causal=False)
+    expect = ref.attention_ref(q, k, v, scale=32 ** -0.5, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+def test_online_softmax_stability():
+    """Large logits must not overflow the running max/denominator."""
+    key = jax.random.PRNGKey(5)
+    q = 30.0 * jax.random.normal(key, (1, 128, 2, 64))
+    k = 30.0 * jax.random.normal(jax.random.fold_in(key, 1), (1, 128, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 2, 64))
+    out = ops.flash_attention(q, k, v, causal=True)
+    assert bool(jnp.isfinite(out).all())
+    expect = ref.attention_ref(q, k, v, scale=64 ** -0.5, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4)

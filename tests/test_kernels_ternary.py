@@ -1,0 +1,78 @@
+"""Ternary-matmul Pallas kernel vs. the jnp oracle: shape/dtype sweep."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.quant import ternary
+
+SHAPES = [(8, 512, 128), (128, 512, 128), (64, 1024, 256), (100, 300, 50),
+          (1, 512, 128), (256, 128, 384)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_kernel_matches_oracle(m, k, n, dtype):
+    key = jax.random.PRNGKey(m * 31 + n)
+    x = jax.random.normal(key, (m, k), dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    tw = ternary.ternarize(w)
+    y = ops.ternary_matmul(x, tw)
+    y_ref = ref.ternary_matmul_ref(x, tw.q, tw.scale)
+    scale = max(float(jnp.abs(y_ref).max()), 1e-6)
+    np.testing.assert_allclose(np.asarray(y, np.float32) / scale,
+                               np.asarray(y_ref, np.float32) / scale,
+                               atol=1e-6)
+
+
+def test_leading_batch_dims():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (2, 3, 256), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (256, 64))
+    tw = ternary.ternarize(w)
+    y = ops.ternary_matmul(x, tw)
+    assert y.shape == (2, 3, 64)
+    y_ref = ref.ternary_matmul_ref(x.reshape(-1, 256), tw.q, tw.scale)
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, 64)),
+                               np.asarray(y_ref), atol=1e-5)
+
+
+def test_binary_weights_path():
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (16, 512), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (512, 128))
+    tw = ternary.binarize(w)
+    assert int(jnp.sum(tw.q == 0)) == 0          # binary: no zeros
+    y = ops.ternary_matmul(x, tw)
+    y_ref = ref.ternary_matmul_ref(x, tw.q, tw.scale)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+
+
+def test_bias_fusion():
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (8, 256), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (256, 32))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (32,))
+    tw = ternary.ternarize(w)
+    y = ops.ternary_dense(x, tw, bias=b)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.ternary_matmul_ref(x, tw.q, tw.scale) + b),
+        atol=1e-5)
+
+
+@given(st.integers(1, 48), st.integers(1, 8).map(lambda i: i * 64),
+       st.integers(1, 4).map(lambda i: i * 32))
+@settings(max_examples=10, deadline=None)
+def test_property_random_shapes(m, k, n):
+    key = jax.random.PRNGKey(m + k + n)
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    tw = ternary.ternarize(w)
+    y = ops.ternary_matmul(x, tw, block_k=64, block_n=32)
+    y_ref = ref.ternary_matmul_ref(x, tw.q, tw.scale)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4,
+                               rtol=1e-4)

@@ -1,0 +1,151 @@
+"""Layer-level unit + property tests (norms, RoPE, GQA attention, chunking)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers
+from repro.models.layers import AttnConfig
+
+
+class TestNorms:
+    def test_rms_norm_unit_variance(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 5 + 2
+        y = layers.rms_norm({"scale": jnp.ones(64)}, x)
+        ms = jnp.mean(jnp.square(y), axis=-1)
+        assert jnp.allclose(ms, 1.0, atol=1e-2)
+
+    def test_rms_custom_vjp_matches_autodiff(self):
+        key = jax.random.PRNGKey(1)
+        x = jax.random.normal(key, (2, 8, 32))
+        sc = jax.random.normal(jax.random.fold_in(key, 1), (32,)) * 0.1 + 1.0
+
+        def ref(x, sc):
+            x32 = x.astype(jnp.float32)
+            var = jnp.mean(jnp.square(x32), -1, keepdims=True)
+            return jnp.sum(jnp.sin(x32 * jax.lax.rsqrt(var + 1e-6) * sc))
+
+        def mine(x, sc):
+            return jnp.sum(jnp.sin(layers.rms_norm({"scale": sc}, x)))
+
+        g1 = jax.grad(ref, (0, 1))(x, sc)
+        g2 = jax.grad(mine, (0, 1))(x, sc)
+        np.testing.assert_allclose(g1[0], g2[0], atol=2e-5)
+        np.testing.assert_allclose(g1[1], g2[1], atol=2e-5)
+
+    def test_layer_norm_zero_mean_unit_var(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 64)) * 3 + 7
+        p = {"scale": jnp.ones(64), "bias": jnp.zeros(64)}
+        y = layers.layer_norm(p, x)
+        assert jnp.allclose(jnp.mean(y, -1), 0.0, atol=1e-2)
+        assert jnp.allclose(jnp.var(y, -1), 1.0, atol=2e-2)
+
+
+class TestRoPE:
+    def test_relative_position_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n."""
+        key = jax.random.PRNGKey(3)
+        q = jax.random.normal(key, (1, 1, 1, 32))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 32))
+
+        def dot_at(m, n):
+            qm = layers.apply_rope(q, jnp.array([[m]], jnp.float32))
+            kn = layers.apply_rope(k, jnp.array([[n]], jnp.float32))
+            return float(jnp.sum(qm * kn))
+
+        assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), abs=1e-3)
+        assert dot_at(0, 0) == pytest.approx(dot_at(77, 77), abs=1e-3)
+
+    def test_norm_preserved(self):
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 6, 4, 64))
+        pos = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+        y = layers.apply_rope(x, pos)
+        np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1),
+                                   jnp.linalg.norm(y, axis=-1), rtol=1e-4)
+
+    def test_mrope_equals_rope_when_positions_equal(self):
+        x = jax.random.normal(jax.random.PRNGKey(5), (2, 6, 4, 32))
+        pos = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+        pos3 = jnp.broadcast_to(pos[..., None], (2, 6, 3))
+        y1 = layers.apply_rope(x, pos)
+        y2 = layers.apply_mrope(x, pos3, (6, 5, 5))
+        np.testing.assert_allclose(y1, y2, atol=1e-5)
+
+
+def _mk_attn(h, kv, dh=16, d=32, window=-1, qkv_bias=False):
+    cfg = AttnConfig(d_model=d, n_heads=h, n_kv_heads=kv, head_dim=dh,
+                     window=window, qkv_bias=qkv_bias)
+    params = layers.init_attention(jax.random.PRNGKey(7), cfg, jnp.float32)
+    return cfg, params.params
+
+
+class TestAttention:
+    def test_gqa_equals_mha_when_kv_equals_heads(self):
+        """GQA grouping must be exact replication math, not approximate."""
+        cfg, p = _mk_attn(4, 4)
+        x = jax.random.normal(jax.random.PRNGKey(8), (2, 10, 32))
+        y = layers.attention(p, cfg, x)
+        # manual MHA with same params
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        pos = jnp.broadcast_to(jnp.arange(10)[None], (2, 10))
+        q, k = layers.apply_rope(q, pos), layers.apply_rope(k, pos)
+        mask = layers.attention_mask(pos, pos, causal=True, window=-1)
+        out = layers.sdpa(q, k, v, mask, cfg.scale)
+        y2 = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        np.testing.assert_allclose(y, y2, atol=1e-5)
+
+    def test_causality(self):
+        """Changing a future token cannot change past outputs."""
+        cfg, p = _mk_attn(2, 1)
+        x = jax.random.normal(jax.random.PRNGKey(9), (1, 8, 32))
+        y1 = layers.attention(p, cfg, x)
+        x2 = x.at[:, 6].set(99.0)
+        y2 = layers.attention(p, cfg, x2)
+        np.testing.assert_allclose(y1[:, :6], y2[:, :6], atol=1e-5)
+
+    def test_window_masks_far_context(self):
+        """With window w, token t ignores tokens < t-w+1."""
+        cfg, p = _mk_attn(2, 2, window=3)
+        x = jax.random.normal(jax.random.PRNGKey(10), (1, 12, 32))
+        y1 = layers.attention(p, cfg, x)
+        x2 = x.at[:, 0:4].set(7.7)     # outside window of the last token
+        y2 = layers.attention(p, cfg, x2)
+        np.testing.assert_allclose(y1[:, -1], y2[:, -1], atol=1e-5)
+
+    @given(st.integers(1, 4).map(lambda g: (4 * g, g)))
+    @settings(max_examples=8, deadline=None)
+    def test_gqa_group_counts(self, hg):
+        h, kv = hg
+        cfg, p = _mk_attn(h, kv)
+        x = jax.random.normal(jax.random.PRNGKey(11), (1, 6, 32))
+        y = layers.attention(p, cfg, x)
+        assert y.shape == (1, 6, 32)
+        assert bool(jnp.isfinite(y).all())
+
+    def test_chunked_equals_dense(self):
+        key = jax.random.PRNGKey(12)
+        q = jax.random.normal(key, (2, 100, 4, 16))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (2, 100, 2, 16))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (2, 100, 2, 16))
+        pos = jnp.broadcast_to(jnp.arange(100)[None], (2, 100))
+        mask = layers.attention_mask(pos, pos, causal=True, window=17)
+        ref = layers.sdpa(q, k, v, mask, 0.25)
+        chk = layers.sdpa_q_chunked(q, k, v, pos, pos, causal=True, window=17,
+                                    scale=0.25, chunk=32)
+        np.testing.assert_allclose(ref, chk, atol=2e-5)
+
+    def test_decode_matches_full(self):
+        cfg, p = _mk_attn(2, 2)
+        x = jax.random.normal(jax.random.PRNGKey(13), (2, 6, 32))
+        full = layers.attention(p, cfg, x)
+        cache = layers.init_kv_cache(2, 6, 2, 16, jnp.float32)
+        outs = []
+        for t in range(6):
+            y, cache = layers.attention_decode(p, cfg, x[:, t:t + 1], cache,
+                                               jnp.asarray(t))
+            outs.append(y)
+        np.testing.assert_allclose(full, jnp.concatenate(outs, 1), atol=1e-5)

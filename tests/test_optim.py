@@ -1,0 +1,90 @@
+"""AdamW (incl. quantized states) + schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (AdamWConfig, apply_updates, clip_by_global_norm,
+                         global_norm, init_opt_state, schedules)
+
+
+def _quadratic_problem(seed=0, n=32):
+    key = jax.random.PRNGKey(seed)
+    target = jax.random.normal(key, (n,))
+    params = {"w": jnp.zeros((n,))}
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    return params, loss, target
+
+
+class TestAdamW:
+    def test_first_step_matches_reference(self):
+        """After one step from zero moments, update = lr * sign-ish formula."""
+        cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                          grad_clip=0.0)
+        params = {"w": jnp.array([1.0, -2.0])}
+        grads = {"w": jnp.array([0.5, -0.5])}
+        state = init_opt_state(params, cfg)
+        new_p, new_s, m = apply_updates(params, grads, state, cfg)
+        # bias-corrected mhat = g, vhat = g^2 -> update = lr * g/|g| = lr*sign
+        np.testing.assert_allclose(
+            np.asarray(new_p["w"]),
+            np.asarray(params["w"]) - 0.1 * np.sign([0.5, -0.5]), atol=1e-5)
+
+    @pytest.mark.parametrize("state_dtype", ["fp32", "bf16", "int8"])
+    def test_converges_on_quadratic(self, state_dtype):
+        cfg = AdamWConfig(lr=0.05, weight_decay=0.0, grad_clip=0.0,
+                          state_dtype=state_dtype)
+        params, loss, target = _quadratic_problem()
+        state = init_opt_state(params, cfg)
+        step = jax.jit(lambda p, s: apply_updates(p, jax.grad(loss)(p), s, cfg))
+        for _ in range(400):
+            params, state, _ = step(params, state)
+        final = float(loss(params))
+        assert final < 0.05, (state_dtype, final)
+
+    def test_weight_decay_shrinks(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.5, grad_clip=0.0)
+        params = {"w": jnp.ones((4,)) * 10}
+        grads = {"w": jnp.zeros((4,))}
+        state = init_opt_state(params, cfg)
+        new_p, _, _ = apply_updates(params, grads, state, cfg)
+        assert float(new_p["w"][0]) < 10.0
+
+    def test_grad_clip(self):
+        g = {"a": jnp.ones((100,)) * 10}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+        assert float(norm) == pytest.approx(100.0, rel=1e-5)
+
+    def test_master_kept_for_bf16_params(self):
+        cfg = AdamWConfig(use_master=True)
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        state = init_opt_state(params, cfg)
+        assert "master" in state
+        assert state["master"]["w"].dtype == jnp.float32
+
+    def test_schedule_callable_lr(self):
+        cfg = AdamWConfig(lr=schedules.warmup_cosine(1.0, 10, 100))
+        assert float(cfg.lr_at(jnp.asarray(5))) == pytest.approx(0.5)
+        assert float(cfg.lr_at(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+
+
+class TestSchedules:
+    def test_warmup_cosine_shape(self):
+        fn = schedules.warmup_cosine(2.0, 10, 110, floor=0.2)
+        assert float(fn(jnp.asarray(0))) == pytest.approx(0.0)
+        assert float(fn(jnp.asarray(10))) == pytest.approx(2.0)
+        assert float(fn(jnp.asarray(110))) == pytest.approx(0.2)
+
+    def test_rsqrt_decay(self):
+        fn = schedules.warmup_rsqrt(1.0, 100)
+        assert float(fn(jnp.asarray(100))) == pytest.approx(1.0)
+        assert float(fn(jnp.asarray(400))) == pytest.approx(0.5)
+
+    def test_linear_decay(self):
+        fn = schedules.linear_decay(1.0, 0, 100)
+        assert float(fn(jnp.asarray(50))) == pytest.approx(0.5)

@@ -1,0 +1,106 @@
+"""Ternary/binary/int8 quantization properties (paper C5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import int8, ternary
+
+
+class TestTernary:
+    def test_codebook(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        tw = ternary.ternarize(w)
+        vals = set(np.unique(np.asarray(tw.q)))
+        assert vals <= {-1, 0, 1}
+
+    def test_sign_agreement(self):
+        """Nonzero codes carry the sign of the original weight."""
+        w = jax.random.normal(jax.random.PRNGKey(1), (128, 16))
+        tw = ternary.ternarize(w)
+        q = np.asarray(tw.q, np.float32)
+        wn = np.asarray(w)
+        nz = q != 0
+        assert (np.sign(wn[nz]) == q[nz]).all()
+
+    def test_reconstruction_error_bounded(self):
+        """TWN on gaussian weights: relative L2 error ~0.4-0.6."""
+        w = jax.random.normal(jax.random.PRNGKey(2), (512, 256))
+        err = ternary.quant_error(w, ternary.ternarize(w))
+        assert 0.25 < err < 0.7
+
+    def test_better_than_binary_on_sparse(self):
+        key = jax.random.PRNGKey(3)
+        w = jax.random.normal(key, (256, 64))
+        mask = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, w.shape)
+        w = w * mask    # half zeros: ternary should model it better
+        e_t = ternary.quant_error(w, ternary.ternarize(w))
+        e_b = ternary.quant_error(w, ternary.binarize(w))
+        assert e_t < e_b
+
+    def test_bitplane_roundtrip(self):
+        w = jax.random.normal(jax.random.PRNGKey(4), (64, 32))
+        tw = ternary.ternarize(w)
+        plus, minus = ternary.to_bitplanes(tw)
+        assert not bool(jnp.any((plus == 1) & (minus == 1)))
+        back = ternary.from_bitplanes(plus, minus, tw.scale)
+        np.testing.assert_array_equal(np.asarray(back.q), np.asarray(tw.q))
+
+    @given(st.floats(0.1, 1.5))
+    @settings(max_examples=15, deadline=None)
+    def test_threshold_monotone_sparsity(self, thr):
+        w = jax.random.normal(jax.random.PRNGKey(5), (256, 32))
+        z1 = float(jnp.mean(ternary.ternarize(w, thr).q == 0))
+        z2 = float(jnp.mean(ternary.ternarize(w, thr + 0.3).q == 0))
+        assert z2 >= z1 - 1e-6
+
+    def test_tree_quantization_skips_embed(self):
+        params = {"embed": {"w": jnp.ones((8, 4))},
+                  "mlp": {"w_in": jnp.ones((4, 8)), "b": jnp.ones((8,))}}
+        qt = ternary.quantize_tree(params)
+        assert isinstance(qt["mlp"]["w_in"], ternary.TernaryWeight)
+        assert not isinstance(qt["embed"]["w"], ternary.TernaryWeight)
+        assert not isinstance(qt["mlp"]["b"], ternary.TernaryWeight)
+        de = ternary.dequantize_tree(qt)
+        assert de["mlp"]["w_in"].shape == (4, 8)
+
+
+class TestInt8:
+    def test_roundtrip_error_small(self):
+        w = jax.random.normal(jax.random.PRNGKey(6), (256, 128))
+        err = int8.quant_error(w, int8.quantize(w))
+        assert err < 0.01
+
+    def test_range_respected(self):
+        w = jax.random.normal(jax.random.PRNGKey(7), (64, 64)) * 100
+        iw = int8.quantize(w)
+        assert int(jnp.abs(iw.q).max()) <= 127
+
+    def test_stochastic_rounding_unbiased(self):
+        w = jnp.full((1, 4096), 0.3)
+        outs = []
+        for i in range(32):
+            iw = int8.quantize_stochastic(w, jax.random.PRNGKey(i))
+            outs.append(float(int8.dequantize(iw).mean()))
+        assert np.mean(outs) == pytest.approx(0.3, rel=0.01)
+
+    def test_inference_accuracy_preserved_on_cnn(self):
+        """Ternary AlexNet-smoke logits correlate with fp32 logits (the
+        paper's claim that ternary reduction keeps reasonable accuracy)."""
+        from repro.configs import base as cfgbase
+        from repro.models import cnn as cnn_lib
+        from repro.kernels import ops as kops
+        arch = cfgbase.get("alexnet")
+        cfg = arch.make_smoke()
+        ax = cnn_lib.init_cnn(jax.random.PRNGKey(8), cfg)
+        imgs = jax.random.normal(jax.random.PRNGKey(9), (4, 32, 32, 3))
+        base = cnn_lib.forward(ax.params, cfg, imgs)
+        qp = ternary.quantize_tree(
+            ax.params, predicate=lambda n, x: x.ndim == 2 and "fc" in n)
+        deq = ternary.dequantize_tree(qp)
+        quant = cnn_lib.forward(deq, cfg, imgs)
+        corr = np.corrcoef(np.asarray(base).ravel(),
+                           np.asarray(quant).ravel())[0, 1]
+        assert corr > 0.75, corr

@@ -1,0 +1,97 @@
+"""Int8-weight serving mode (§Perf HC-C iter 3, the paper's C5 in the LM)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flops as fl
+from repro.models import layers, transformer as tf
+from repro.quant.int8 import quantize_params_for_serving
+
+
+def _tiny():
+    cfg = tf.LMConfig(name="t", d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab=97, pattern=(tf.BlockSpec(),), repeats=2,
+                      remat="none")
+    ax = tf.init_lm(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return cfg, ax
+
+
+class TestWeightLoader:
+    def test_wl_passthrough(self):
+        w = jnp.ones((4, 4), jnp.float32)
+        assert layers.wl(w, jnp.bfloat16).dtype == jnp.bfloat16
+
+    def test_wl_dequant(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+        q8, _ = quantize_params_for_serving({"wq": w}, {"wq": ("embed", "ffn")})
+        back = layers.wl(q8["wq"], jnp.float32)
+        rel = float(jnp.linalg.norm(back - w) / jnp.linalg.norm(w))
+        assert rel < 0.01
+
+    def test_stacked_per_layer_scales(self):
+        w = jax.random.normal(jax.random.PRNGKey(2), (3, 16, 8))
+        w = w * jnp.array([1.0, 10.0, 100.0])[:, None, None]
+        q8, ax = quantize_params_for_serving(
+            {"w_in": w}, {"w_in": ("stack", "embed", "ffn")})
+        assert q8["w_in"]["s8"].shape == (3,)
+        back = q8["w_in"]["q8"].astype(jnp.float32) \
+            * q8["w_in"]["s8"][:, None, None]
+        rel = float(jnp.linalg.norm(back - w) / jnp.linalg.norm(w))
+        assert rel < 0.01
+        assert ax["w_in"]["s8"] == ("stack",)
+
+
+class TestServedModel:
+    def test_forward_close_to_fp32(self):
+        cfg, ax = _tiny()
+        q8, _ = quantize_params_for_serving(ax.params, ax.axes)
+        toks = jax.random.randint(jax.random.PRNGKey(3), (2, 10), 0, 97)
+        lg, _ = tf.forward(ax.params, cfg, toks)
+        lg8, _ = tf.forward(q8, cfg, toks)
+        corr = np.corrcoef(np.asarray(lg).ravel(), np.asarray(lg8).ravel())[0, 1]
+        assert corr > 0.995, corr
+
+    def test_decode_runs_and_matches_forward(self):
+        cfg, ax = _tiny()
+        q8, _ = quantize_params_for_serving(ax.params, ax.axes)
+        toks = jax.random.randint(jax.random.PRNGKey(4), (1, 8), 0, 97)
+        full, _ = tf.forward(q8, cfg, toks)
+        _, cc = tf.prefill(q8, cfg, toks[:, :4], max_len=8,
+                           cache_dtype=jnp.float32)
+        last = None
+        for t in range(4, 8):
+            last, cc = tf.decode_step(q8, cfg, toks[:, t:t + 1],
+                                      jnp.asarray(t), cc)
+        np.testing.assert_allclose(np.asarray(last[:, 0]),
+                                   np.asarray(full[:, -1, :97]), atol=1e-3)
+
+    def test_embed_and_norms_not_quantized(self):
+        cfg, ax = _tiny()
+        q8, _ = quantize_params_for_serving(ax.params, ax.axes)
+        assert not isinstance(q8["embed"]["w"], dict)
+        assert not isinstance(q8["final_norm"]["scale"], dict)
+        assert isinstance(q8["pat0"]["attn"]["wq"], dict)
+
+
+class TestNarrowTrafficBilling:
+    def test_int8_operand_billed_narrow(self):
+        def f(w, x):
+            deq = w["q8"].astype(jnp.bfloat16) * w["s8"].astype(jnp.bfloat16)
+            return x @ deq
+        wq = {"q8": jax.ShapeDtypeStruct((256, 128), jnp.int8),
+              "s8": jax.ShapeDtypeStruct((), jnp.float32)}
+        xs = jax.ShapeDtypeStruct((8, 256), jnp.bfloat16)
+        c = fl.cost_of_fn(f, wq, xs)
+        expected = 8 * 256 * 2 + 256 * 128 * 1 + 8 * 128 * 2
+        assert c["traffic_bytes_global"] == pytest.approx(expected)
+
+    def test_bf16_operand_billed_full(self):
+        def f(w, x):
+            return x @ w
+        ws = jax.ShapeDtypeStruct((256, 128), jnp.bfloat16)
+        xs = jax.ShapeDtypeStruct((8, 256), jnp.bfloat16)
+        c = fl.cost_of_fn(f, ws, xs)
+        expected = (8 * 256 + 256 * 128 + 8 * 128) * 2
+        assert c["traffic_bytes_global"] == pytest.approx(expected)

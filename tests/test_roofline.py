@@ -1,0 +1,94 @@
+"""Collective parser (incl. while-loop trip counts) + roofline terms."""
+
+import pytest
+
+from repro.core import roofline as rl
+
+SIMPLE_HLO = """
+HloModule test
+
+ENTRY %main.1 (p0: f32[1024,1024]) -> f32[1024,1024] {
+  %p0 = f32[1024,1024]{1,0} parameter(0)
+  %ar = f32[1024,1024]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add.1
+  %ag = f32[2048,1024]{1,0} all-gather(%ar), replica_groups={}
+  ROOT %out = f32[1024,1024]{1,0} slice(%ag)
+}
+"""
+
+LOOPED_HLO = """
+HloModule looped
+
+%cond.1 (arg: (s32[], f32[64,64])) -> pred[] {
+  %arg = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body.1 (arg: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %arg = (s32[], f32[64,64]) parameter(0)
+  %x = f32[64,64]{1,0} get-tuple-element(%arg), index=1
+  %ar2 = f32[64,64]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add.2
+  %i2 = s32[] get-tuple-element(%arg), index=0
+  ROOT %t = (s32[], f32[64,64]) tuple(%i2, %ar2)
+}
+
+ENTRY %main.2 (p: f32[64,64]) -> f32[64,64] {
+  %p = f32[64,64]{1,0} parameter(0)
+  %init = (s32[], f32[64,64]) tuple(s32[] constant(0), %p)
+  %w = (s32[], f32[64,64]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[64,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_simple_counts_and_bytes(self):
+        stats = rl.parse_collectives(SIMPLE_HLO)
+        # all-reduce: 2 x 4 MB; all-gather: max(out 8MB, in 4MB) = 8 MB
+        assert stats.bytes_by_op["all-reduce"] == pytest.approx(2 * 4 * 1024**2)
+        assert stats.bytes_by_op["all-gather"] == pytest.approx(8 * 1024**2)
+        assert stats.count_by_op == {"all-reduce": 1, "all-gather": 1}
+
+    def test_while_body_multiplied_by_trip_count(self):
+        stats = rl.parse_collectives(LOOPED_HLO)
+        # 64*64*4 = 16384 B; all-reduce x2; x12 trips
+        assert stats.bytes_by_op["all-reduce"] == pytest.approx(
+            2 * 16384 * 12)
+
+    def test_no_collectives(self):
+        stats = rl.parse_collectives("ENTRY %m (p: f32[4]) -> f32[4] {\n}")
+        assert stats.total_bytes == 0
+
+    def test_shape_bytes_dtypes(self):
+        assert rl._shape_bytes("bf16[2,3]") == 12
+        assert rl._shape_bytes("f32[10] s8[4]") == 44
+        assert rl._shape_bytes("pred[8]") == 8
+
+
+class TestTerms:
+    def test_term_formulas(self):
+        t = rl.RooflineTerms(flops_per_device=197e12, bytes_per_device=819e9,
+                             collective_bytes_per_device=50e9, n_devices=4)
+        assert t.compute_s == pytest.approx(1.0)
+        assert t.memory_s == pytest.approx(1.0)
+        assert t.collective_s == pytest.approx(1.0)
+
+    def test_useful_flops_ratio(self):
+        t = rl.RooflineTerms(1e12, 1e9, 0.0, n_devices=8)
+        assert t.useful_flops_ratio(4e12) == pytest.approx(0.5)
+
+    def test_model_flops_helpers(self):
+        assert rl.model_flops_train(1e9, 1e6) == pytest.approx(6e15)
+        assert rl.model_flops_infer(1e9, 1e6) == pytest.approx(2e15)
+
+    def test_real_compile_roundtrip(self):
+        """End-to-end: tiny jit -> compiled -> terms (single device)."""
+        import jax, jax.numpy as jnp
+        f = jax.jit(lambda a, b: jnp.tanh(a @ b).sum())
+        sds = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        compiled = f.lower(sds, sds).compile()
+        t = rl.from_compiled(compiled, n_devices=1, label="tiny")
+        assert t.flops_per_device > 2 * 64**3 * 0.9
+        assert t.collective_bytes_per_device == 0.0
+        assert t.bound in ("compute", "memory")

@@ -1,0 +1,149 @@
+"""Eq. 1 properties + every Figure-2 claim of the paper, reproduced."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sustain
+from repro.core.sustain import Duty, SECONDS_PER_DAY, SECONDS_PER_YEAR
+
+
+class TestEq1Properties:
+    def test_tb_equals_ti_when_m0_zero(self):
+        """Paper: t_B = t_I when M_0 = 0."""
+        assert sustain.breakeven_time_s(5e6, 3.0, 1.0) == pytest.approx(
+            sustain.indifference_time_s(5e6, 0.0, 3.0, 1.0))
+
+    def test_never_amortizes(self):
+        assert math.isinf(sustain.indifference_time_s(5e6, 1e6, 1.0, 2.0))
+
+    def test_dominant_choice_needs_no_indifference(self):
+        """Lower embodied AND lower operational -> t_I = 0 (pick it always)."""
+        assert sustain.indifference_time_s(1e6, 5e6, 1.0, 2.0) == 0.0
+
+    @given(st.floats(1e5, 1e8), st.floats(0, 1e7), st.floats(0.1, 50),
+           st.floats(0.01, 45))
+    @settings(max_examples=50, deadline=None)
+    def test_ti_consistency(self, m1, m0, p0, p1_frac):
+        p1 = p1_frac
+        t = sustain.indifference_time_s(m1 + m0, m0, p0 + p1, p1)
+        # at t, holistic energies are equal (when finite and positive)
+        if 0 < t < float("inf"):
+            e1 = sustain.total_energy_j(m1 + m0, p1, t)
+            e0 = sustain.total_energy_j(m0, p0 + p1, t)
+            assert e1 == pytest.approx(e0, rel=1e-6)
+
+    @given(st.floats(0.05, 1.0), st.floats(0.0, 1.0))
+    @settings(max_examples=40, deadline=None)
+    def test_avg_power_within_bounds(self, act, sleep):
+        from repro.core import hw
+        p = hw.PowerStates(10.0, 2.0, 0.5)
+        avg = sustain.average_power_w(p, act, sleep)
+        assert p.sleep_w <= avg <= p.active_w
+
+
+def _inference_platforms():
+    rm = sustain.platform_from_hw("rm_pim", "alexnet", "inference_ternary",
+                                  per_module=True)
+    ddr = sustain.platform_from_hw("ddr3_pim", "alexnet", "inference_ternary",
+                                   per_module=True)
+    return rm, ddr
+
+
+class TestPaperClaimsBreakeven:
+    """Fig 2a / conclusion: RM PIM replacing deployed DDR3 PIM."""
+
+    def test_breakeven_full_activity_about_one_year(self):
+        rm, ddr = _inference_platforms()
+        c = sustain.compare(rm, ddr, Duty(1.0), ref_throughput=ddr.throughput)
+        days = c.breakeven_s / SECONDS_PER_DAY
+        # paper: "can recover its embodied energy as quickly as 1 year"
+        assert 270 <= days <= 400, days
+
+    def test_breakeven_half_activity_about_500_days(self):
+        rm, ddr = _inference_platforms()
+        c = sustain.compare(rm, ddr, Duty(0.5), ref_throughput=ddr.throughput)
+        days = c.breakeven_s / SECONDS_PER_DAY
+        assert 430 <= days <= 570, days   # paper: "around 500 days"
+
+    def test_low_usage_two_to_three_years(self):
+        rm, ddr = _inference_platforms()
+        c = sustain.compare(rm, ddr, Duty(0.22), ref_throughput=ddr.throughput)
+        years = c.breakeven_s / SECONDS_PER_YEAR
+        assert 1.8 <= years <= 3.2, years
+
+    def test_breakeven_monotone_in_activity(self):
+        rm, ddr = _inference_platforms()
+        prev = math.inf
+        for a in (0.1, 0.3, 0.5, 0.8, 1.0):
+            c = sustain.compare(rm, ddr, Duty(a), ref_throughput=ddr.throughput)
+            assert c.breakeven_s <= prev
+            prev = c.breakeven_s
+
+    def test_surface_shape(self):
+        rm, ddr = _inference_platforms()
+        surf = sustain.surface(rm, ddr, [0.25, 0.5, 1.0], [0.0, 0.5, 1.0],
+                               "breakeven", ref_throughput=ddr.throughput)
+        assert surf.shape == (3, 3)
+        assert (surf > 0).all()
+
+
+class TestPaperClaimsIndifference:
+    """Fig 2b/2c + conclusion: GPU vs RM for FP32 training."""
+
+    def test_alexnet_crossover_at_40pct(self):
+        gpu = sustain.platform_from_hw("gpu", "alexnet", "train_fp32")
+        rm = sustain.platform_from_hw("rm_pim", "alexnet", "train_fp32")
+        a = sustain.crossover_activity(gpu, rm, ref_throughput=rm.throughput)
+        # paper: "activity ratio needs to be at least 40% for ... Alexnet"
+        assert 0.37 <= a <= 0.44, a
+
+    def test_alexnet_impractical_below_crossover_plus_eps(self):
+        gpu = sustain.platform_from_hw("gpu", "alexnet", "train_fp32")
+        rm = sustain.platform_from_hw("rm_pim", "alexnet", "train_fp32")
+        c = sustain.compare(gpu, rm, Duty(0.41), ref_throughput=rm.throughput)
+        # paper: impractical (>10 yr) in the low/mid-40% range
+        assert c.indifference_s / SECONDS_PER_YEAR > 10.0
+
+    def test_alexnet_practical_at_high_activity(self):
+        gpu = sustain.platform_from_hw("gpu", "alexnet", "train_fp32")
+        rm = sustain.platform_from_hw("rm_pim", "alexnet", "train_fp32")
+        c = sustain.compare(gpu, rm, Duty(1.0), ref_throughput=rm.throughput)
+        assert c.indifference_s / SECONDS_PER_YEAR < 0.5
+
+    def test_vgg_crossover_higher_than_alexnet(self):
+        """Paper: 'VGG-16 ... falls off sooner' (higher required activity)."""
+        gpu_a = sustain.platform_from_hw("gpu", "alexnet", "train_fp32")
+        rm_a = sustain.platform_from_hw("rm_pim", "alexnet", "train_fp32")
+        gpu_v = sustain.platform_from_hw("gpu", "vgg16", "train_fp32")
+        rm_v = sustain.platform_from_hw("rm_pim", "vgg16", "train_fp32")
+        a_alex = sustain.crossover_activity(gpu_a, rm_a,
+                                            ref_throughput=rm_a.throughput)
+        a_vgg = sustain.crossover_activity(gpu_v, rm_v,
+                                           ref_throughput=rm_v.throughput)
+        assert a_vgg > a_alex
+        assert 0.45 <= a_vgg <= 0.56, a_vgg
+
+    def test_fpga_never_selected(self):
+        """Paper: 'the indifference calculation will never pick the FPGA'."""
+        from repro.core import advisor
+        gpu = sustain.platform_from_hw("gpu", "alexnet", "train_fp32")
+        rm = sustain.platform_from_hw("rm_pim", "alexnet", "train_fp32")
+        fpga = sustain.platform_from_hw("fpga", "alexnet", "train_fp32")
+        rec = advisor.recommend([gpu, rm, fpga], Duty(0.7),
+                                5 * SECONDS_PER_YEAR,
+                                ref_throughput=rm.throughput)
+        assert "fpga" in rec.dominated
+        assert rec.winner != "fpga"
+
+    def test_decision_flips_with_service_time(self):
+        gpu = sustain.platform_from_hw("gpu", "alexnet", "train_fp32")
+        rm = sustain.platform_from_hw("rm_pim", "alexnet", "train_fp32")
+        duty = Duty(0.5)
+        short = sustain.decide([gpu, rm], duty, 0.2 * SECONDS_PER_YEAR,
+                               ref_throughput=rm.throughput)
+        long = sustain.decide([gpu, rm], duty, 10 * SECONDS_PER_YEAR,
+                              ref_throughput=rm.throughput)
+        assert min(short, key=short.get) == "rm_pim"   # embodied dominates
+        assert min(long, key=long.get) == "gpu"        # operational dominates
