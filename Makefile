@@ -1,0 +1,13 @@
+# Tier-1 verify — exactly as ROADMAP.md specifies.
+PY ?= python
+
+.PHONY: verify bench bench-serve
+
+verify:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
+bench-serve:
+	PYTHONPATH=src $(PY) benchmarks/serve_bench.py

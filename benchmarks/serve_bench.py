@@ -1,0 +1,122 @@
+"""Serve-core benchmark: decode tokens/s and J/token, fused vs. reference.
+
+Measures the tentpole claim directly on the live serving path: the fused
+device-resident engine (one jitted tick, one mask readback) against the
+host-loop reference engine (per-slot ``int(tok)`` syncs) on the SAME model,
+workload, and backend. Emits ``BENCH_serve.json`` next to the repo root and
+CSV rows via benchmarks/run.py.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+N_REQUESTS = 12
+MAX_TOKENS = 16
+MAX_SLOTS = 4
+MAX_LEN = 64
+
+
+def _model():
+    from repro.models import transformer as tf_lib
+    cfg = tf_lib.LMConfig(name="bench", d_model=64, n_heads=4, n_kv_heads=2,
+                          d_ff=128, vocab=128, pattern=(tf_lib.BlockSpec(),),
+                          repeats=2, remat="none", vocab_pad_multiple=1)
+    params = tf_lib.init_lm(jax.random.PRNGKey(0), cfg,
+                            dtype=jnp.float32).params
+    return cfg, params
+
+
+def _workload(eng):
+    rng = np.random.default_rng(0)
+    for _ in range(N_REQUESTS):
+        prompt = rng.integers(0, 100, size=int(rng.integers(4, 12)))
+        eng.submit(prompt, max_tokens=MAX_TOKENS)
+
+
+def _measure(make_engine):
+    """Warm up (compile) and measure on the SAME engine instance — jit
+    caches are per-engine closures, so a long-lived server is the honest
+    steady state to time."""
+    from repro.core import accounting
+    eng = make_engine(None)
+    _workload(eng)
+    eng.run_until_drained()                  # compiles tick + admit buckets
+    acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+        device="tpu_v5e", n_devices=1, grid_mix="NY"))
+    eng.accountant = acct
+    eng.metrics_log = []
+    _workload(eng)
+    done = eng.run_until_drained()
+    assert len(done) == N_REQUESTS
+    toks = sum(m.tokens for m in eng.metrics_log)
+    wall = sum(m.wall_s for m in eng.metrics_log)
+    rep = acct.report()
+    return {"decode_tokens": toks,
+            "wall_s": round(wall, 4),
+            "decode_tokens_per_s": round(toks / wall, 2),
+            "j_per_token": rep["j_per_token"],
+            "ticks": len(eng.metrics_log)}
+
+
+def bench() -> dict:
+    from repro.serve import ReferenceEngine, ServeConfig, ServeEngine
+    cfg, params = _model()
+
+    def fused(acct):
+        return ServeEngine(params, cfg,
+                           ServeConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN),
+                           accountant=acct)
+
+    def reference(acct):
+        return ReferenceEngine(params, cfg,
+                               ServeConfig(max_slots=MAX_SLOTS,
+                                           max_len=MAX_LEN),
+                               accountant=acct)
+
+    res = {
+        "workload": {"requests": N_REQUESTS, "max_tokens": MAX_TOKENS,
+                     "slots": MAX_SLOTS, "backend": jax.default_backend()},
+        "fused": _measure(fused),
+        "reference": _measure(reference),
+    }
+    res["speedup_decode_tok_s"] = round(
+        res["fused"]["decode_tokens_per_s"]
+        / res["reference"]["decode_tokens_per_s"], 2)
+    res["j_per_token_ratio"] = round(
+        res["reference"]["j_per_token"] / res["fused"]["j_per_token"], 2)
+    with open(OUT_PATH, "w") as f:
+        json.dump(res, f, indent=2)
+    return res
+
+
+def run():
+    """benchmarks/run.py hook: name,us_per_call,derived rows."""
+    res = bench()
+    f, r = res["fused"], res["reference"]
+    tick_us = lambda d: d["wall_s"] / d["ticks"] * 1e6
+    return [
+        ("serve/fused_tick", tick_us(f),
+         f"{f['decode_tokens_per_s']} tok/s; {f['j_per_token']:.2f} J/tok"),
+        ("serve/reference_tick", tick_us(r),
+         f"{r['decode_tokens_per_s']} tok/s; {r['j_per_token']:.2f} J/tok"),
+        ("serve/speedup", 0.0,
+         f"{res['speedup_decode_tok_s']}x decode tok/s; "
+         f"{res['j_per_token_ratio']}x J/token"),
+    ]
+
+
+if __name__ == "__main__":
+    out = bench()
+    print(json.dumps(out, indent=2))
+    print(f"\nwrote {os.path.abspath(OUT_PATH)}")
+    print(f"decode speedup: {out['speedup_decode_tok_s']}x")

@@ -57,9 +57,17 @@ def main():
               f"{len(r.generated)} generated")
     print(f"  ... {len(done)} requests completed")
 
+    s = eng.summary()
+    print(f"\nserve metrics (live path): {s['ticks']} ticks, "
+          f"{s['decode_tokens']:.0f} decode tokens at "
+          f"{s['decode_tokens_per_s']:.1f} tok/s "
+          f"(+ {s['prefill_tokens']:.0f} prefill tokens)")
+
     rep = acct.report()
     print("\ncarbon report:")
     print(f"  decode ticks: {rep['steps']}, tokens: {rep['tokens']:.0f}")
+    if rep.get("j_per_token") is not None:
+        print(f"  J/token (live): {rep['j_per_token']:.3f}")
     print(f"  operational: {rep['operational_j']:.1f} J = "
           f"{rep['operational_gco2']:.4f} gCO2eq ({args.grid_mix} grid)")
     print(f"  tokens/J: {rep['tokens_per_j']:.2f}")

@@ -64,6 +64,11 @@ class CarbonAccountant:
         """Dry-run variant: bill the roofline-bound step time."""
         self.observe_step(terms.step_time_s, n_tokens)
 
+    def observe_serve(self, metrics) -> None:
+        """Bill one serve-engine tick (serve.StepMetrics-shaped: ``wall_s``
+        wall seconds, ``tokens`` decode tokens) — the live J/token path."""
+        self.observe_step(metrics.wall_s, n_tokens=float(metrics.tokens))
+
     # -- accounting ----------------------------------------------------------
 
     @property
@@ -125,6 +130,7 @@ class CarbonAccountant:
             "operational_gco2": grid.joules_to_gco2(op, self.config.grid_mix),
             "amortized_fraction": self.amortized_fraction(),
             "tokens_per_j": (self._tokens / op) if op > 0 else None,
+            "j_per_token": (op / self._tokens) if self._tokens > 0 else None,
             "gco2_per_mtoken": (grid.joules_to_gco2(op, self.config.grid_mix)
                                 / (self._tokens / 1e6)) if self._tokens else None,
         }

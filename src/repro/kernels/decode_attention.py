@@ -1,0 +1,124 @@
+"""Decode-attention Pallas TPU kernel for the continuous-batching serve core.
+
+One query token per sequence (the engine tick's batched decode) against the
+slot-major KV cache, with **per-slot lengths**: slot b's valid cache rows are
+the contiguous prefix ``[0, lengths[b])`` (its query sits at position
+``lengths[b] - 1``). K blocks past a slot's length — and *every* block of a
+dead slot (``lengths[b] == 0``) — are skipped with ``pl.when``, so draining
+batches and short sequences cost no FLOPs instead of computing masked-out
+attention the way a dense XLA decode does.
+
+Grid: (batch, kv_heads, Sk/bk) with the K sweep innermost; the ``rep``
+query heads of one KV head are processed together as the MXU's M dimension.
+Lengths ride in scalar-prefetch SMEM so the skip test is resolved before the
+block's compute issues.
+
+Supports causal semantics implicitly (the query is the newest position) and
+sliding windows. Validated in interpret mode against a masked SDPA oracle
+(tests/test_serve_core.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, window: int, block_k: int,
+                   n_k_blocks: int):
+    bi, ki = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[bi]                       # valid prefix; 0 = dead slot
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_k), 1)
+    valid = k_pos < length
+    if window > 0:
+        # query position is length - 1; window masks older keys
+        valid &= (length - 1 - k_pos) < window
+
+    # dead slots and blocks past the slot's length issue no compute
+    @pl.when(jnp.logical_and(length > 0, ki * block_k < length))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (rep, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(valid, s, NEG_INF)                     # (rep, bk)
+        m_prev = m_ref[...]                                  # (rep, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "block_k",
+                                             "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     lengths: jnp.ndarray, *, scale: float, window: int = -1,
+                     block_k: int = 128,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, D) one token per row; k/v: (B, Sk, Hkv, D); lengths: (B,).
+
+    Sk % block_k == 0 (ops.py pads otherwise; padded keys sit past every
+    length so the length test masks them). Dead slots (length 0) return 0.
+    Returns (B, H, D) in q.dtype.
+    """
+    b, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    assert sk % block_k == 0, (sk, block_k)
+    nk = sk // block_k
+
+    qg = q.reshape(b, hkv, rep, d)
+    kt = k.transpose(0, 2, 1, 3)               # (B, Hkv, Sk, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, d), lambda bi, hi, ki, lens: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, ki, lens: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, ki, lens: (bi, hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d),
+                               lambda bi, hi, ki, lens: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),     # running max
+            pltpu.VMEM((rep, 1), jnp.float32),     # running denom
+            pltpu.VMEM((rep, d), jnp.float32),     # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, window=window,
+                          block_k=block_k, n_k_blocks=nk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, h, d)

@@ -14,6 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ternary_matmul as _tm
 from repro.kernels import ref as _ref
@@ -70,26 +71,47 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     b, sq, h, d = q.shape
     sk = k.shape[1]
     scale = scale if scale is not None else d ** -0.5
-    bq = min(block_q, sq) if sq % min(block_q, sq) == 0 else block_q
-    bq = min(bq, _round_up_pow2(sq))
-    bkk = min(block_k, _round_up_pow2(sk))
-    qp = _pad_to(q, 1, bq)
-    kp = _pad_to(k, 1, bkk)
-    vp = _pad_to(v, 1, bkk)
-    # padded K positions are masked by causality only if they exceed every
-    # q position; for non-causal we mask via a window trick: padded keys sit
-    # at positions >= sk and (q_pos - k_pos) < 0 for real queries... for
-    # safety, give padded keys -inf by zeroing v and relying on causal/diff
-    # masks; the remaining non-causal unpadded case is handled below.
-    out = _fa.flash_attention(qp, kp, vp, scale=scale, causal=causal,
-                              window=window, block_q=bq, block_k=bkk,
-                              interpret=interpret)
-    if not causal and kp.shape[1] != sk:
-        # re-run correction is wasteful; instead fall back to reference for
-        # non-causal ragged shapes (encoder-only paths are small).
-        return _ref.attention_ref(q, k, v, scale=scale, causal=False,
+    # block sizes: the requested block, shrunk to the (pow2, <=128) envelope
+    # of the actual sequence so short sequences get one small block
+    bq = min(block_q, _round_up_pow2(sq))
+    bk = min(block_k, _round_up_pow2(sk))
+    # Padded keys sit at positions >= sk. Causal masking hides them from
+    # every real query iff sq <= sk; otherwise (non-causal, or causal with
+    # q positions past sk) they would be attended — dispatch to the reference
+    # path BEFORE launching the kernel (these ragged encoder shapes are small).
+    if (-sk) % bk != 0 and (not causal or sq > sk):
+        return _ref.attention_ref(q, k, v, scale=scale, causal=causal,
                                   window=window)
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    out = _fa.flash_attention(qp, kp, vp, scale=scale, causal=causal,
+                              window=window, block_q=bq, block_k=bk,
+                              interpret=interpret)
     return out[:, :sq]
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     lengths: jnp.ndarray, *, scale: Optional[float] = None,
+                     window: int = -1, block_k: int = 128,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Serve-core decode attention with per-slot lengths.
+
+    q: (B, H, D) — the one new token per slot; k/v: (B, Sk, Hkv, D) slot-major
+    KV cache; lengths: (B,) valid prefix per slot (0 = dead slot -> zeros).
+    Pads Sk up to a block multiple; padded keys sit past every length so the
+    kernel's length test masks them.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    d = q.shape[-1]
+    sk = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    bk = min(block_k, _round_up_pow2(sk))
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    return _da.decode_attention(q, kp, vp, lengths, scale=scale,
+                                window=window, block_k=bk,
+                                interpret=interpret)
 
 
 def _round_up_pow2(n: int) -> int:

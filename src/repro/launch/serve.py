@@ -16,7 +16,7 @@ import numpy as np
 from repro.configs import base as cfgbase
 from repro.core import accounting
 from repro.models import transformer as tf_lib
-from repro.serve import ServeEngine, ServeConfig
+from repro.serve import (Scheduler, SchedulerConfig, ServeConfig, ServeEngine)
 
 
 def main() -> None:
@@ -27,6 +27,9 @@ def main() -> None:
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--grid-mix", default="NY")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--policy", default="fifo",
+                    choices=("fifo", "longest_prompt"))
     args = ap.parse_args()
 
     if not args.smoke:
@@ -41,8 +44,11 @@ def main() -> None:
     params = tf_lib.init_lm(jax.random.PRNGKey(0), cfg, dtype=jnp.float32).params
     acct = accounting.CarbonAccountant(accounting.AccountantConfig(
         device="tpu_v5e", n_devices=jax.device_count(), grid_mix=args.grid_mix))
-    eng = ServeEngine(params, cfg, ServeConfig(max_slots=args.slots,
-                                               max_len=256), accountant=acct)
+    eng = ServeEngine(params, cfg,
+                      ServeConfig(max_slots=args.slots, max_len=256,
+                                  temperature=args.temperature),
+                      accountant=acct,
+                      scheduler=Scheduler(SchedulerConfig(policy=args.policy)))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=rng.integers(4, 12))
@@ -50,7 +56,15 @@ def main() -> None:
     done = eng.run_until_drained()
     for r in done:
         print(f"req {r.uid}: prompt_len={len(r.prompt)} -> {r.generated}")
-    print("carbon report:", json.dumps(acct.report(), default=float))
+    s = eng.summary()
+    rep = acct.report()
+    print(f"serve: {s['ticks']} ticks, {s['decode_tokens']:.0f} decode toks "
+          f"({s['decode_tokens_per_s']:.1f} tok/s), "
+          f"{s['prefill_tokens']:.0f} prefill toks")
+    jpt = rep.get("j_per_token")
+    if jpt is not None:
+        print(f"live J/token: {jpt:.3f}")
+    print("carbon report:", json.dumps(rep, default=float))
 
 
 if __name__ == "__main__":

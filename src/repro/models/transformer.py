@@ -83,6 +83,10 @@ class LMConfig:
     # KV-cache storage dtype (§Perf HC-C): "bf16" | "fp8" (f8_e4m3; sdpa
     # upcasts to fp32 so only storage/traffic changes)
     kv_cache_dtype: str = "bf16"
+    # serve-core: route batched (per-slot position) decode attention through
+    # the Pallas decode kernel (kernels/decode_attention.py). Off by default —
+    # the serving engine flips it on for TPU backends (DESIGN.md §serve)
+    decode_kernel: bool = False
 
     @property
     def padded_vocab(self) -> int:
@@ -323,25 +327,53 @@ def init_caches(cfg: LMConfig, batch: int, max_len: int,
 
 
 def _decode_attn(p, cfg: LMConfig, spec: BlockSpec, x, cache, pos):
-    """One-token attention against a (possibly ring) cache."""
+    """One-token attention against a (possibly ring) cache.
+
+    ``pos`` is a scalar () shared by every row (classic decode, dry-run
+    cells) or a (B,) vector of independent per-slot positions (the serving
+    engine's slot-major batched decode).
+    """
     acfg = cfg.attn_cfg(spec.window)
     b = x.shape[0]
-    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    kv, pos_tags = cache["kv"], cache["pos"]
+    clen = kv.k.shape[1]
+    batched_pos = pos.ndim > 0
+    if batched_pos:
+        positions = pos[:, None].astype(jnp.int32)            # (B, 1)
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
     if cfg.pos_emb == "mrope":
         positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
     q, k_new, v_new = layers._project_qkv(p["attn"], acfg, x, positions)
-    kv, pos_tags = cache["kv"], cache["pos"]
-    clen = kv.k.shape[1]
-    slot = pos % clen          # ring slot; == pos when the cache is full-length
-    k = jax.lax.dynamic_update_slice(kv.k, k_new.astype(kv.k.dtype), (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(kv.v, v_new.astype(kv.v.dtype), (0, slot, 0, 0))
-    pos_col = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
-    pos_tags = jax.lax.dynamic_update_slice(pos_tags, pos_col, (0, slot))
+    if batched_pos:
+        # per-row ring slot: one scatter row per sequence
+        slot = (pos % clen).astype(jnp.int32)                  # (B,)
+        rows = jnp.arange(b)
+        k = kv.k.at[rows, slot].set(k_new[:, 0].astype(kv.k.dtype))
+        v = kv.v.at[rows, slot].set(v_new[:, 0].astype(kv.v.dtype))
+        pos_tags = pos_tags.at[rows, slot].set(pos.astype(jnp.int32))
+    else:
+        slot = pos % clen      # ring slot; == pos when the cache is full-length
+        k = jax.lax.dynamic_update_slice(kv.k, k_new.astype(kv.k.dtype),
+                                         (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(kv.v, v_new.astype(kv.v.dtype),
+                                         (0, slot, 0, 0))
+        pos_col = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+        pos_tags = jax.lax.dynamic_update_slice(pos_tags, pos_col, (0, slot))
     q_pos = positions[..., 0] if positions.ndim == 3 else positions
-    mask = layers.attention_mask(q_pos, pos_tags, causal=True,
-                                 window=spec.window)
-    mask &= (pos_tags >= 0)[:, None, :]
-    out = layers.sdpa(q, k, v, mask, acfg.scale)
+    if batched_pos and cfg.decode_kernel and not cfg.ring_cache:
+        # Pallas decode kernel: per-slot lengths => dead/short slots cost no
+        # FLOPs. Valid cache rows are the contiguous prefix [0, pos] (the
+        # serving engine's invariant for non-ring caches).
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(q[:, 0], k, v, pos.astype(jnp.int32) + 1,
+                                    scale=acfg.scale,
+                                    window=spec.window)[:, None]
+    else:
+        mask = layers.attention_mask(q_pos, pos_tags, causal=True,
+                                     window=spec.window)
+        mask &= (pos_tags >= 0)[:, None, :]
+        out = layers.sdpa(q, k, v, mask, acfg.scale)
     y = jnp.einsum("bshk,hkd->bsd", out, layers.wl(p["attn"]["wo"], out.dtype))
     return y, {"kv": KVCache(k=k, v=v), "pos": pos_tags}
 
@@ -376,7 +408,11 @@ def _decode_block(params, shared_params, cfg: LMConfig, spec: BlockSpec,
 def decode_step(params, cfg: LMConfig, token: jnp.ndarray, pos: jnp.ndarray,
                 caches: Dict[str, PyTree]
                 ) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
-    """One decode step. token (B,1) int32, pos () int32 -> (logits (B,1,V), caches)."""
+    """One decode step. token (B,1) int32 -> (logits (B,1,V), caches).
+
+    pos is () int32 (all rows at the same position) or (B,) int32 (per-slot
+    positions — the serving engine's continuous-batching decode tick).
+    """
     x = layers.embed(params["embed"], token)
     shared = params.get("shared_attn")
 
@@ -442,14 +478,28 @@ def caches_axes(cfg: LMConfig) -> Dict[str, PyTree]:
 def prefill(params, cfg: LMConfig, tokens: jnp.ndarray,
             max_len: Optional[int] = None,
             vision_embeds: Optional[jnp.ndarray] = None,
-            cache_dtype=jnp.bfloat16):
+            cache_dtype=jnp.bfloat16,
+            lengths: Optional[jnp.ndarray] = None):
     """Process a prompt, returning (last-token logits, filled caches).
 
     Implemented as full-sequence forward per block, materializing K/V into
     decode caches (sized ``max_len``, default prompt length).
+
+    ``lengths`` (B,) int32 enables padded multi-prompt prefill: rows are
+    right-padded to a shared length S, logits are taken at ``lengths - 1``
+    per row, and cache position tags past each row's true length are
+    invalidated (-1) so decode masks the padding. Causality guarantees the
+    tokens before each row's length are unaffected by its padding.
     """
     b, s = tokens.shape
     max_len = max_len or s
+    if lengths is not None and any(
+            sp.kind == "ssd" for sp in tuple(cfg.pattern) + tuple(cfg.tail)):
+        # SSM states integrate over the padded steps — padded prefill would
+        # corrupt short rows. The scheduler groups equal-length prompts for
+        # SSD/hybrid archs instead.
+        raise NotImplementedError("padded prefill is attention-only; "
+                                  "group equal-length prompts for SSD archs")
     caches = init_caches(cfg, b, max_len, cache_dtype)
     x = layers.embed(params["embed"], tokens)
     if vision_embeds is not None and cfg.vision_tokens > 0:
@@ -489,6 +539,10 @@ def prefill(params, cfg: LMConfig, tokens: jnp.ndarray,
             roll = (s - clen) % clen
             kc, vc = jnp.roll(kc, roll, 1), jnp.roll(vc, roll, 1)
             ptags = jnp.broadcast_to(jnp.roll(ptags1, roll, 0)[None], (bsz, clen))
+        if lengths is not None:
+            # invalidate tags past each row's true length — decode masks
+            # padded K/V by tag, so the garbage rows are never attended
+            ptags = jnp.where(ptags < lengths[:, None], ptags, -1)
         return x + y, {"kv": KVCache(k=kc, v=vc), "pos": ptags}
 
     def fill_block(p, spec, x, cache):
@@ -550,7 +604,14 @@ def prefill(params, cfg: LMConfig, tokens: jnp.ndarray,
     for i, spec in enumerate(cfg.tail):
         x, nc = fill_block(params.get(f"tail{i}"), spec, x, caches[f"tail{i}"])
         new_caches[f"tail{i}"] = nc
-    x = layers.rms_norm(params["final_norm"], x[:, -1:])
+    if lengths is not None:
+        # per-row last real token (rows are right-padded to a shared S)
+        idx = (lengths - 1).astype(jnp.int32)[:, None, None]
+        x_last = jnp.take_along_axis(x, jnp.broadcast_to(
+            idx, (b, 1, x.shape[-1])), axis=1)
+    else:
+        x_last = x[:, -1:]
+    x = layers.rms_norm(params["final_norm"], x_last)
     if cfg.tie_embeddings:
         logits = layers.unembed(params["embed"], x)
     else:

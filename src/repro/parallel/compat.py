@@ -1,0 +1,64 @@
+"""Version-portability shims for JAX APIs that moved between 0.4.x and 0.8.
+
+The repo targets the modern surface (``jax.shard_map``, ``jax.sharding.
+AxisType``, ``jax.lax.axis_size``); older runtimes spell these
+``jax.experimental.shard_map.shard_map``, no axis types, and
+``lax.psum(1, axis)``. Everything version-sensitive routes through here so
+call sites stay clean.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax.sharding import AxisType as _AxisType
+except ImportError:          # pre-0.6 runtimes have no explicit axis types
+    _AxisType = None
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where the runtime supports them."""
+    shape, axes = tuple(shape), tuple(axes)
+    if _AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(_AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+
+def axis_size(axis_name):
+    """Static size of a mapped mesh axis (inside shard_map)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def pvary(x, axis_names):
+    """Mark x as varying over manual axes (identity where unsupported)."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_names)
+    return x
+
+
+def cost_analysis_dict(compiled):
+    """compiled.cost_analysis() as a flat dict across runtime versions.
+
+    JAX 0.8 returns one dict; 0.4.x returns a per-computation list of dicts
+    (usually length 1).
+    """
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

@@ -19,6 +19,8 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.parallel import compat
+
 PyTree = Any
 
 
@@ -38,7 +40,7 @@ def ring_allreduce_int8(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
 
     Call inside shard_map. Wire bytes: ~2 * size * (n-1)/n * 1B vs 4B fp32.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     if n == 1:
         return x
     idx = jax.lax.axis_index(axis_name)
@@ -65,7 +67,7 @@ def ring_allreduce_int8(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
 
     q0, s0 = _quantize(jax.lax.dynamic_index_in_dim(chunks, idx % n, 0,
                                                     keepdims=False))
-    acc0 = jax.lax.pvary(jnp.zeros(chunks.shape[1], jnp.float32), (axis_name,))
+    acc0 = compat.pvary(jnp.zeros(chunks.shape[1], jnp.float32), (axis_name,))
     acc, q_fin, s_fin = jax.lax.fori_loop(0, n - 1, rs_body, (acc0, q0, s0))
     # rank r now owns the reduced chunk (r + 1) % n  (as q_fin/s_fin)
     own_id = (idx + 1) % n

@@ -1,3 +1,6 @@
-"""Serving substrate: KV-cache engine with continuous batching."""
+"""Serving substrate: device-resident continuous-batching serve core."""
 
-from repro.serve.engine import ServeEngine, ServeConfig, Request  # noqa: F401
+from repro.serve.engine import (Request, ServeConfig, ServeEngine,  # noqa: F401
+                                StepMetrics)
+from repro.serve.reference import ReferenceEngine  # noqa: F401
+from repro.serve.scheduler import Scheduler, SchedulerConfig  # noqa: F401

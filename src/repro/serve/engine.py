@@ -1,22 +1,31 @@
-"""Batched serving engine: slot-based continuous batching over a shared
-KV cache.
+"""Device-resident continuous-batching serve core.
 
-* ``max_slots`` concurrent sequences share one batched cache pytree;
-* prompts prefill into a free slot (per-slot cache rows written in place);
-* decode ticks advance **all active slots together** with per-slot positions
-  (vmapped single-row decode under the hood);
-* finished slots (EOS / max_tokens) free immediately and the queue refills —
-  iteration-level (Orca-style) continuous batching;
-* every tick is billed to the CarbonAccountant (the paper's operational-energy
-  accounting, live on the serving path).
+One jitted **engine tick** does everything on device: the batched decode step
+over the shared slot-major KV cache (per-slot positions — no expand/squeeze
+vmap tricks), sampling (greedy + per-slot temperature with per-slot PRNG
+keys), token/position advance, EOS/max-token done flags, and a device-side
+output ring buffer. The host reads back ONE compact (max_slots,) finished
+mask per tick; generated tokens leave the device only when a request
+finishes. Throughput and J/token are therefore properties of the hardware,
+not of Python overhead (the paper's operational-energy argument, measured on
+the live path).
+
+Admission is batched too: the scheduler (serve/scheduler.py) picks queued
+requests, the engine pads-and-stacks them into ONE prefill call and scatters
+every admitted slot's cache rows at once.
+
+Every tick produces a :class:`StepMetrics` billed to the CarbonAccountant,
+so J/token is a first-class live serving metric.
+
+The host-loop baseline this replaces lives on as serve/reference.py (the
+correctness oracle and the benchmark's "before").
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +33,7 @@ import numpy as np
 
 from repro.core import accounting
 from repro.models import transformer as tf_lib
+from repro.serve.scheduler import Scheduler, SchedulerConfig
 
 PyTree = Any
 
@@ -33,9 +43,13 @@ class ServeConfig:
     max_slots: int = 4
     max_len: int = 512
     eos_id: int = -1          # -1: never; sampling stops at max_tokens
-    temperature: float = 0.0  # 0 = greedy
+    temperature: float = 0.0  # default per-request temperature; 0 = greedy
     cache_dtype: Any = jnp.float32
     seed: int = 0
+    # route batched decode attention through the Pallas decode kernel
+    # (kernels/decode_attention.py). None = auto: on for TPU backends, off
+    # elsewhere (interpret mode is correctness-only).
+    decode_kernel: Optional[bool] = None
 
 
 @dataclasses.dataclass
@@ -43,136 +57,336 @@ class Request:
     uid: int
     prompt: np.ndarray              # (S,) int32
     max_tokens: int = 16
+    temperature: Optional[float] = None   # None -> ServeConfig.temperature
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
+@dataclasses.dataclass
+class StepMetrics:
+    """What one engine tick did — the unit core/accounting.py bills."""
+    tokens: int                 # decode tokens produced this tick
+    active_slots: int           # slots decoding this tick
+    wall_s: float               # host wall time of the tick (incl. admission)
+    prefill_tokens: int = 0     # prompt tokens prefilled this tick
+    admitted: int = 0           # requests admitted this tick
+    queue_depth: int = 0        # requests still waiting after the tick
+
+
+@dataclasses.dataclass
+class DeviceState:
+    """All per-slot serving state, resident on device between ticks."""
+    caches: PyTree
+    tok: jnp.ndarray            # (B,)  last token per slot
+    pos: jnp.ndarray            # (B,)  next cache write position per slot
+    gen: jnp.ndarray            # (B,)  tokens generated per slot
+    budget: jnp.ndarray         # (B,)  max_tokens per slot
+    active: jnp.ndarray         # (B,)  bool
+    temp: jnp.ndarray           # (B,)  per-slot sampling temperature
+    rng: jnp.ndarray            # (B, 2) per-slot PRNG keys (uint32)
+    out_buf: jnp.ndarray        # (B, max_len) device-side output ring buffer
+
+
+jax.tree_util.register_dataclass(
+    DeviceState,
+    data_fields=["caches", "tok", "pos", "gen", "budget", "active", "temp",
+                 "rng", "out_buf"],
+    meta_fields=[])
+
+
 def _batch_axis_tree(caches: PyTree) -> PyTree:
-    """vmap in_axes: pattern caches carry batch at axis 1 (stacked layer dim
-    leads); tail caches at axis 0."""
+    """Batch axis per cache leaf: pattern caches carry batch at axis 1 (the
+    stacked layer dim leads); tail caches at axis 0."""
     def per_key(key, sub):
         ax = 1 if key.startswith("pat") else 0
         return jax.tree.map(lambda _: ax, sub)
     return {k: per_key(k, v) for k, v in caches.items()}
 
 
+def _bucket_len(n: int) -> int:
+    """Pad prompt-batch length to a pow2 bucket (bounds prefill recompiles)."""
+    b = 4
+    while b < n:
+        b *= 2
+    return b
+
+
 class ServeEngine:
     def __init__(self, params: PyTree, cfg: tf_lib.LMConfig,
                  serve_cfg: ServeConfig,
-                 accountant: Optional[accounting.CarbonAccountant] = None):
+                 accountant: Optional[accounting.CarbonAccountant] = None,
+                 scheduler: Optional[Scheduler] = None):
         self.params = params
-        self.cfg = cfg
+        use_kernel = serve_cfg.decode_kernel
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        self.cfg = dataclasses.replace(cfg, decode_kernel=bool(use_kernel))
         self.scfg = serve_cfg
         self.accountant = accountant
-        b = serve_cfg.max_slots
-        self.caches = tf_lib.init_caches(cfg, b, serve_cfg.max_len,
-                                         serve_cfg.cache_dtype)
+        self.scheduler = scheduler or Scheduler(SchedulerConfig())
+        b, cap = serve_cfg.max_slots, serve_cfg.max_len
+        base_key = jax.random.PRNGKey(serve_cfg.seed)
+        self._base_key = base_key
+        self.state = DeviceState(
+            caches=tf_lib.init_caches(self.cfg, b, cap, serve_cfg.cache_dtype),
+            tok=jnp.zeros(b, jnp.int32),
+            pos=jnp.zeros(b, jnp.int32),
+            gen=jnp.zeros(b, jnp.int32),
+            budget=jnp.zeros(b, jnp.int32),
+            active=jnp.zeros(b, bool),
+            temp=jnp.zeros(b, jnp.float32),
+            rng=jax.vmap(lambda i: jax.random.fold_in(base_key, i))(
+                jnp.arange(b)),
+            out_buf=jnp.zeros((b, cap), jnp.int32))
+        # host mirrors (admission + finished-mask readbacks keep them exact;
+        # no per-slot device transfers needed)
         self.slot_req: List[Optional[Request]] = [None] * b
-        self.slot_pos = np.zeros(b, np.int32)
-        self.slot_tok = np.zeros(b, np.int32)
-        self.queue: Deque[Request] = deque()
+        self._host_gen = [0] * b
         self._uid = 0
-        self._rng = jax.random.PRNGKey(serve_cfg.seed)
-        self._build_fns()
+        # padded prefill needs causal masking to localize each row; SSM
+        # states integrate over padding, so SSD archs admit equal-length
+        # groups instead
+        self._pad_ok = all(
+            sp.kind == "attn"
+            for sp in tuple(cfg.pattern) + tuple(cfg.tail))
+        # instrumentation (tests assert the tick stays fused: one trace,
+        # one host readback per tick)
+        self.tick_trace_count = 0
+        self.host_readbacks = 0
+        self.last_metrics: Optional[StepMetrics] = None
+        self.metrics_log: List[StepMetrics] = []
+        self._build_tick()
+        self._build_admit()
 
-    # -- compiled paths -----------------------------------------------------------
+    # -- compiled paths -------------------------------------------------------
 
-    def _build_fns(self):
+    def _donate(self):
+        # DeviceState is donated on every tick/admit: the KV cache and slot
+        # arrays update in place instead of being copied each call. The old
+        # state object is dead after the call (step() always reassigns).
+        return (1,)
+
+    def _build_tick(self):
         cfg, scfg = self.cfg, self.scfg
+        eos_id, max_len = scfg.eos_id, scfg.max_len
 
-        def prefill_one(params, tokens):
-            return tf_lib.prefill(params, cfg, tokens, max_len=scfg.max_len,
-                                  cache_dtype=scfg.cache_dtype)
+        def tick(params, st: DeviceState) -> Tuple[DeviceState, jnp.ndarray]:
+            self.tick_trace_count += 1      # python side effect: trace count
+            b = st.tok.shape[0]
+            logits1, caches = tf_lib.decode_step(params, cfg, st.tok[:, None],
+                                                 st.pos, st.caches)
+            logits = logits1[:, 0]                          # (B, V) fp32
+            tok_new, rng_new = _sample(logits, st.rng, st.temp)
+            tok_new = jnp.where(st.active, tok_new, st.tok)
+            rows = jnp.arange(b)
+            widx = jnp.clip(st.gen, 0, st.out_buf.shape[1] - 1)
+            out_buf = st.out_buf.at[rows, widx].set(
+                jnp.where(st.active, tok_new, st.out_buf[rows, widx]))
+            gen_new = st.gen + st.active
+            pos_new = st.pos + st.active
+            hit_eos = ((tok_new == eos_id) if eos_id >= 0
+                       else jnp.zeros_like(st.active))
+            done = st.active & (hit_eos | (gen_new >= st.budget)
+                                | (pos_new >= max_len - 1))
+            new_st = DeviceState(
+                caches=caches, tok=tok_new, pos=pos_new, gen=gen_new,
+                budget=st.budget, active=st.active & ~done, temp=st.temp,
+                rng=rng_new, out_buf=out_buf)
+            return new_st, done
 
-        self._prefill = jax.jit(prefill_one)
+        self._tick = jax.jit(tick, donate_argnums=self._donate())
 
-        cache_axes = _batch_axis_tree(self.caches)
+    def _build_admit(self):
+        """Jitted pad-and-stack prefill + all-slot scatter (jit retraces per
+        length bucket; _bucket_len bounds how many buckets exist)."""
+        cfg, scfg = self.cfg, self.scfg
+        base_key, max_len = self._base_key, scfg.max_len
+        pad_ok = self._pad_ok
 
-        def decode_row(params, token, pos, cache):
-            # vmap strips the batch axis from cache leaves; run a B=1 decode
-            cache_b = jax.tree.map(lambda a, ax: jnp.expand_dims(a, ax),
-                                   cache, cache_axes)
-            logits, new_cache = tf_lib.decode_step(
-                params, cfg, token[None, None], pos, cache_b)
-            new_cache = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax),
-                                     new_cache, cache_axes)
-            return logits[0, 0], new_cache
+        def admit(params, st: DeviceState, toks, lens, slots, budgets, temps,
+                  uids) -> Tuple[DeviceState, jnp.ndarray]:
+            # one batched prefill over the padded prompt stack
+            logits1, row_caches = tf_lib.prefill(
+                params, cfg, toks, max_len=max_len,
+                cache_dtype=scfg.cache_dtype,
+                lengths=lens if pad_ok else None)
+            logits = logits1[:, 0]                          # (N, V)
+            keys = jax.vmap(lambda u: jax.random.fold_in(base_key, u))(uids)
+            tok0, rng0 = _sample(logits, keys, temps)
+            # scatter ALL admitted slots' cache rows at once (invalid rows
+            # carry out-of-bounds slot ids and drop)
+            axes = _batch_axis_tree(st.caches)
+            def ins(batched, row, ax):
+                if ax == 0:
+                    return batched.at[slots].set(
+                        row.astype(batched.dtype), mode="drop")
+                return batched.at[:, slots].set(
+                    row.astype(batched.dtype), mode="drop")
+            caches = jax.tree.map(ins, st.caches, row_caches, axes)
+            cap = st.out_buf.shape[1]
+            out_rows = jnp.zeros((tok0.shape[0], cap), jnp.int32
+                                 ).at[:, 0].set(tok0)
+            # a request can finish at prefill: max_tokens == 1, prompt at
+            # the length cap (total context is capped at max_len), or the
+            # very first sampled token being EOS
+            done = (budgets <= 1) | (lens >= max_len - 1)
+            if scfg.eos_id >= 0:
+                done |= tok0 == scfg.eos_id
+            new_st = DeviceState(
+                caches=caches,
+                tok=st.tok.at[slots].set(tok0, mode="drop"),
+                pos=st.pos.at[slots].set(lens, mode="drop"),
+                gen=st.gen.at[slots].set(1, mode="drop"),
+                budget=st.budget.at[slots].set(budgets, mode="drop"),
+                active=st.active.at[slots].set(~done, mode="drop"),
+                temp=st.temp.at[slots].set(temps, mode="drop"),
+                rng=st.rng.at[slots].set(rng0, mode="drop"),
+                out_buf=st.out_buf.at[slots].set(out_rows, mode="drop"))
+            return new_st, done
 
-        self._decode = jax.jit(
-            jax.vmap(decode_row, in_axes=(None, 0, 0, cache_axes),
-                     out_axes=(0, cache_axes)))
+        self._admit_jit = jax.jit(admit, donate_argnums=self._donate())
 
-    # -- queue API ------------------------------------------------------------------
+    # -- queue API ------------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_tokens: int = 16) -> int:
+    def submit(self, prompt: np.ndarray, max_tokens: int = 16,
+               temperature: Optional[float] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size >= self.scfg.max_len:
+            raise ValueError(f"prompt length {prompt.size} >= max_len "
+                             f"{self.scfg.max_len}")
         self._uid += 1
-        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
-                                  max_tokens))
+        self.scheduler.submit(Request(self._uid, prompt, max_tokens,
+                                      temperature))
         return self._uid
 
-    def _write_slot_cache(self, slot: int, row_caches: PyTree) -> None:
-        """Insert a prefilled (batch=1) cache into the batched cache at slot."""
-        def ins(batched, row, ax):
-            idx = [slice(None)] * batched.ndim
-            idx[ax] = slot
-            return batched.at[tuple(idx)].set(jnp.squeeze(row, axis=ax))
-        axes = _batch_axis_tree(self.caches)
-        self.caches = jax.tree.map(ins, self.caches, row_caches, axes)
+    @property
+    def queue(self):
+        return self.scheduler.pending
 
-    def _admit(self) -> None:
-        for slot in range(self.scfg.max_slots):
-            if self.slot_req[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            prompt = jnp.asarray(req.prompt[None, :])
-            logits, row_cache = self._prefill(self.params, prompt)
-            self._write_slot_cache(slot, row_cache)
-            tok = self._sample(logits[0, -1])
-            req.generated.append(int(tok))
-            self.slot_req[slot] = req
-            self.slot_pos[slot] = len(req.prompt)
-            self.slot_tok[slot] = int(tok)
+    # -- host readback helpers ------------------------------------------------
 
-    def _sample(self, logits: jnp.ndarray) -> int:
-        if self.scfg.temperature <= 0:
-            return int(jnp.argmax(logits))
-        self._rng, sub = jax.random.split(self._rng)
-        return int(jax.random.categorical(sub, logits / self.scfg.temperature))
+    def _readback(self, x) -> np.ndarray:
+        """Every device->host transfer goes through here (counted: the tick
+        hot path must do exactly one — the finished mask)."""
+        self.host_readbacks += 1
+        return np.asarray(x)
 
-    # -- main tick --------------------------------------------------------------------
+    def _finish_slot(self, slot: int, finished: List[Request]) -> None:
+        req = self.slot_req[slot]
+        n = self._host_gen[slot]
+        toks = self._readback(self.state.out_buf[slot, :n])
+        req.generated = [int(t) for t in toks]
+        req.done = True
+        finished.append(req)
+        self.slot_req[slot] = None
+        self._host_gen[slot] = 0
+
+    # -- admission ------------------------------------------------------------
+
+    def _admit(self, finished: List[Request]) -> Tuple[int, int]:
+        """Batched admission. Returns (n_admitted, prompt_tokens)."""
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        reqs = self.scheduler.select(len(free))
+        if not reqs:
+            return 0, 0
+        if not self._pad_ok:
+            # SSD/hybrid archs: only equal-length prompts share a prefill
+            same = [r for r in reqs if len(r.prompt) == len(reqs[0].prompt)]
+            self.scheduler.requeue_front([r for r in reqs if r not in same])
+            reqs = same
+        nslots = self.scfg.max_slots
+        # SSD path runs prefill without per-row lengths, so the stack width
+        # must equal the (shared) true prompt length — no bucket padding.
+        # The bucket is clamped to max_len: a wider stack would push prefill
+        # into its ring branch and silently drop the oldest prompt tokens.
+        lmax = (min(_bucket_len(max(len(r.prompt) for r in reqs)),
+                    self.scfg.max_len)
+                if self._pad_ok else len(reqs[0].prompt))
+        n = len(reqs)
+        toks = np.zeros((nslots, lmax), np.int32)
+        lens = np.zeros(nslots, np.int32)
+        slots = np.full(nslots, nslots + 1, np.int32)   # OOB rows drop
+        budgets = np.ones(nslots, np.int32)
+        temps = np.zeros(nslots, np.float32)
+        uids = np.zeros(nslots, np.int32)
+        for j, req in enumerate(reqs):
+            sl = len(req.prompt)
+            toks[j, :sl] = req.prompt
+            lens[j] = sl
+            slots[j] = free[j]
+            budgets[j] = req.max_tokens
+            temps[j] = (self.scfg.temperature if req.temperature is None
+                        else req.temperature)
+            uids[j] = req.uid
+        self.state, done = self._admit_jit(
+            self.params, self.state, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(slots), jnp.asarray(budgets), jnp.asarray(temps),
+            jnp.asarray(uids))
+        done_mask = self._readback(done)
+        for j, req in enumerate(reqs):
+            self.slot_req[free[j]] = req
+            self._host_gen[free[j]] = 1
+            if done_mask[j]:
+                self._finish_slot(free[j], finished)
+        return len(reqs), int(lens.sum())
+
+    # -- main tick ------------------------------------------------------------
 
     def step(self) -> List[Request]:
-        """Admit + one decode tick for all active slots. Returns finished."""
+        """Admit + one fused decode tick. Returns finished requests."""
         t0 = time.monotonic()
-        self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
         finished: List[Request] = []
+        admitted, prefill_toks = self._admit(finished)
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if active:
-            toks = jnp.asarray(self.slot_tok)
-            poss = jnp.asarray(self.slot_pos)
-            logits, self.caches = self._decode(self.params, toks, poss,
-                                               self.caches)
+            self.state, done = self._tick(self.params, self.state)
+            done_mask = self._readback(done)   # the ONLY per-tick transfer
             for i in active:
-                req = self.slot_req[i]
-                tok = self._sample(logits[i])
-                req.generated.append(tok)
-                self.slot_pos[i] += 1
-                self.slot_tok[i] = tok
-                hit_eos = (self.scfg.eos_id >= 0 and tok == self.scfg.eos_id)
-                if (len(req.generated) >= req.max_tokens or hit_eos
-                        or self.slot_pos[i] >= self.scfg.max_len - 1):
-                    req.done = True
-                    finished.append(req)
-                    self.slot_req[i] = None
+                self._host_gen[i] += 1
+            for i in np.nonzero(done_mask)[0]:
+                if self.slot_req[int(i)] is not None:
+                    self._finish_slot(int(i), finished)
+        m = StepMetrics(tokens=len(active), active_slots=len(active),
+                        wall_s=time.monotonic() - t0,
+                        prefill_tokens=prefill_toks, admitted=admitted,
+                        queue_depth=len(self.scheduler))
+        self.last_metrics = m
+        self.metrics_log.append(m)
         if self.accountant is not None:
-            self.accountant.observe_step(time.monotonic() - t0,
-                                         n_tokens=float(len(active)))
+            self.accountant.observe_serve(m)
         return finished
 
     def run_until_drained(self, max_ticks: int = 10000) -> List[Request]:
         done: List[Request] = []
         for _ in range(max_ticks):
             done.extend(self.step())
-            if not self.queue and all(r is None for r in self.slot_req):
+            if not len(self.scheduler) and all(r is None
+                                               for r in self.slot_req):
                 break
         return done
+
+    # -- aggregate metrics ----------------------------------------------------
+
+    def summary(self) -> Dict[str, float]:
+        toks = sum(m.tokens for m in self.metrics_log)
+        wall = sum(m.wall_s for m in self.metrics_log)
+        return {"ticks": len(self.metrics_log),
+                "decode_tokens": toks,
+                "prefill_tokens": sum(m.prefill_tokens
+                                      for m in self.metrics_log),
+                "wall_s": wall,
+                "decode_tokens_per_s": toks / wall if wall > 0 else 0.0}
+
+
+def _sample(logits: jnp.ndarray, keys: jnp.ndarray, temp: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-slot sampling: greedy where temp == 0, else categorical at temp,
+    each slot drawing from its own PRNG key. Returns (tokens, new keys)."""
+    split = jax.vmap(lambda k: jax.random.split(k, 2))(keys)   # (B, 2, 2)
+    sub = split[:, 1]
+    new_keys = jnp.where((temp > 0)[:, None], split[:, 0], keys)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    tsafe = jnp.where(temp > 0, temp, 1.0)
+    sampled = jax.vmap(jax.random.categorical)(
+        sub, logits / tsafe[:, None]).astype(jnp.int32)
+    return jnp.where(temp > 0, sampled, greedy), new_keys

@@ -1,0 +1,163 @@
+"""Host-loop reference serving engine (the pre-serve-core implementation).
+
+Kept as the correctness oracle and the benchmark "before": per-prompt
+prefill, expand/squeeze-vmapped single-row decode, and host-side sampling
+with one ``int(tok)`` device sync per active slot per tick. The fused
+device-resident engine (serve/engine.py) must be token-identical to this
+under greedy decoding; benchmarks/serve_bench.py measures the speedup.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import accounting
+from repro.models import transformer as tf_lib
+from repro.serve.engine import (PyTree, Request, ServeConfig, StepMetrics,
+                                _batch_axis_tree)
+
+
+class ReferenceEngine:
+    """Slot-based continuous batching with a host-driven control loop."""
+
+    def __init__(self, params: PyTree, cfg: tf_lib.LMConfig,
+                 serve_cfg: ServeConfig,
+                 accountant: Optional[accounting.CarbonAccountant] = None):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        self.accountant = accountant
+        b = serve_cfg.max_slots
+        self.caches = tf_lib.init_caches(cfg, b, serve_cfg.max_len,
+                                         serve_cfg.cache_dtype)
+        self.slot_req: List[Optional[Request]] = [None] * b
+        self.slot_pos = np.zeros(b, np.int32)
+        self.slot_tok = np.zeros(b, np.int32)
+        self.queue: Deque[Request] = deque()
+        self._uid = 0
+        self._rng = jax.random.PRNGKey(serve_cfg.seed)
+        self.metrics_log: List[StepMetrics] = []
+        self._admit_finished: List[Request] = []
+        self._build_fns()
+
+    # -- compiled paths -------------------------------------------------------
+
+    def _build_fns(self):
+        cfg, scfg = self.cfg, self.scfg
+
+        def prefill_one(params, tokens):
+            return tf_lib.prefill(params, cfg, tokens, max_len=scfg.max_len,
+                                  cache_dtype=scfg.cache_dtype)
+
+        self._prefill = jax.jit(prefill_one)
+
+        cache_axes = _batch_axis_tree(self.caches)
+
+        def decode_row(params, token, pos, cache):
+            # vmap strips the batch axis from cache leaves; run a B=1 decode
+            cache_b = jax.tree.map(lambda a, ax: jnp.expand_dims(a, ax),
+                                   cache, cache_axes)
+            logits, new_cache = tf_lib.decode_step(
+                params, cfg, token[None, None], pos, cache_b)
+            new_cache = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax),
+                                     new_cache, cache_axes)
+            return logits[0, 0], new_cache
+
+        self._decode = jax.jit(
+            jax.vmap(decode_row, in_axes=(None, 0, 0, cache_axes),
+                     out_axes=(0, cache_axes)))
+
+    # -- queue API ------------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_tokens: int = 16) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
+                                  max_tokens))
+        return self._uid
+
+    def _write_slot_cache(self, slot: int, row_caches: PyTree) -> None:
+        """Insert a prefilled (batch=1) cache into the batched cache at slot."""
+        def ins(batched, row, ax):
+            idx = [slice(None)] * batched.ndim
+            idx[ax] = slot
+            return batched.at[tuple(idx)].set(jnp.squeeze(row, axis=ax))
+        axes = _batch_axis_tree(self.caches)
+        self.caches = jax.tree.map(ins, self.caches, row_caches, axes)
+
+    def _admit(self) -> None:
+        for slot in range(self.scfg.max_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            prompt = jnp.asarray(req.prompt[None, :])
+            logits, row_cache = self._prefill(self.params, prompt)
+            self._write_slot_cache(slot, row_cache)
+            tok = self._sample(logits[0, -1])
+            req.generated.append(int(tok))
+            # same admission-time finish rules as the fused engine
+            # (max_tokens == 1, prompt at the length cap, EOS at prefill) —
+            # the engines must stay token-identical at the edges too
+            if (req.max_tokens <= 1
+                    or len(req.prompt) >= self.scfg.max_len - 1
+                    or (self.scfg.eos_id >= 0
+                        and int(tok) == self.scfg.eos_id)):
+                req.done = True
+                self._admit_finished.append(req)
+                continue
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = len(req.prompt)
+            self.slot_tok[slot] = int(tok)
+
+    def _sample(self, logits: jnp.ndarray) -> int:
+        if self.scfg.temperature <= 0:
+            return int(jnp.argmax(logits))
+        self._rng, sub = jax.random.split(self._rng)
+        return int(jax.random.categorical(sub, logits / self.scfg.temperature))
+
+    # -- main tick ------------------------------------------------------------
+
+    def step(self) -> List[Request]:
+        """Admit + one decode tick for all active slots. Returns finished."""
+        t0 = time.monotonic()
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        finished: List[Request] = self._admit_finished
+        self._admit_finished = []
+        if active:
+            toks = jnp.asarray(self.slot_tok)
+            poss = jnp.asarray(self.slot_pos)
+            logits, self.caches = self._decode(self.params, toks, poss,
+                                               self.caches)
+            for i in active:
+                req = self.slot_req[i]
+                tok = self._sample(logits[i])
+                req.generated.append(tok)
+                self.slot_pos[i] += 1
+                self.slot_tok[i] = tok
+                hit_eos = (self.scfg.eos_id >= 0 and tok == self.scfg.eos_id)
+                if (len(req.generated) >= req.max_tokens or hit_eos
+                        or self.slot_pos[i] >= self.scfg.max_len - 1):
+                    req.done = True
+                    finished.append(req)
+                    self.slot_req[i] = None
+        m = StepMetrics(tokens=len(active), active_slots=len(active),
+                        wall_s=time.monotonic() - t0,
+                        queue_depth=len(self.queue))
+        self.metrics_log.append(m)
+        if self.accountant is not None:
+            self.accountant.observe_serve(m)
+        return finished
+
+    def run_until_drained(self, max_ticks: int = 10000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            done.extend(self.step())
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+        return done

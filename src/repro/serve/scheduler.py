@@ -1,0 +1,64 @@
+"""Admission scheduling policy for the continuous-batching serve core.
+
+The engine owns device state (caches, slot arrays); the scheduler owns the
+*policy* of which queued requests enter freed slots:
+
+* ``fifo`` — arrival order (the seed engine's implicit policy);
+* ``longest_prompt`` — longest-prompt-first. Long prompts dominate both the
+  padded batched-prefill cost and the per-tick KV footprint; admitting them
+  together groups similar lengths into one pad-and-stack prefill call
+  (less padding waste) and starts the expensive requests earliest, which
+  lowers mean slot residency under a deep queue.
+
+Requests picked in one ``select`` call are prefilled as ONE padded batch
+(engine._admit), so the policy also controls prefill batch composition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.serve.engine import Request
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    policy: str = "fifo"               # "fifo" | "longest_prompt"
+
+
+class Scheduler:
+    def __init__(self, config: SchedulerConfig | None = None):
+        self.config = config or SchedulerConfig()
+        if self.config.policy not in ("fifo", "longest_prompt"):
+            raise ValueError(f"unknown policy {self.config.policy!r}")
+        self._q: Deque["Request"] = deque()
+
+    def submit(self, req: "Request") -> None:
+        self._q.append(req)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def pending(self) -> List["Request"]:
+        return list(self._q)
+
+    def select(self, n_free: int) -> List["Request"]:
+        """Pop up to ``n_free`` requests for admission, per policy."""
+        if n_free <= 0 or not self._q:
+            return []
+        if self.config.policy == "fifo":
+            return [self._q.popleft() for _ in range(min(n_free, len(self._q)))]
+        # longest_prompt: stable pick of the n longest pending prompts
+        ranked = sorted(self._q, key=lambda r: -len(r.prompt))[:n_free]
+        chosen = set(id(r) for r in ranked)
+        self._q = deque(r for r in self._q if id(r) not in chosen)
+        return ranked
+
+    def requeue_front(self, reqs: List["Request"]) -> None:
+        """Return selected-but-not-admitted requests to the queue head
+        (e.g. SSD archs admit only equal-length groups per prefill call)."""
+        self._q.extendleft(reversed(reqs))

@@ -55,13 +55,14 @@ class TestRingAllreduceInt8:
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.parallel import compression as comp
-mesh = jax.make_mesh((8,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.parallel.compat import make_mesh, shard_map
+mesh = make_mesh((8,), ("dp",))
 x = jnp.arange(8 * 1000, dtype=jnp.float32).reshape(8, 1000) / 777.0
 
 def per_rank(xs):
     return comp.ring_allreduce_int8(xs[0], "dp")
 
-f = jax.jit(jax.shard_map(per_rank, mesh=mesh, in_specs=P("dp"),
+f = jax.jit(shard_map(per_rank, mesh=mesh, in_specs=P("dp"),
                           out_specs=P("dp")))
 got = np.asarray(f(x)).reshape(8, 1000)   # stacked per-rank results
 want = np.asarray(x.mean(0))

@@ -8,8 +8,8 @@ def test_moe_ep_matches_dense():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.models import moe as moe_lib
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.parallel.compat import make_mesh, shard_map, axis_size
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = moe_lib.MoEConfig(d_model=32, d_ff=64, n_experts=8, top_k=2,
                         capacity_factor=8.0)
 ax = moe_lib.init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
@@ -18,11 +18,11 @@ y_ref, aux_ref = moe_lib.moe_dense(ax.params, cfg, x)
 
 def ep(params, x):
     return moe_lib.moe_ep(params, cfg, x, "model",
-                          jax.lax.axis_size("model"))[0]
+                          axis_size("model"))[0]
 
 param_specs = {"router": P(), "w_in": P("model"), "w_gate": P("model"),
                "w_out": P("model")}
-f = jax.jit(jax.shard_map(ep, mesh=mesh,
+f = jax.jit(shard_map(ep, mesh=mesh,
                           in_specs=(param_specs, P("data", None, None)),
                           out_specs=P("data", None, None)))
 y_ep = f(ax.params, x)

@@ -7,7 +7,8 @@ def test_pipeline_matches_sequential():
     out = run_multidevice("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.parallel import pipeline as pp
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.parallel.compat import make_mesh
+mesh = make_mesh((4,), ("pipe",))
 key = jax.random.PRNGKey(0)
 n_stage, d, batch, micro = 4, 16, 8, 4
 ws = jax.random.normal(key, (n_stage, d, d)) * 0.3
