@@ -9,5 +9,8 @@ verify:
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
 
+# reproduces BOTH serve bench artifacts: BENCH_serve.json (fused vs
+# host-loop reference) and BENCH_quant.json (bf16 vs int8 fast path)
 bench-serve:
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py
+	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --quant int8

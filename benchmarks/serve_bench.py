@@ -1,16 +1,24 @@
-"""Serve-core benchmark: decode tokens/s and J/token, fused vs. reference.
+"""Serve-core benchmarks: fused vs. reference, and bf16 vs. int8 serving.
 
-Measures the tentpole claim directly on the live serving path: the fused
-device-resident engine (one jitted tick, one mask readback) against the
-host-loop reference engine (per-slot ``int(tok)`` syncs) on the SAME model,
-workload, and backend. Emits ``BENCH_serve.json`` next to the repo root and
-CSV rows via benchmarks/run.py.
+Two modes on the SAME model, workload, and backend:
 
-    PYTHONPATH=src python benchmarks/serve_bench.py
+* default — the fused device-resident engine (one jitted tick, one mask
+  readback) against the host-loop reference engine (per-slot ``int(tok)``
+  syncs): decode tokens/s and wall-clock-billed J/token. Emits
+  ``BENCH_serve.json``.
+* ``--quant int8`` — the quantized serving fast path (int8 weights +
+  int8 KV cache, DESIGN.md §12) against the bf16-cache baseline: tok/s,
+  modeled J/token (FLOPs + per-byte DRAM term — the channel where the byte
+  reduction shows; wall-clock J/token reported alongside), resident cache
+  bytes, and the teacher-forced token-agreement score vs. the
+  full-precision oracle. Emits ``BENCH_quant.json``.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--quant int8|none]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 
@@ -19,6 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+OUT_QUANT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                              "BENCH_quant.json")
 
 N_REQUESTS = 12
 MAX_TOKENS = 16
@@ -28,8 +38,11 @@ MAX_LEN = 64
 
 def _model():
     from repro.models import transformer as tf_lib
-    cfg = tf_lib.LMConfig(name="bench", d_model=64, n_heads=4, n_kv_heads=2,
-                          d_ff=128, vocab=128, pattern=(tf_lib.BlockSpec(),),
+    # d_model 128 / head_dim 16: wide enough that int8 quantization noise
+    # averages out (token agreement >= 99% vs fp, the documented bound)
+    # while still CPU-benchmarkable
+    cfg = tf_lib.LMConfig(name="bench", d_model=128, n_heads=8, n_kv_heads=4,
+                          d_ff=256, vocab=128, pattern=(tf_lib.BlockSpec(),),
                           repeats=2, remat="none", vocab_pad_multiple=1)
     params = tf_lib.init_lm(jax.random.PRNGKey(0), cfg,
                             dtype=jnp.float32).params
@@ -99,6 +112,72 @@ def bench() -> dict:
     return res
 
 
+def bench_quant() -> dict:
+    """bf16-cache baseline vs. the int8 fast path on the same workload."""
+    from repro.core import accounting
+    from repro.serve import ServeConfig, ServeEngine, token_agreement
+    cfg, params = _model()
+
+    def arm(quant):
+        if quant == "none":
+            # honest bf16 baseline: bf16 weights AND bf16 KV cache (the
+            # int8 arm quantizes the fp32 tree itself)
+            arm_params = jax.tree.map(
+                lambda a: a.astype(jnp.bfloat16)
+                if a.dtype == jnp.float32 else a, params)
+            cache_dtype = jnp.bfloat16
+        else:
+            arm_params, cache_dtype = params, jnp.float32
+        eng = ServeEngine(arm_params, cfg,
+                          ServeConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                                      cache_dtype=cache_dtype, quant=quant))
+        _workload(eng)
+        eng.run_until_drained()              # warm: compile tick + buckets
+        acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        eng.accountant = acct
+        eng.metrics_log = []
+        _workload(eng)
+        done = eng.run_until_drained()
+        assert len(done) == N_REQUESTS
+        toks = sum(m.tokens for m in eng.metrics_log)
+        wall = sum(m.wall_s for m in eng.metrics_log)
+        rep = acct.report()
+        return {"decode_tokens": toks,
+                "decode_tokens_per_s": round(toks / wall, 2),
+                "j_per_token": rep["modeled_j_per_token"],
+                "j_per_token_wall": rep["j_per_token"],
+                "bytes_moved": rep["bytes_moved"],
+                "modeled_dram_j": rep["modeled_dram_j"],
+                "modeled_compute_j": rep["modeled_compute_j"],
+                "kv_cache_bytes": eng.kv_cache_bytes,
+                "weight_bytes": eng.weight_bytes}
+
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, 100, size=(25, 8))
+    agreement = token_agreement(params, cfg, prompts, n_tokens=24)
+    res = {
+        "workload": {"requests": N_REQUESTS, "max_tokens": MAX_TOKENS,
+                     "slots": MAX_SLOTS, "backend": jax.default_backend()},
+        "notes": ("j_per_token is the modeled FLOPs + per-byte DRAM energy "
+                  "(core/energy.py, DESIGN.md §12) billed from dtype-aware "
+                  "per-tick traffic; j_per_token_wall is wall-clock x "
+                  "device power on this (CPU test) backend."),
+        "bf16": arm("none"),
+        "int8": arm("int8"),
+        "token_agreement_vs_fp": agreement,
+    }
+    res["kv_cache_bytes_ratio"] = round(
+        res["bf16"]["kv_cache_bytes"] / res["int8"]["kv_cache_bytes"], 2)
+    res["weight_bytes_ratio"] = round(
+        res["bf16"]["weight_bytes"] / res["int8"]["weight_bytes"], 2)
+    res["j_per_token_ratio"] = round(
+        res["bf16"]["j_per_token"] / res["int8"]["j_per_token"], 2)
+    with open(OUT_QUANT_PATH, "w") as f:
+        json.dump(res, f, indent=2)
+    return res
+
+
 def run():
     """benchmarks/run.py hook: name,us_per_call,derived rows."""
     res = bench()
@@ -116,7 +195,20 @@ def run():
 
 
 if __name__ == "__main__":
-    out = bench()
-    print(json.dumps(out, indent=2))
-    print(f"\nwrote {os.path.abspath(OUT_PATH)}")
-    print(f"decode speedup: {out['speedup_decode_tok_s']}x")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quant", choices=("none", "int8"), default="none",
+                    help="int8: benchmark the quantized serving fast path "
+                         "(bf16 vs int8 arms) into BENCH_quant.json")
+    args = ap.parse_args()
+    if args.quant == "int8":
+        out = bench_quant()
+        print(json.dumps(out, indent=2))
+        print(f"\nwrote {os.path.abspath(OUT_QUANT_PATH)}")
+        print(f"KV-cache bytes: {out['kv_cache_bytes_ratio']}x lower; "
+              f"modeled J/token: {out['j_per_token_ratio']}x lower; "
+              f"agreement {out['token_agreement_vs_fp']['agreement']:.2%}")
+    else:
+        out = bench()
+        print(json.dumps(out, indent=2))
+        print(f"\nwrote {os.path.abspath(OUT_PATH)}")
+        print(f"decode speedup: {out['speedup_decode_tok_s']}x")

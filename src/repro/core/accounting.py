@@ -18,7 +18,7 @@ import threading
 import time
 from typing import Dict, Optional
 
-from repro.core import grid, hw, lca, roofline as rl
+from repro.core import energy, grid, hw, lca, roofline as rl
 
 SECONDS_PER_YEAR = 365.0 * 86400.0
 
@@ -50,6 +50,8 @@ class CarbonAccountant:
         self._steps = 0
         self._tokens = 0.0
         self._active_s = 0.0
+        self._bytes_moved = 0.0
+        self._modeled_flops = 0.0
         self._wall_start = time.monotonic()
 
     # -- observation ---------------------------------------------------------
@@ -66,8 +68,20 @@ class CarbonAccountant:
 
     def observe_serve(self, metrics) -> None:
         """Bill one serve-engine tick (serve.StepMetrics-shaped: ``wall_s``
-        wall seconds, ``tokens`` decode tokens) — the live J/token path."""
+        wall seconds, ``tokens`` decode tokens) — the live J/token path.
+
+        Ticks that report dtype-aware traffic (``weight_bytes``/``kv_bytes``)
+        and modeled ``flops`` additionally feed the per-byte DRAM + FLOPs
+        energy model (core.energy, DESIGN.md §12) — the channel where the
+        int8 serving path's byte reduction becomes a visible J/token drop."""
         self.observe_step(metrics.wall_s, n_tokens=float(metrics.tokens))
+        n_bytes = (float(getattr(metrics, "weight_bytes", 0.0))
+                   + float(getattr(metrics, "kv_bytes", 0.0)))
+        flops = float(getattr(metrics, "flops", 0.0))
+        if n_bytes or flops:
+            with self._lock:
+                self._bytes_moved += n_bytes
+                self._modeled_flops += flops
 
     # -- accounting ----------------------------------------------------------
 
@@ -115,9 +129,24 @@ class CarbonAccountant:
             return float("inf")
         return self.embodied_j / dp / SECONDS_PER_YEAR
 
+    @property
+    def modeled_dram_j(self) -> float:
+        return energy.dram_energy_j(self._bytes_moved)
+
+    @property
+    def modeled_compute_j(self) -> float:
+        return energy.compute_energy_j(self._modeled_flops, self._spec)
+
     def report(self) -> Dict:
         op = self.operational_active_j
+        modeled_j = self.modeled_compute_j + self.modeled_dram_j
         return {
+            "bytes_moved": self._bytes_moved,
+            "modeled_flops": self._modeled_flops,
+            "modeled_dram_j": self.modeled_dram_j,
+            "modeled_compute_j": self.modeled_compute_j,
+            "modeled_j_per_token": (modeled_j / self._tokens
+                                    if self._tokens > 0 else None),
             "device": self.config.device,
             "n_devices": self.config.n_devices,
             "grid_mix": self.config.grid_mix,

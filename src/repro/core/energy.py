@@ -123,3 +123,42 @@ def carbon_per_1k_steps(terms: roofline.RooflineTerms, mix: str,
                         power: Optional[hw.PowerStates] = None) -> float:
     """gCO2eq per 1000 steps — the fleet analogue of Table 3's carbon column."""
     return 1000.0 * step_energy(terms, power).carbon_g(mix)
+
+
+# ---------------------------------------------------------------------------
+# Per-byte DRAM term (quantized serving path, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+# The paper's core claim is that per-byte data movement — not FLOPs —
+# dominates edge-inference energy (hence PIM). The serving path makes that
+# measurable: every engine tick reports dtype-aware bytes moved (weights +
+# KV cache) and modeled FLOPs, and the accountant bills
+#
+#     E_modeled = flops * (P_active / peak_flops)  +  bytes * e_dram
+#
+# so J/token visibly drops when the int8 path halves-to-quarters the bytes
+# while leaving FLOPs unchanged. Access-energy constants are literature
+# order-of-magnitude values (pJ/byte): HBM2E ~3.9 pJ/bit, LPDDR4 ~8 pJ/bit
+# (the edge case), DDR4 ~15 pJ/bit.
+
+DRAM_PJ_PER_BYTE = {"hbm2e": 31.0, "lpddr4": 64.0, "ddr4": 120.0}
+
+
+def dram_energy_j(n_bytes: float, kind: str = "hbm2e") -> float:
+    """Energy to move ``n_bytes`` through the memory interface."""
+    return float(n_bytes) * DRAM_PJ_PER_BYTE[kind] * 1e-12
+
+
+def compute_energy_j(flops: float,
+                     spec: Optional[hw.DeviceSpec] = None) -> float:
+    """Compute-side energy at peak-rate efficiency (active power / peak
+    FLOPs — ~1 pJ/FLOP on TPU v5e). Devices without a published peak fall
+    back to the TPU constants."""
+    spec = spec if spec is not None and spec.peak_flops else hw.TPU_V5E
+    return float(flops) * spec.power.active_w / spec.peak_flops
+
+
+def modeled_serve_energy_j(flops: float, n_bytes: float,
+                           spec: Optional[hw.DeviceSpec] = None,
+                           dram: str = "hbm2e") -> float:
+    """FLOPs + per-byte DRAM energy for one serving interval."""
+    return compute_energy_j(flops, spec) + dram_energy_j(n_bytes, dram)

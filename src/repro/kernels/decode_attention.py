@@ -8,6 +8,13 @@ dead slot (``lengths[b] == 0``) — are skipped with ``pl.when``, so draining
 batches and short sequences cost no FLOPs instead of computing masked-out
 attention the way a dense XLA decode does.
 
+**Int8 KV mode** (the quantized serving fast path, DESIGN.md §12): when
+``k_scale``/``v_scale`` are given, K/V arrive int8 with one fp32 scale per
+(slot, position, kv-head) and are dequantized *inside the kernel body*,
+tile by tile, right after the HBM->VMEM DMA — the full-precision cache
+never exists in memory, so per-tick KV traffic drops ~4x vs fp32 (the
+paper's bytes-dominate-energy argument applied to the decode hot loop).
+
 Grid: (batch, kv_heads, Sk/bk) with the K sweep innermost; the ``rep``
 query heads of one KV head are processed together as the MXU's M dimension.
 Lengths ride in scalar-prefetch SMEM so the skip test is resolved before the
@@ -15,7 +22,7 @@ block's compute issues.
 
 Supports causal semantics implicitly (the query is the newest position) and
 sliding windows. Validated in interpret mode against a masked SDPA oracle
-(tests/test_serve_core.py).
+(tests/test_serve_core.py, tests/test_kernels_int8.py).
 """
 
 from __future__ import annotations
@@ -30,9 +37,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                   *, scale: float, window: int, block_k: int,
-                   n_k_blocks: int):
+def _decode_kernel(len_ref, *refs, scale: float, window: int, block_k: int,
+                   n_k_blocks: int, quantized: bool):
+    if quantized:
+        q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
     bi, ki = pl.program_id(0), pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -54,6 +65,9 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale          # (rep, d)
         k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        if quantized:
+            # in-kernel dequant: per-row fp32 scale, applied in-register
+            k = k * ks_ref[0, 0]                             # (bk, 1)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         s = jnp.where(valid, s, NEG_INF)                     # (rep, bk)
@@ -63,6 +77,8 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
         v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        if quantized:
+            v = v * vs_ref[0, 0]                             # (bk, 1)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
             p, v, preferred_element_type=jnp.float32)
         m_ref[...] = m_new
@@ -77,35 +93,52 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                                              "interpret"))
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      lengths: jnp.ndarray, *, scale: float, window: int = -1,
-                     block_k: int = 128,
-                     interpret: bool = False) -> jnp.ndarray:
+                     block_k: int = 128, interpret: bool = False,
+                     k_scale=None, v_scale=None) -> jnp.ndarray:
     """q: (B, H, D) one token per row; k/v: (B, Sk, Hkv, D); lengths: (B,).
+
+    ``k_scale``/``v_scale`` (B, Sk, Hkv) fp32 switch on int8-KV mode: k/v are
+    int8 codes dequantized inside the kernel (pass both or neither).
 
     Sk % block_k == 0 (ops.py pads otherwise; padded keys sit past every
     length so the length test masks them). Dead slots (length 0) return 0.
-    Returns (B, H, D) in q.dtype.
+    Returns (B, H, D) in q.dtype (fp32 for int8 queries).
     """
     b, h, d = q.shape
     _, sk, hkv, _ = k.shape
     assert h % hkv == 0, (h, hkv)
     rep = h // hkv
     assert sk % block_k == 0, (sk, block_k)
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), "pass both scales or neither"
     nk = sk // block_k
 
     qg = q.reshape(b, hkv, rep, d)
     kt = k.transpose(0, 2, 1, 3)               # (B, Hkv, Sk, D)
     vt = v.transpose(0, 2, 1, 3)
 
+    kv_spec = pl.BlockSpec((1, 1, block_k, d),
+                           lambda bi, hi, ki, lens: (bi, hi, ki, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, rep, d), lambda bi, hi, ki, lens: (bi, hi, 0, 0)),
+        kv_spec,
+    ]
+    operands = [qg, kt]
+    if quantized:
+        sc_spec = pl.BlockSpec((1, 1, block_k, 1),
+                               lambda bi, hi, ki, lens: (bi, hi, ki, 0))
+        kst = k_scale.astype(jnp.float32).transpose(0, 2, 1)[..., None]
+        vst = v_scale.astype(jnp.float32).transpose(0, 2, 1)[..., None]
+        in_specs += [sc_spec, kv_spec, sc_spec]
+        operands += [kst, vt, vst]
+    else:
+        in_specs += [kv_spec]
+        operands += [vt]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, hkv, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, rep, d), lambda bi, hi, ki, lens: (bi, hi, 0, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda bi, hi, ki, lens: (bi, hi, ki, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda bi, hi, ki, lens: (bi, hi, ki, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, rep, d),
                                lambda bi, hi, ki, lens: (bi, hi, 0, 0)),
         scratch_shapes=[
@@ -114,11 +147,13 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pltpu.VMEM((rep, d), jnp.float32),     # output accumulator
         ],
     )
+    out_dtype = jnp.float32 if q.dtype == jnp.int8 else q.dtype
     out = pl.pallas_call(
         functools.partial(_decode_kernel, scale=scale, window=window,
-                          block_k=block_k, n_k_blocks=nk),
+                          block_k=block_k, n_k_blocks=nk,
+                          quantized=quantized),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), out_dtype),
         interpret=interpret,
-    )(lengths.astype(jnp.int32), qg, kt, vt)
+    )(lengths.astype(jnp.int32), *operands)
     return out.reshape(b, h, d)

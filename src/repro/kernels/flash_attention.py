@@ -26,9 +26,14 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  scale: float, causal: bool, window: int,
-                  block_q: int, block_k: int, n_k_blocks: int):
+def _flash_kernel(*refs, scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, n_k_blocks: int,
+                  quantized: bool = False):
+    if quantized:
+        q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
     qi, ki = pl.program_id(2), pl.program_id(3)
 
     @pl.when(ki == 0)
@@ -51,6 +56,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale         # (bq, d)
         k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        if quantized:
+            # int8-KV fast path: per-row fp32 scale applied in-register,
+            # right after the narrow HBM->VMEM DMA (DESIGN.md §12)
+            k = k * ks_ref[0, 0]                            # (bk, 1)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         s = jnp.where(mask, s, NEG_INF)
@@ -60,6 +69,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         alpha = jnp.exp(m_prev - m_new)                     # (bq, 1)
         l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
         v = v_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        if quantized:
+            v = v * vs_ref[0, 0]                            # (bk, 1)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
             p, v, preferred_element_type=jnp.float32)
         m_ref[...] = m_new
@@ -75,8 +86,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     scale: float, causal: bool = True, window: int = -1,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = False) -> jnp.ndarray:
+                    interpret: bool = False,
+                    k_scale=None, v_scale=None) -> jnp.ndarray:
     """q: (B, Sq, H, D), k/v: (B, Sk, Hkv, D) with H % Hkv == 0.
+
+    ``k_scale``/``v_scale`` (B, Sk, Hkv) fp32 switch on int8-KV mode: k/v
+    are int8 codes dequantized tile-by-tile inside the kernel body (pass
+    both or neither) — full-precision K/V never round-trip through memory.
 
     Sq % block_q == 0 and Sk % block_k == 0 (ops.py pads otherwise).
     Returns (B, Sq, H, D) in q.dtype.
@@ -86,6 +102,8 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     assert h % hkv == 0, (h, hkv)
     rep = h // hkv
     assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), "pass both scales or neither"
     nq, nk = sq // block_q, sk // block_k
 
     # layout: heads-major so each (b, h) pair owns contiguous seq blocks
@@ -93,18 +111,31 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     kt = k.transpose(0, 2, 1, 3)       # (B, Hkv, Sk, D)
     vt = v.transpose(0, 2, 1, 3)
 
+    kv_spec = pl.BlockSpec((1, 1, block_k, d),
+                           lambda bi, hi, qi, ki, rep=rep: (bi, hi // rep, ki, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        kv_spec,
+    ]
+    operands = [qt, kt]
+    if quantized:
+        sc_spec = pl.BlockSpec(
+            (1, 1, block_k, 1),
+            lambda bi, hi, qi, ki, rep=rep: (bi, hi // rep, ki, 0))
+        kst = k_scale.astype(jnp.float32).transpose(0, 2, 1)[..., None]
+        vst = v_scale.astype(jnp.float32).transpose(0, 2, 1)[..., None]
+        in_specs += [sc_spec, kv_spec, sc_spec]
+        operands += [kst, vt, vst]
+    else:
+        in_specs += [kv_spec]
+        operands += [vt]
+
     out = pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale, causal=causal,
                           window=window, block_q=block_q, block_k=block_k,
-                          n_k_blocks=nk),
+                          n_k_blocks=nk, quantized=quantized),
         grid=(b, h, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda bi, hi, qi, ki, rep=rep: (bi, hi // rep, ki, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda bi, hi, qi, ki, rep=rep: (bi, hi // rep, ki, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, block_q, d),
                                lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
@@ -114,5 +145,5 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
         ],
         interpret=interpret,
-    )(qt, kt, vt)
+    )(*operands)
     return out.transpose(0, 2, 1, 3)

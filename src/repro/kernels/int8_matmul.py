@@ -1,0 +1,81 @@
+"""Fused int8-weight matmul Pallas TPU kernel (quantized serving fast path).
+
+The paper's PIM argument — per-byte data movement, not FLOPs, bounds edge
+inference — maps onto a TPU as: keep weights **int8 in HBM** (4x less DMA
+traffic than fp32, 2x less than bf16), widen to the compute dtype
+*in-register* after the HBM->VMEM pipe, and apply the per-output-channel
+fp32 scale once per (bm, bn) output tile on the VPU. Full-precision weights
+never exist in memory; the only wide tensor is the fp32 accumulator tile in
+VMEM scratch. Structure mirrors ternary_matmul.py (DESIGN.md §2/§12) with
+the sign-plane select generalized to the full int8 code range.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; fp32 accumulator lives in VMEM
+scratch across the K sweep. Block sizes default to MXU-aligned 128/256/512.
+
+Validated in interpret mode against a dequantize->matmul oracle
+(tests/test_kernels_int8.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _int8_matmul_kernel(x_ref, q_ref, scale_ref, o_ref, acc_ref, *,
+                        n_k_blocks: int):
+    """One (bm, bn) output tile; program_id(2) sweeps K blocks."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    # in-register dequant: the int8 tile widens to x.dtype on the VPU after
+    # the (narrow) HBM->VMEM DMA, then feeds a fp32-accumulating MXU dot.
+    q = q_ref[...].astype(x.dtype)
+    acc_ref[...] += jax.lax.dot(x, q, preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k_blocks - 1)
+    def _finish():
+        scale = scale_ref[...].astype(jnp.float32)          # (1, bn)
+        o_ref[...] = (acc_ref[...] * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret", "out_dtype"))
+def int8_matmul(x: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray, *,
+                block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                interpret: bool = False,
+                out_dtype=None) -> jnp.ndarray:
+    """y[m,n] = (sum_k x[m,k] * q[k,n]) * scale[n], q int8, scale fp32.
+
+    Shapes must be multiples of the block sizes (ops.py pads otherwise).
+    """
+    m, k = x.shape
+    k2, n = q.shape
+    assert k == k2 and scale.shape == (n,), (x.shape, q.shape, scale.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, n, k), (block_m, block_n, block_k))
+    assert q.dtype == jnp.int8, q.dtype
+    out_dtype = out_dtype or x.dtype
+    nk = k // block_k
+
+    return pl.pallas_call(
+        functools.partial(_int8_matmul_kernel, n_k_blocks=nk),
+        grid=(m // block_m, n // block_n, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, q, scale.reshape(1, n))

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
+from repro.kernels import int8_matmul as _im
 from repro.kernels import ternary_matmul as _tm
 from repro.kernels import ref as _ref
 from repro.quant.ternary import TernaryWeight
@@ -35,24 +36,35 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0) -> jnp.ndarray:
     return jnp.pad(x, widths, constant_values=value)
 
 
+def _tiled_matmul_call(kernel, x: jnp.ndarray, q: jnp.ndarray,
+                       scale: jnp.ndarray, block_m: int, block_n: int,
+                       block_k: int, interpret: bool) -> jnp.ndarray:
+    """Shared pad-and-launch wrapper for the quantized matmul kernels:
+    flattens leading dims, derives a sublane-aligned small-batch M tile,
+    pads every operand to block multiples, and slices the result back."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = q.shape[-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    # small-batch inference tiles, kept sublane-aligned (multiples of 8)
+    bm = min(block_m, max(8, -(-m // 8) * 8))
+    x2 = _pad_to(_pad_to(x2, 0, bm), 1, block_k)
+    qp = _pad_to(_pad_to(q, 0, block_k), 1, block_n)
+    sp = _pad_to(scale, 0, block_n)
+    y = kernel(x2, qp, sp, block_m=bm, block_n=block_n, block_k=block_k,
+               interpret=interpret, out_dtype=x.dtype)
+    return y[:m, :n].reshape(*lead, n)
+
+
 def ternary_matmul(x: jnp.ndarray, w: TernaryWeight, *,
                    block_m: int = 128, block_n: int = 128, block_k: int = 512,
                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """x: (..., K) @ ternary weight (K, N) -> (..., N)."""
     interpret = (not _on_tpu()) if interpret is None else interpret
-    lead = x.shape[:-1]
-    k = x.shape[-1]
-    n = w.q.shape[-1]
-    x2 = x.reshape(-1, k)
-    m = x2.shape[0]
-    bm = min(block_m, max(8, m))        # small-batch inference tiles
-    x2 = _pad_to(_pad_to(x2, 0, bm), 1, block_k)
-    qp = _pad_to(_pad_to(w.q, 0, block_k), 1, block_n)
-    sp = _pad_to(w.scale.reshape(-1), 0, block_n)
-    y = _tm.ternary_matmul(x2, qp, sp, block_m=bm, block_n=block_n,
-                           block_k=block_k, interpret=interpret,
-                           out_dtype=x.dtype)
-    return y[:m, :n].reshape(*lead, n)
+    return _tiled_matmul_call(_tm.ternary_matmul, x, w.q,
+                              w.scale.reshape(-1), block_m, block_n,
+                              block_k, interpret)
 
 
 def ternary_dense(x: jnp.ndarray, w: TernaryWeight, bias=None, **kw) -> jnp.ndarray:
@@ -62,11 +74,34 @@ def ternary_dense(x: jnp.ndarray, w: TernaryWeight, bias=None, **kw) -> jnp.ndar
     return y
 
 
+def int8_matmul(x: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray, *,
+                block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """x: (..., K) @ int8 weight (K, N) with per-channel scale -> (..., N).
+
+    ``scale`` may be () per-tensor, (N,) per-channel, or any keepdims shape
+    broadcastable to (1, N) (quant.int8.quantize_weight's ``s8``).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n = q.shape[1]
+    sc = jnp.broadcast_to(scale.astype(jnp.float32).reshape(-1, n)
+                          if scale.ndim else scale.astype(jnp.float32),
+                          (1, n)).reshape(n)
+    return _tiled_matmul_call(_im.int8_matmul, x, q, sc, block_m, block_n,
+                              block_k, interpret)
+
+
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     scale: Optional[float] = None, causal: bool = True,
                     window: int = -1, block_q: int = 128, block_k: int = 128,
-                    interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Padded/GQA-aware flash attention. q (B,Sq,H,D), k/v (B,Sk,Hkv,D)."""
+                    interpret: Optional[bool] = None,
+                    k_scale: Optional[jnp.ndarray] = None,
+                    v_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Padded/GQA-aware flash attention. q (B,Sq,H,D), k/v (B,Sk,Hkv,D).
+
+    ``k_scale``/``v_scale`` (B, Sk, Hkv) enable int8-KV mode (k/v int8
+    codes, dequantized inside the kernel body).
+    """
     interpret = (not _on_tpu()) if interpret is None else interpret
     b, sq, h, d = q.shape
     sk = k.shape[1]
@@ -79,26 +114,40 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     # every real query iff sq <= sk; otherwise (non-causal, or causal with
     # q positions past sk) they would be attended — dispatch to the reference
     # path BEFORE launching the kernel (these ragged encoder shapes are small).
+    assert (k_scale is None) == (v_scale is None), \
+        "pass both KV scales or neither"
     if (-sk) % bk != 0 and (not causal or sq > sk):
+        if k_scale is not None:
+            from repro.quant.int8 import dequantize_rowwise
+            k = dequantize_rowwise(k, k_scale, dtype=q.dtype)
+            v = dequantize_rowwise(v, v_scale, dtype=q.dtype)
         return _ref.attention_ref(q, k, v, scale=scale, causal=causal,
                                   window=window)
     qp = _pad_to(q, 1, bq)
     kp = _pad_to(k, 1, bk)
     vp = _pad_to(v, 1, bk)
+    if k_scale is not None:
+        k_scale = _pad_to(k_scale, 1, bk)
+        v_scale = _pad_to(v_scale, 1, bk)
     out = _fa.flash_attention(qp, kp, vp, scale=scale, causal=causal,
                               window=window, block_q=bq, block_k=bk,
-                              interpret=interpret)
+                              interpret=interpret,
+                              k_scale=k_scale, v_scale=v_scale)
     return out[:, :sq]
 
 
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      lengths: jnp.ndarray, *, scale: Optional[float] = None,
                      window: int = -1, block_k: int = 128,
-                     interpret: Optional[bool] = None) -> jnp.ndarray:
+                     interpret: Optional[bool] = None,
+                     k_scale: Optional[jnp.ndarray] = None,
+                     v_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Serve-core decode attention with per-slot lengths.
 
     q: (B, H, D) — the one new token per slot; k/v: (B, Sk, Hkv, D) slot-major
     KV cache; lengths: (B,) valid prefix per slot (0 = dead slot -> zeros).
+    ``k_scale``/``v_scale`` (B, Sk, Hkv) enable the int8-KV cache mode: k/v
+    are int8 codes dequantized inside the kernel body (DESIGN.md §12).
     Pads Sk up to a block multiple; padded keys sit past every length so the
     kernel's length test masks them.
     """
@@ -109,9 +158,15 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     bk = min(block_k, _round_up_pow2(sk))
     kp = _pad_to(k, 1, bk)
     vp = _pad_to(v, 1, bk)
+    assert (k_scale is None) == (v_scale is None), \
+        "pass both KV scales or neither"
+    if k_scale is not None:
+        k_scale = _pad_to(k_scale, 1, bk)
+        v_scale = _pad_to(v_scale, 1, bk)
     return _da.decode_attention(q, kp, vp, lengths, scale=scale,
                                 window=window, block_k=bk,
-                                interpret=interpret)
+                                interpret=interpret,
+                                k_scale=k_scale, v_scale=v_scale)
 
 
 def _round_up_pow2(n: int) -> int:

@@ -30,6 +30,9 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--policy", default="fifo",
                     choices=("fifo", "longest_prompt"))
+    ap.add_argument("--quant", default="none", choices=("none", "int8"),
+                    help="int8: serve through the quantized fast path "
+                         "(int8 weights + int8 KV cache, DESIGN.md §12)")
     args = ap.parse_args()
 
     if not args.smoke:
@@ -46,7 +49,8 @@ def main() -> None:
         device="tpu_v5e", n_devices=jax.device_count(), grid_mix=args.grid_mix))
     eng = ServeEngine(params, cfg,
                       ServeConfig(max_slots=args.slots, max_len=256,
-                                  temperature=args.temperature),
+                                  temperature=args.temperature,
+                                  quant=args.quant),
                       accountant=acct,
                       scheduler=Scheduler(SchedulerConfig(policy=args.policy)))
     rng = np.random.default_rng(0)
@@ -64,6 +68,10 @@ def main() -> None:
     jpt = rep.get("j_per_token")
     if jpt is not None:
         print(f"live J/token: {jpt:.3f}")
+    mjpt = rep.get("modeled_j_per_token")
+    if mjpt is not None:
+        print(f"modeled (FLOPs+DRAM) J/token: {mjpt:.3e} "
+              f"({rep['bytes_moved']:.3g} bytes moved)")
     print("carbon report:", json.dumps(rep, default=float))
 
 

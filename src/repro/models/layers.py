@@ -23,10 +23,32 @@ from repro.parallel.ctx import constrain
 def wl(w, dtype):
     """Weight loader: dequantize int8-served weights at use (fused into the
     consuming matmul's operand load on TPU; the paper's C5 quantized
-    inference — see quant.int8.quantize_params_for_serving)."""
+    inference — see quant.int8.quantize_params_for_serving /
+    quantize_weight). ``s8`` is a scalar, per-layer, or keepdims per-channel
+    scale — all broadcast against ``q8``."""
     if isinstance(w, dict) and "q8" in w:
         return w["q8"].astype(dtype) * w["s8"].astype(dtype)
     return w.astype(dtype)
+
+
+def q8_matmul(x: jnp.ndarray, w: dict, contract_ndim: int = 1) -> jnp.ndarray:
+    """x (..., contract dims) @ int8-quantized weight via the fused Pallas
+    kernel (kernels/int8_matmul.py): int8 loads from HBM, in-register widen,
+    per-channel scale on the output tile. The quantized serving fast path's
+    weight matmul (DESIGN.md §12); the XLA fallback is wl()+einsum.
+
+    ``w`` is {"q8","s8"} with the first ``contract_ndim`` dims contracted;
+    returns (..., *w.shape[contract_ndim:]).
+    """
+    from repro.kernels import ops as kops
+    q = w["q8"]
+    kdim = math.prod(q.shape[:contract_ndim])
+    out_shape = q.shape[contract_ndim:]
+    sv = jnp.broadcast_to(w["s8"], (1,) * contract_ndim + out_shape)
+    lead = x.shape[:-contract_ndim]
+    y = kops.int8_matmul(x.reshape(*lead, kdim), q.reshape(kdim, -1),
+                         sv.reshape(-1))
+    return y.reshape(*lead, *out_shape)
 
 
 # -----------------------------------------------------------------------------
@@ -157,9 +179,17 @@ def init_mlp(key, d: int, d_ff: int, *, gated: bool = True,
     return common.group_dict(parts)
 
 
-def mlp(params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+def mlp(params, x: jnp.ndarray, act: str = "silu",
+        int8_kernel: bool = False) -> jnp.ndarray:
     act_fn = {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True),
               "relu": jax.nn.relu}[act]
+    if int8_kernel and isinstance(params["w_in"], dict) and "q8" in params["w_in"]:
+        h = q8_matmul(x, params["w_in"])
+        if "w_gate" in params:
+            h = act_fn(q8_matmul(x, params["w_gate"])) * h
+        else:
+            h = act_fn(h)
+        return q8_matmul(h, params["w_out"])
     h = jnp.einsum("...d,df->...f", x, wl(params["w_in"], x.dtype))
     if "w_gate" in params:
         g = jnp.einsum("...d,df->...f", x, wl(params["w_gate"], x.dtype))
@@ -237,6 +267,10 @@ class AttnConfig:
     # model axis (context parallelism) — the TP fallback for archs whose head
     # counts don't divide the mesh (starcoder2 36H, whisper 20H); §Perf HC-A
     sp: bool = False
+    # route int8-quantized projection matmuls through the fused Pallas
+    # int8 kernel (set by LMConfig.attn_cfg on the quantized serving fast
+    # path; XLA dequant+einsum elsewhere)
+    int8_kernel: bool = False
 
     @property
     def scale(self) -> float:
@@ -263,10 +297,19 @@ def init_attention(key, cfg: AttnConfig, dtype=jnp.float32) -> Axed:
     return common.group_dict(parts)
 
 
+def _q8_active(cfg, w) -> bool:
+    return cfg.int8_kernel and isinstance(w, dict) and "q8" in w
+
+
 def _project_qkv(params, cfg: AttnConfig, x: jnp.ndarray, positions):
-    q = jnp.einsum("bsd,dhk->bshk", x, wl(params["wq"], x.dtype))
-    k = jnp.einsum("bsd,dhk->bshk", x, wl(params["wk"], x.dtype))
-    v = jnp.einsum("bsd,dhk->bshk", x, wl(params["wv"], x.dtype))
+    if _q8_active(cfg, params["wq"]):
+        q = q8_matmul(x, params["wq"])
+        k = q8_matmul(x, params["wk"])
+        v = q8_matmul(x, params["wv"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, wl(params["wq"], x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", x, wl(params["wk"], x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, wl(params["wv"], x.dtype))
     if cfg.qkv_bias:
         q = q + params["bq"].astype(q.dtype)
         k = k + params["bk"].astype(k.dtype)
@@ -371,6 +414,8 @@ def attention(params, cfg: AttnConfig, x: jnp.ndarray,
     else:
         mask = attention_mask(pos1d, pos1d, causal=cfg.causal, window=w)
         out = sdpa(q, k, v, mask, cfg.scale)
+    if _q8_active(cfg, params["wo"]):
+        return q8_matmul(out, params["wo"], contract_ndim=2)
     return jnp.einsum("bshk,hkd->bsd", out, wl(params["wo"], out.dtype))
 
 

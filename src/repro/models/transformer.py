@@ -46,6 +46,33 @@ class BlockSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Serving-time quantization policy (DESIGN.md §12).
+
+    ``weights``: "none" | "int8" — int8 keeps linear-layer weights int8 in
+    HBM with per-output-channel fp32 scales (quantize_lm); embeddings,
+    norms, and routers stay high-precision.
+    ``kv``: "none" | "int8" — int8 stores the KV cache as (int8 codes,
+    one fp32 scale per (slot, position, kv-head)); dequant happens inside
+    the attention kernel body, so full-precision K/V never round-trip
+    through memory.
+    """
+    weights: str = "none"
+    kv: str = "none"
+
+    @property
+    def weights_int8(self) -> bool:
+        return self.weights == "int8"
+
+    @property
+    def kv_int8(self) -> bool:
+        return self.kv == "int8"
+
+
+INT8_QUANT = QuantPolicy(weights="int8", kv="int8")
+
+
+@dataclasses.dataclass(frozen=True)
 class LMConfig:
     name: str
     d_model: int
@@ -87,6 +114,9 @@ class LMConfig:
     # the Pallas decode kernel (kernels/decode_attention.py). Off by default —
     # the serving engine flips it on for TPU backends (DESIGN.md §serve)
     decode_kernel: bool = False
+    # serving-time quantization policy (DESIGN.md §12): int8 weights and/or
+    # int8 KV cache. The serving engine sets this from ServeConfig.quant.
+    quant: QuantPolicy = QuantPolicy()
 
     @property
     def padded_vocab(self) -> int:
@@ -101,13 +131,20 @@ class LMConfig:
     def resolved_head_dim(self) -> int:
         return self.head_dim or self.d_model // self.n_heads
 
+    @property
+    def use_int8_matmul(self) -> bool:
+        """Fused Pallas int8 matmul on the quantized fast path; XLA
+        dequant+einsum elsewhere (CPU tests, unquantized serving)."""
+        return self.quant.weights_int8 and self.decode_kernel
+
     def attn_cfg(self, window: int = -1) -> AttnConfig:
         return AttnConfig(
             d_model=self.d_model, n_heads=self.n_heads,
             n_kv_heads=self.n_kv_heads, head_dim=self.resolved_head_dim,
             qkv_bias=self.qkv_bias, rope_theta=self.rope_theta,
             causal=True, window=window, pos_emb=self.pos_emb,
-            mrope_sections=self.mrope_sections, sp=self.sp_attention)
+            mrope_sections=self.mrope_sections, sp=self.sp_attention,
+            int8_kernel=self.use_int8_matmul)
 
 
 # -----------------------------------------------------------------------------
@@ -165,6 +202,46 @@ def init_lm(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Axed:
     return group_dict(parts)
 
 
+def quantize_lm(params: PyTree) -> PyTree:
+    """Weight-tree int8 quantization for serving (QuantPolicy.weights_int8).
+
+    Linear-layer leaves (quant.int8.SERVING_QUANT_KEYS) become
+    ``{"q8": int8, "s8": fp32}`` with **per-output-channel** scales;
+    embeddings, norms, and routers pass through untouched. Structure-aware:
+    ``pat*`` groups carry a leading repeats dim and ``moe`` groups a leading
+    expert dim — both are kept as independent scale dims, never reduced
+    over. Consumed transparently by models.layers.wl (XLA dequant+einsum)
+    or layers.q8_matmul (fused Pallas kernel) on the serving fast path.
+    """
+    from repro.quant import int8 as int8_lib
+
+    def walk(p: dict, lead: int) -> dict:
+        out = {}
+        for k, v in p.items():
+            if isinstance(v, dict):
+                if "q8" in v:           # already quantized
+                    out[k] = v
+                elif k == "ssd":
+                    # SSD blocks consume projections without the wl()
+                    # dequant seam (and their state is not a KV cache) —
+                    # they stay full precision
+                    out[k] = v
+                else:
+                    out[k] = walk(v, lead + (1 if k == "moe" else 0))
+            elif (k in int8_lib.SERVING_QUANT_KEYS
+                  and getattr(v, "ndim", 0) >= lead + 2):
+                out_dims = min(int8_lib.weight_out_dims(k), v.ndim - lead - 1)
+                out[k] = int8_lib.quantize_weight(v, lead=lead,
+                                                  out_dims=out_dims)
+            else:
+                out[k] = v
+        return out
+
+    return {k: (walk(v, 1 if k.startswith("pat") else 0)
+                if isinstance(v, dict) else v)
+            for k, v in params.items()}
+
+
 # -----------------------------------------------------------------------------
 # Block application (full-sequence)
 # -----------------------------------------------------------------------------
@@ -180,7 +257,8 @@ def _apply_block(params, shared_params, cfg: LMConfig, spec: BlockSpec,
         x = x + layers.attention(p["attn"], acfg, h, positions)
         if spec.shared_attn:
             h = layers.rms_norm(p["norm_ffn"], x)
-            x = x + layers.mlp(p["mlp"], h, cfg.act)
+            x = x + layers.mlp(p["mlp"], h, cfg.act,
+                               int8_kernel=cfg.use_int8_matmul)
             return x, aux
     elif spec.kind == "ssd":
         h = layers.rms_norm(params["norm_ssd"], x)
@@ -192,7 +270,8 @@ def _apply_block(params, shared_params, cfg: LMConfig, spec: BlockSpec,
                                           cfg.moe_group_size)
             x = x + y
         else:
-            x = x + layers.mlp(params["mlp"], h, cfg.act)
+            x = x + layers.mlp(params["mlp"], h, cfg.act,
+                               int8_kernel=cfg.use_int8_matmul)
     if cfg.sp_residual:
         x = constrain(x, "batch", "seq_tp", None)
     return x, aux
@@ -298,20 +377,32 @@ def _cache_len(cfg: LMConfig, spec: BlockSpec, max_len: int) -> int:
 
 def init_caches(cfg: LMConfig, batch: int, max_len: int,
                 dtype=jnp.bfloat16) -> Dict[str, PyTree]:
-    """Cache pytree: pattern positions stacked over repeats, tail single."""
+    """Cache pytree: pattern positions stacked over repeats, tail single.
+
+    Under ``cfg.quant.kv_int8`` the K/V arrays are int8 codes and each attn
+    cache gains a ``kv_scale`` pair — one fp32 scale per (slot, position,
+    kv-head) — so the resident cache is ~4x smaller than fp32 (``dtype`` is
+    ignored for K/V in that mode).
+    """
     caches: Dict[str, PyTree] = {}
     kvh, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    kv_dtype = jnp.int8 if cfg.quant.kv_int8 else dtype
 
     def one(spec: BlockSpec, stacked: bool):
         if spec.kind == "attn":
             clen = _cache_len(cfg, spec, max_len)
             shape = (cfg.repeats,) if stacked else ()
             kv = KVCache(
-                k=jnp.zeros(shape + (batch, clen, kvh, dh), dtype),
-                v=jnp.zeros(shape + (batch, clen, kvh, dh), dtype))
+                k=jnp.zeros(shape + (batch, clen, kvh, dh), kv_dtype),
+                v=jnp.zeros(shape + (batch, clen, kvh, dh), kv_dtype))
             # per-row ring position tags (rows decode at independent positions
             # under the serving engine's vmapped path)
             pos = jnp.full(shape + (batch, clen), -1, jnp.int32)
+            if cfg.quant.kv_int8:
+                sc = KVCache(
+                    k=jnp.zeros(shape + (batch, clen, kvh), jnp.float32),
+                    v=jnp.zeros(shape + (batch, clen, kvh), jnp.float32))
+                return {"kv": kv, "kv_scale": sc, "pos": pos}
             return {"kv": kv, "pos": pos}
         st = ssd_lib.init_ssd_state(cfg.ssd_cfg, batch, dtype)
         if stacked:
@@ -336,6 +427,7 @@ def _decode_attn(p, cfg: LMConfig, spec: BlockSpec, x, cache, pos):
     acfg = cfg.attn_cfg(spec.window)
     b = x.shape[0]
     kv, pos_tags = cache["kv"], cache["pos"]
+    kv_int8 = "kv_scale" in cache
     clen = kv.k.shape[1]
     batched_pos = pos.ndim > 0
     if batched_pos:
@@ -345,37 +437,74 @@ def _decode_attn(p, cfg: LMConfig, spec: BlockSpec, x, cache, pos):
     if cfg.pos_emb == "mrope":
         positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
     q, k_new, v_new = layers._project_qkv(p["attn"], acfg, x, positions)
+    if kv_int8:
+        # per-(row, head) int8: the cache stores codes + one fp32 scale per
+        # (slot, position, kv-head); full-precision K/V exist only for the
+        # one new token, in registers
+        from repro.quant import int8 as int8_lib
+        sc = cache["kv_scale"]
+        k_q, k_s = int8_lib.quantize_rowwise(k_new)     # (B,1,H,D),(B,1,H)
+        v_q, v_s = int8_lib.quantize_rowwise(v_new)
     if batched_pos:
         # per-row ring slot: one scatter row per sequence
         slot = (pos % clen).astype(jnp.int32)                  # (B,)
         rows = jnp.arange(b)
-        k = kv.k.at[rows, slot].set(k_new[:, 0].astype(kv.k.dtype))
-        v = kv.v.at[rows, slot].set(v_new[:, 0].astype(kv.v.dtype))
+        if kv_int8:
+            k = kv.k.at[rows, slot].set(k_q[:, 0])
+            v = kv.v.at[rows, slot].set(v_q[:, 0])
+            k_scale = sc.k.at[rows, slot].set(k_s[:, 0])
+            v_scale = sc.v.at[rows, slot].set(v_s[:, 0])
+        else:
+            k = kv.k.at[rows, slot].set(k_new[:, 0].astype(kv.k.dtype))
+            v = kv.v.at[rows, slot].set(v_new[:, 0].astype(kv.v.dtype))
         pos_tags = pos_tags.at[rows, slot].set(pos.astype(jnp.int32))
     else:
         slot = pos % clen      # ring slot; == pos when the cache is full-length
-        k = jax.lax.dynamic_update_slice(kv.k, k_new.astype(kv.k.dtype),
-                                         (0, slot, 0, 0))
-        v = jax.lax.dynamic_update_slice(kv.v, v_new.astype(kv.v.dtype),
-                                         (0, slot, 0, 0))
+        if kv_int8:
+            k = jax.lax.dynamic_update_slice(kv.k, k_q, (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(kv.v, v_q, (0, slot, 0, 0))
+            k_scale = jax.lax.dynamic_update_slice(sc.k, k_s, (0, slot, 0))
+            v_scale = jax.lax.dynamic_update_slice(sc.v, v_s, (0, slot, 0))
+        else:
+            k = jax.lax.dynamic_update_slice(kv.k, k_new.astype(kv.k.dtype),
+                                             (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(kv.v, v_new.astype(kv.v.dtype),
+                                             (0, slot, 0, 0))
         pos_col = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
         pos_tags = jax.lax.dynamic_update_slice(pos_tags, pos_col, (0, slot))
     q_pos = positions[..., 0] if positions.ndim == 3 else positions
     if batched_pos and cfg.decode_kernel and not cfg.ring_cache:
         # Pallas decode kernel: per-slot lengths => dead/short slots cost no
         # FLOPs. Valid cache rows are the contiguous prefix [0, pos] (the
-        # serving engine's invariant for non-ring caches).
+        # serving engine's invariant for non-ring caches). Int8 caches hand
+        # the kernel codes + scales; dequant happens inside the kernel body.
         from repro.kernels import ops as kops
-        out = kops.decode_attention(q[:, 0], k, v, pos.astype(jnp.int32) + 1,
-                                    scale=acfg.scale,
-                                    window=spec.window)[:, None]
+        out = kops.decode_attention(
+            q[:, 0], k, v, pos.astype(jnp.int32) + 1, scale=acfg.scale,
+            window=spec.window,
+            k_scale=k_scale if kv_int8 else None,
+            v_scale=v_scale if kv_int8 else None)[:, None]
     else:
+        if kv_int8:
+            # XLA fallback: dequantize at use (fused into the attention
+            # matmul's operand load; storage/traffic stays int8)
+            k_at = int8_lib.dequantize_rowwise(k, k_scale, dtype=q.dtype)
+            v_at = int8_lib.dequantize_rowwise(v, v_scale, dtype=q.dtype)
+        else:
+            k_at, v_at = k, v
         mask = layers.attention_mask(q_pos, pos_tags, causal=True,
                                      window=spec.window)
         mask &= (pos_tags >= 0)[:, None, :]
-        out = layers.sdpa(q, k, v, mask, acfg.scale)
-    y = jnp.einsum("bshk,hkd->bsd", out, layers.wl(p["attn"]["wo"], out.dtype))
-    return y, {"kv": KVCache(k=k, v=v), "pos": pos_tags}
+        out = layers.sdpa(q, k_at, v_at, mask, acfg.scale)
+    if layers._q8_active(acfg, p["attn"]["wo"]):
+        y = layers.q8_matmul(out, p["attn"]["wo"], contract_ndim=2)
+    else:
+        y = jnp.einsum("bshk,hkd->bsd", out,
+                       layers.wl(p["attn"]["wo"], out.dtype))
+    new_cache = {"kv": KVCache(k=k, v=v), "pos": pos_tags}
+    if kv_int8:
+        new_cache["kv_scale"] = KVCache(k=k_scale, v=v_scale)
+    return y, new_cache
 
 
 def _decode_block(params, shared_params, cfg: LMConfig, spec: BlockSpec,
@@ -387,7 +516,8 @@ def _decode_block(params, shared_params, cfg: LMConfig, spec: BlockSpec,
         x = x + y
         if spec.shared_attn:
             h = layers.rms_norm(p["norm_ffn"], x)
-            return x + layers.mlp(p["mlp"], h, cfg.act), cache
+            return x + layers.mlp(p["mlp"], h, cfg.act,
+                               int8_kernel=cfg.use_int8_matmul), cache
     else:
         h = layers.rms_norm(params["norm_ssd"], x)
         y, st = ssd_lib.ssd_block_decode(params["ssd"], cfg.ssd_cfg, h,
@@ -401,7 +531,8 @@ def _decode_block(params, shared_params, cfg: LMConfig, spec: BlockSpec,
                                         group_size=h.shape[0] * h.shape[1])
             x = x + y
         else:
-            x = x + layers.mlp(params["mlp"], h, cfg.act)
+            x = x + layers.mlp(params["mlp"], h, cfg.act,
+                               int8_kernel=cfg.use_int8_matmul)
     return x, cache
 
 
@@ -453,8 +584,12 @@ def caches_axes(cfg: LMConfig) -> Dict[str, PyTree]:
         pre = ("stack",) if stacked else ()
         if spec.kind == "attn":
             kv_ax = pre + ("batch", "seq", "kv_heads", "head_dim")
-            return {"kv": {"k": kv_ax, "v": kv_ax},
-                    "pos": pre + ("batch", "seq")}
+            out = {"kv": {"k": kv_ax, "v": kv_ax},
+                   "pos": pre + ("batch", "seq")}
+            if cfg.quant.kv_int8:
+                sc_ax = pre + ("batch", "seq", "kv_heads")
+                out["kv_scale"] = {"k": sc_ax, "v": sc_ax}
+            return out
         st = {"conv_x": ("batch", "conv", "heads", "head_dim"),
               "conv_b": ("batch", "conv", "ssm_group", "ssm_state"),
               "conv_c": ("batch", "conv", "ssm_group", "ssm_state"),
@@ -520,30 +655,58 @@ def prefill(params, cfg: LMConfig, tokens: jnp.ndarray,
             mask = layers.attention_mask(pos1d, pos1d, causal=True,
                                          window=spec.window)
             out = layers.sdpa(q, k, v, mask, acfg.scale)
-        y = jnp.einsum("bshk,hkd->bsd", out, layers.wl(p["attn"]["wo"], out.dtype))
+        if layers._q8_active(acfg, p["attn"]["wo"]):
+            y = layers.q8_matmul(out, p["attn"]["wo"], contract_ndim=2)
+        else:
+            y = jnp.einsum("bshk,hkd->bsd", out,
+                           layers.wl(p["attn"]["wo"], out.dtype))
         kv, pos_tags = cache["kv"], cache["pos"]
+        kv_int8 = "kv_scale" in cache
         clen = kv.k.shape[1]
         bsz = x.shape[0]
+        if kv_int8:
+            # prompt K/V enter the cache quantized: attention above used the
+            # full-precision activations (registers/VMEM), but what lands in
+            # HBM is int8 codes + per-(row, position, head) fp32 scales —
+            # the same representation decode appends (DESIGN.md §12)
+            from repro.quant import int8 as int8_lib
+            k_st, k_sc = int8_lib.quantize_rowwise(k)    # (B,S,H,D),(B,S,H)
+            v_st, v_sc = int8_lib.quantize_rowwise(v)
+        else:
+            k_st, v_st = k, v
         if clen >= s:
-            kc = jax.lax.dynamic_update_slice(kv.k, k.astype(kv.k.dtype), (0, 0, 0, 0))
-            vc = jax.lax.dynamic_update_slice(kv.v, v.astype(kv.v.dtype), (0, 0, 0, 0))
+            kc = jax.lax.dynamic_update_slice(kv.k, k_st.astype(kv.k.dtype),
+                                              (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(kv.v, v_st.astype(kv.v.dtype),
+                                              (0, 0, 0, 0))
+            if kv_int8:
+                ksc = jax.lax.dynamic_update_slice(
+                    cache["kv_scale"].k, k_sc, (0, 0, 0))
+                vsc = jax.lax.dynamic_update_slice(
+                    cache["kv_scale"].v, v_sc, (0, 0, 0))
             ptags = jax.lax.dynamic_update_slice(
                 pos_tags,
                 jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (bsz, s)),
                 (0, 0))
         else:  # ring: keep the last clen positions
-            kc = k[:, s - clen:].astype(kv.k.dtype)
-            vc = v[:, s - clen:].astype(kv.v.dtype)
+            kc = k_st[:, s - clen:].astype(kv.k.dtype)
+            vc = v_st[:, s - clen:].astype(kv.v.dtype)
             ptags1 = jnp.arange(s - clen, s, dtype=jnp.int32)
             # rotate so that slot j holds the position with pos % clen == j
             roll = (s - clen) % clen
             kc, vc = jnp.roll(kc, roll, 1), jnp.roll(vc, roll, 1)
+            if kv_int8:
+                ksc = jnp.roll(k_sc[:, s - clen:], roll, 1)
+                vsc = jnp.roll(v_sc[:, s - clen:], roll, 1)
             ptags = jnp.broadcast_to(jnp.roll(ptags1, roll, 0)[None], (bsz, clen))
         if lengths is not None:
             # invalidate tags past each row's true length — decode masks
             # padded K/V by tag, so the garbage rows are never attended
             ptags = jnp.where(ptags < lengths[:, None], ptags, -1)
-        return x + y, {"kv": KVCache(k=kc, v=vc), "pos": ptags}
+        new_cache = {"kv": KVCache(k=kc, v=vc), "pos": ptags}
+        if kv_int8:
+            new_cache["kv_scale"] = KVCache(k=ksc, v=vsc)
+        return x + y, new_cache
 
     def fill_block(p, spec, x, cache):
         if spec.kind == "attn":
@@ -551,7 +714,8 @@ def prefill(params, cfg: LMConfig, tokens: jnp.ndarray,
             x, cache = fill_attn(pp, spec, x, cache)
             if spec.shared_attn:
                 h = layers.rms_norm(pp["norm_ffn"], x)
-                return x + layers.mlp(pp["mlp"], h, cfg.act), cache
+                return x + layers.mlp(pp["mlp"], h, cfg.act,
+                                      int8_kernel=cfg.use_int8_matmul), cache
         else:
             h = layers.rms_norm(p["norm_ssd"], x)
             scfg = cfg.ssd_cfg
@@ -582,7 +746,8 @@ def prefill(params, cfg: LMConfig, tokens: jnp.ndarray,
                                             cfg.moe_group_size)
                 x = x + y
             else:
-                x = x + layers.mlp(p["mlp"], h, cfg.act)
+                x = x + layers.mlp(p["mlp"], h, cfg.act,
+                               int8_kernel=cfg.use_int8_matmul)
         return x, cache
 
     def body(x, inp):

@@ -56,6 +56,53 @@ def quant_error(w: jnp.ndarray, iw: Int8Weight) -> float:
 
 
 # -----------------------------------------------------------------------------
+# Row-wise (per-token / per-channel) quantization for the serving fast path
+# -----------------------------------------------------------------------------
+
+# scale floor: an all-zero channel still gets a positive scale so dequant is
+# exact zero and division never produces inf/nan
+SCALE_FLOOR = 1e-12
+
+
+def quantize_rowwise(x: jnp.ndarray, axis: int = -1
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 over ONE axis: every other axis keeps its own scale.
+
+    Used for KV-cache entries (axis=-1: one scale per (slot, position, head))
+    and as the building block of per-channel weight quantization.
+    Returns (q int8 same-shape, scale fp32 with ``axis`` removed).
+    """
+    x32 = x.astype(jnp.float32)
+    ax = axis % x32.ndim
+    amax = jnp.max(jnp.abs(x32), axis=ax, keepdims=True)
+    scale = jnp.maximum(amax, SCALE_FLOOR) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, jnp.squeeze(scale, axis=ax)
+
+
+def dequantize_rowwise(q: jnp.ndarray, scale: jnp.ndarray, axis: int = -1,
+                       dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32)
+            * jnp.expand_dims(scale, axis).astype(jnp.float32)).astype(dtype)
+
+
+def quantize_weight(w: jnp.ndarray, lead: int = 0, out_dims: int = 1) -> dict:
+    """Per-channel int8 weight leaf for the serving fast path.
+
+    Reduces |w| over the contraction dims — everything between the ``lead``
+    stack/expert dims and the trailing ``out_dims`` channel dims — keeping
+    the reduced dims as size-1 (``s8`` broadcasts against ``q8`` in
+    models.layers.wl regardless of weight rank). Returns {"q8","s8"}.
+    """
+    w32 = w.astype(jnp.float32)
+    red = tuple(range(lead, w32.ndim - out_dims))
+    amax = jnp.max(jnp.abs(w32), axis=red, keepdims=True)
+    scale = jnp.maximum(amax, SCALE_FLOOR) / 127.0
+    q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+    return {"q8": q, "s8": scale.astype(jnp.float32)}
+
+
+# -----------------------------------------------------------------------------
 # Int8-weight serving mode (paper C5 applied to the LM zoo; §Perf HC-C iter 3)
 # -----------------------------------------------------------------------------
 
@@ -63,6 +110,16 @@ def quant_error(w: jnp.ndarray, iw: Int8Weight) -> float:
 # embeddings/norms/router stay high-precision, mirroring quantize_tree)
 SERVING_QUANT_KEYS = frozenset({"wq", "wk", "wv", "wo", "w_in", "w_gate",
                                 "w_out", "w_z", "w_x"})
+
+# trailing output-channel dims per weight name: q/k/v and SSD
+# in-projections map embed -> (heads, head_dim); all others have a single
+# trailing output dim.
+_OUT_DIMS = {"wq": 2, "wk": 2, "wv": 2, "w_z": 2, "w_x": 2}
+
+
+def weight_out_dims(name: str) -> int:
+    """Trailing output-channel dim count for a SERVING_QUANT_KEYS leaf."""
+    return _OUT_DIMS.get(name, 1)
 
 
 def _q8_leaf(w, stacked: bool):

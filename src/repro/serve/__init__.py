@@ -2,5 +2,6 @@
 
 from repro.serve.engine import (Request, ServeConfig, ServeEngine,  # noqa: F401
                                 StepMetrics)
+from repro.serve.quality import token_agreement  # noqa: F401
 from repro.serve.reference import ReferenceEngine  # noqa: F401
 from repro.serve.scheduler import Scheduler, SchedulerConfig  # noqa: F401

@@ -50,6 +50,10 @@ class ServeConfig:
     # (kernels/decode_attention.py). None = auto: on for TPU backends, off
     # elsewhere (interpret mode is correctness-only).
     decode_kernel: Optional[bool] = None
+    # quantized serving fast path (DESIGN.md §12): "none" | "int8".
+    # int8 quantizes the weight tree (per-channel scales) AND the KV cache
+    # (per-token/head scales); cache_dtype is ignored for K/V in that mode.
+    quant: str = "none"
 
 
 @dataclasses.dataclass
@@ -71,6 +75,17 @@ class StepMetrics:
     prefill_tokens: int = 0     # prompt tokens prefilled this tick
     admitted: int = 0           # requests admitted this tick
     queue_depth: int = 0        # requests still waiting after the tick
+    # dtype-aware modeled traffic/compute of the tick (engine-computed from
+    # the actual resident array sizes; the paper's bytes-dominate-energy
+    # argument made measurable — CarbonAccountant bills a per-byte DRAM
+    # term from these alongside the FLOPs term)
+    weight_bytes: float = 0.0   # parameter bytes streamed from HBM
+    kv_bytes: float = 0.0       # KV-cache bytes read/written
+    flops: float = 0.0          # modeled FLOPs
+
+    @property
+    def bytes_moved(self) -> float:
+        return self.weight_bytes + self.kv_bytes
 
 
 @dataclasses.dataclass
@@ -111,15 +126,75 @@ def _bucket_len(n: int) -> int:
     return b
 
 
+# -- modeled traffic / compute (DESIGN.md §12) --------------------------------
+
+def _tree_bytes(tree: PyTree) -> int:
+    """Resident bytes of a pytree — dtype-aware (int8 leaves bill 1 byte)."""
+    return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(tree))
+
+
+def _kv_bytes(caches: PyTree) -> int:
+    """Bytes of the K/V payload (codes + scales; excludes position tags)."""
+    total = 0
+    for entry in caches.values():
+        for key in ("kv", "kv_scale"):
+            if key in entry:
+                total += _tree_bytes(entry[key])
+    return total
+
+
+def _matmul_weight_elems(params: PyTree, cfg: tf_lib.LMConfig) -> float:
+    """Logical matmul-weight elements executed per token (a weight of E
+    elements costs 2E FLOPs/token regardless of storage dtype — int8
+    changes bytes, not FLOPs). MoE experts count at their top_k/n_experts
+    activation fraction; includes the unembedding projection; excludes
+    norms/biases."""
+    from repro.quant.int8 import SERVING_QUANT_KEYS
+    total = 0.0
+    moe_frac = (cfg.moe_cfg.top_k / cfg.moe_cfg.n_experts
+                if cfg.moe_cfg is not None else 1.0)
+
+    def walk(p, frac):
+        nonlocal total
+        for k, v in p.items():
+            if isinstance(v, dict):
+                if "q8" in v:
+                    if k in SERVING_QUANT_KEYS:
+                        total += frac * int(v["q8"].size)
+                else:
+                    walk(v, moe_frac if k == "moe" else frac)
+            elif k in SERVING_QUANT_KEYS and getattr(v, "ndim", 0) >= 2:
+                total += frac * int(v.size)
+
+    walk(params, 1.0)
+    if cfg.tie_embeddings:
+        total += int(params["embed"]["w"].size)
+    else:
+        total += int(params["unembed"]["w"].size)
+    return total
+
+
+def _attn_layers(cfg: tf_lib.LMConfig) -> int:
+    pat = sum(1 for sp in cfg.pattern if sp.kind == "attn") * cfg.repeats
+    return pat + sum(1 for sp in cfg.tail if sp.kind == "attn")
+
+
 class ServeEngine:
     def __init__(self, params: PyTree, cfg: tf_lib.LMConfig,
                  serve_cfg: ServeConfig,
                  accountant: Optional[accounting.CarbonAccountant] = None,
                  scheduler: Optional[Scheduler] = None):
-        self.params = params
         use_kernel = serve_cfg.decode_kernel
         if use_kernel is None:
             use_kernel = jax.default_backend() == "tpu"
+        if serve_cfg.quant not in ("none", "int8"):
+            raise ValueError(f"unknown quant mode {serve_cfg.quant!r}")
+        if serve_cfg.quant == "int8":
+            # quantized fast path: int8 weight tree + int8 KV cache; the
+            # already-quantized case (caller ran quantize_lm) passes through
+            cfg = dataclasses.replace(cfg, quant=tf_lib.INT8_QUANT)
+            params = tf_lib.quantize_lm(params)
+        self.params = params
         self.cfg = dataclasses.replace(cfg, decode_kernel=bool(use_kernel))
         self.scfg = serve_cfg
         self.accountant = accountant
@@ -150,11 +225,22 @@ class ServeEngine:
             sp.kind == "attn"
             for sp in tuple(cfg.pattern) + tuple(cfg.tail))
         # instrumentation (tests assert the tick stays fused: one trace,
-        # one host readback per tick)
+        # one host readback per tick; admission compiles once per length
+        # bucket)
         self.tick_trace_count = 0
         self.host_readbacks = 0
+        self.admit_trace_counts: Dict[int, int] = {}
+        self._admit_fns: Dict[int, Any] = {}
         self.last_metrics: Optional[StepMetrics] = None
         self.metrics_log: List[StepMetrics] = []
+        # modeled per-tick traffic/compute (DESIGN.md §12): dtype-aware
+        # bytes from the actual resident arrays — this is where the int8
+        # path's 2-4x byte reduction becomes measurable
+        self.weight_bytes = _tree_bytes(self.params)
+        self.kv_cache_bytes = _kv_bytes(self.state.caches)
+        self._matmul_elems = _matmul_weight_elems(self.params, self.cfg)
+        self._n_attn = _attn_layers(self.cfg)
+        self._attn_dims = self.cfg.n_heads * self.cfg.resolved_head_dim
         self._build_tick()
         self._build_admit()
 
@@ -197,8 +283,10 @@ class ServeEngine:
         self._tick = jax.jit(tick, donate_argnums=self._donate())
 
     def _build_admit(self):
-        """Jitted pad-and-stack prefill + all-slot scatter (jit retraces per
-        length bucket; _bucket_len bounds how many buckets exist)."""
+        """Pad-and-stack prefill + all-slot scatter. Compiled per length
+        bucket (_bucket_len bounds how many buckets exist); each bucket's
+        executable is cached in ``_admit_fns`` and traced exactly once
+        (asserted via ``admit_trace_counts`` in tests/test_serve_quant.py)."""
         cfg, scfg = self.cfg, self.scfg
         base_key, max_len = self._base_key, scfg.max_len
         pad_ok = self._pad_ok
@@ -244,7 +332,26 @@ class ServeEngine:
                 out_buf=st.out_buf.at[slots].set(out_rows, mode="drop"))
             return new_st, done
 
-        self._admit_jit = jax.jit(admit, donate_argnums=self._donate())
+        self._admit_impl = admit
+
+    def _admit_exe(self, bucket: int):
+        """One jitted admit executable per prompt-length bucket, built on
+        first use and reused for every later admission in that bucket — no
+        per-call rebuild churn."""
+        fn = self._admit_fns.get(bucket)
+        if fn is None:
+            impl = self._admit_impl
+
+            def admit_b(params, st, toks, lens, slots, budgets, temps, uids):
+                # python side effect: per-bucket trace count
+                self.admit_trace_counts[bucket] = \
+                    self.admit_trace_counts.get(bucket, 0) + 1
+                return impl(params, st, toks, lens, slots, budgets, temps,
+                            uids)
+
+            fn = jax.jit(admit_b, donate_argnums=self._donate())
+            self._admit_fns[bucket] = fn
+        return fn
 
     # -- queue API ------------------------------------------------------------
 
@@ -283,12 +390,13 @@ class ServeEngine:
 
     # -- admission ------------------------------------------------------------
 
-    def _admit(self, finished: List[Request]) -> Tuple[int, int]:
-        """Batched admission. Returns (n_admitted, prompt_tokens)."""
+    def _admit(self, finished: List[Request]) -> Tuple[int, int, int]:
+        """Batched admission. Returns (n_admitted, prompt_tokens,
+        sum of squared prompt lengths — the prefill-attention FLOPs term)."""
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         reqs = self.scheduler.select(len(free))
         if not reqs:
-            return 0, 0
+            return 0, 0, 0
         if not self._pad_ok:
             # SSD/hybrid archs: only equal-length prompts share a prefill
             same = [r for r in reqs if len(r.prompt) == len(reqs[0].prompt)]
@@ -318,7 +426,7 @@ class ServeEngine:
             temps[j] = (self.scfg.temperature if req.temperature is None
                         else req.temperature)
             uids[j] = req.uid
-        self.state, done = self._admit_jit(
+        self.state, done = self._admit_exe(lmax)(
             self.params, self.state, jnp.asarray(toks), jnp.asarray(lens),
             jnp.asarray(slots), jnp.asarray(budgets), jnp.asarray(temps),
             jnp.asarray(uids))
@@ -328,7 +436,7 @@ class ServeEngine:
             self._host_gen[free[j]] = 1
             if done_mask[j]:
                 self._finish_slot(free[j], finished)
-        return len(reqs), int(lens.sum())
+        return len(reqs), int(lens.sum()), int((lens.astype(np.int64) ** 2).sum())
 
     # -- main tick ------------------------------------------------------------
 
@@ -336,7 +444,7 @@ class ServeEngine:
         """Admit + one fused decode tick. Returns finished requests."""
         t0 = time.monotonic()
         finished: List[Request] = []
-        admitted, prefill_toks = self._admit(finished)
+        admitted, prefill_toks, prefill_sq = self._admit(finished)
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if active:
             self.state, done = self._tick(self.params, self.state)
@@ -346,10 +454,26 @@ class ServeEngine:
             for i in np.nonzero(done_mask)[0]:
                 if self.slot_req[int(i)] is not None:
                     self._finish_slot(int(i), finished)
+        # modeled traffic/compute of the tick (DESIGN.md §12): every jitted
+        # call streams the full weight tree once; the dense decode reads the
+        # whole resident KV payload, admission writes the admitted fraction.
+        wb = kvb = fl = 0.0
+        if active:
+            wb += self.weight_bytes
+            kvb += self.kv_cache_bytes
+            fl += len(active) * (2.0 * self._matmul_elems
+                                 + 4.0 * self._n_attn * self._attn_dims
+                                 * self.scfg.max_len)
+        if admitted:
+            wb += self.weight_bytes
+            kvb += self.kv_cache_bytes * admitted / self.scfg.max_slots
+            fl += (2.0 * self._matmul_elems * prefill_toks
+                   + 2.0 * self._n_attn * self._attn_dims * prefill_sq)
         m = StepMetrics(tokens=len(active), active_slots=len(active),
                         wall_s=time.monotonic() - t0,
                         prefill_tokens=prefill_toks, admitted=admitted,
-                        queue_depth=len(self.scheduler))
+                        queue_depth=len(self.scheduler),
+                        weight_bytes=wb, kv_bytes=kvb, flops=fl)
         self.last_metrics = m
         self.metrics_log.append(m)
         if self.accountant is not None:

@@ -1,0 +1,131 @@
+"""Int8 serving kernels: fused matmul + int8-KV attention (DESIGN.md §12).
+
+Interpret-mode validation against dequantize-then-compute oracles: the
+kernels keep int8 in memory and widen in-register, so their outputs must
+match the XLA fallback (wl()/dequant + einsum/SDPA) to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import layers
+from repro.quant import int8 as q8
+
+
+class TestInt8Matmul:
+    @pytest.mark.parametrize("m,k,n", [(8, 64, 32), (10, 48, 33), (1, 128, 7)])
+    def test_matches_dequant_oracle(self, m, k, n):
+        rng = np.random.default_rng(m + k + n)
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        wq = q8.quantize_weight(w)
+        got = kops.int8_matmul(x, wq["q8"], wq["s8"])
+        want = x @ (wq["q8"].astype(jnp.float32) * wq["s8"])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4)
+
+    def test_scalar_scale(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+        iw = q8.quantize(w, axis=-1)  # per-channel Int8Weight
+        got = kops.int8_matmul(x, iw.q, jnp.asarray(0.5))
+        want = x @ (iw.q.astype(jnp.float32) * 0.5)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4)
+
+    def test_q8_matmul_layer_helper_3d(self):
+        """q8_matmul reshapes (d,h,dh) / (h,dh,d) weights through the 2D
+        kernel and matches the wl()+einsum fallback."""
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((2, 5, 48)), jnp.float32)
+        wq = q8.quantize_weight(
+            jnp.asarray(rng.standard_normal((48, 4, 12)), jnp.float32),
+            out_dims=2)
+        wo = q8.quantize_weight(
+            jnp.asarray(rng.standard_normal((4, 12, 48)), jnp.float32),
+            out_dims=1)
+        got = layers.q8_matmul(x, wq)
+        want = jnp.einsum("bsd,dhk->bshk", x, layers.wl(wq, jnp.float32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4)
+        got_o = layers.q8_matmul(got, wo, contract_ndim=2)
+        want_o = jnp.einsum("bshk,hkd->bsd", want,
+                            layers.wl(wo, jnp.float32))
+        np.testing.assert_allclose(np.asarray(got_o), np.asarray(want_o),
+                                   atol=2e-3)
+
+
+def _quantized_kv(rng, b, s, hkv, d):
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    kq, ks = q8.quantize_rowwise(k)
+    vq, vs = q8.quantize_rowwise(v)
+    kd = kq.astype(jnp.float32) * ks[..., None]
+    vd = vq.astype(jnp.float32) * vs[..., None]
+    return (kq, ks, kd), (vq, vs, vd)
+
+
+class TestInt8DecodeAttention:
+    def test_matches_dequant_sdpa_ragged_lengths(self):
+        """Int8-KV kernel vs the tag-masked SDPA over the dequantized cache:
+        ragged lengths incl. a dead slot, global + windowed."""
+        rng = np.random.default_rng(3)
+        b, s, h, hkv, d = 4, 24, 4, 2, 16
+        q = jnp.asarray(rng.standard_normal((b, 1, h, d)), jnp.float32)
+        (kq, ks, kd), (vq, vs, vd) = _quantized_kv(rng, b, s, hkv, d)
+        lens = jnp.asarray([24, 10, 0, 1], jnp.int32)
+        for window in (-1, 6):
+            got = kops.decode_attention(q[:, 0], kq, vq, lens, scale=0.25,
+                                        window=window, interpret=True,
+                                        k_scale=ks, v_scale=vs)
+            tags = jnp.where(jnp.arange(s)[None] < lens[:, None],
+                             jnp.arange(s)[None], -1)
+            mask = layers.attention_mask((lens - 1)[:, None], tags,
+                                         causal=True, window=window)
+            mask &= (tags >= 0)[:, None, :]
+            want = layers.sdpa(q, kd, vd, mask, 0.25)[:, 0]
+            live = np.asarray(lens) > 0
+            err = np.abs(np.asarray(got)[live] - np.asarray(want)[live]).max()
+            assert err < 1e-5, (window, err)
+            assert np.abs(np.asarray(got)[~live]).max() == 0.0
+
+    def test_scales_required_in_pairs(self):
+        rng = np.random.default_rng(4)
+        q = jnp.asarray(rng.standard_normal((2, 4, 8)), jnp.float32)
+        (kq, ks, _), (vq, _, _) = _quantized_kv(rng, 2, 8, 2, 8)
+        with pytest.raises(AssertionError):
+            kops.decode_attention(q, kq, vq, jnp.asarray([8, 8]), scale=0.35,
+                                  interpret=True, k_scale=ks, v_scale=None)
+
+
+class TestInt8FlashAttention:
+    @pytest.mark.parametrize("window", [-1, 5])
+    def test_matches_dequant_reference(self, window):
+        rng = np.random.default_rng(5)
+        b, s, h, hkv, d = 2, 16, 4, 2, 16
+        q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+        (kq, ks, kd), (vq, vs, vd) = _quantized_kv(rng, b, s, hkv, d)
+        got = kops.flash_attention(q, kq, vq, scale=0.25, causal=True,
+                                   window=window, k_scale=ks, v_scale=vs)
+        want = kref.attention_ref(q, kd, vd, scale=0.25, causal=True,
+                                  window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
+    def test_padded_seq_lengths(self):
+        """ops wrapper pads K/V AND the scale arrays to block multiples."""
+        rng = np.random.default_rng(6)
+        b, s, h, hkv, d = 1, 11, 2, 1, 8
+        q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+        (kq, ks, kd), (vq, vs, vd) = _quantized_kv(rng, b, s, hkv, d)
+        got = kops.flash_attention(q, kq, vq, scale=0.3, causal=True,
+                                   k_scale=ks, v_scale=vs)
+        want = kref.attention_ref(q, kd, vd, scale=0.3, causal=True,
+                                  window=-1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)

@@ -86,6 +86,81 @@ class TestInt8:
             outs.append(float(int8.dequantize(iw).mean()))
         assert np.mean(outs) == pytest.approx(0.3, rel=0.01)
 
+    def test_roundtrip_error_elementwise_bound(self):
+        """Symmetric rounding guarantees |x - deq(x)| <= scale/2 per
+        element (scale = amax/127 per channel)."""
+        w = jax.random.normal(jax.random.PRNGKey(20), (128, 64)) * 3.0
+        iw = int8.quantize(w)
+        err = jnp.abs(w - int8.dequantize(iw))
+        assert bool(jnp.all(err <= iw.scale / 2 + 1e-7))
+
+    def test_all_zero_channel_scale_floor(self):
+        """An all-zero channel gets the positive floor scale: dequant is
+        exactly zero, nothing divides by zero, nothing goes NaN."""
+        w = jnp.zeros((16, 8)).at[:, 0].set(1.0)
+        iw = int8.quantize(w, axis=0)
+        assert bool(jnp.all(iw.scale > 0))
+        back = int8.dequantize(iw)
+        assert bool(jnp.all(jnp.isfinite(back)))
+        np.testing.assert_array_equal(np.asarray(back[:, 1:]), 0.0)
+        q, s = int8.quantize_rowwise(jnp.zeros((4, 8)))
+        assert bool(jnp.all(s > 0)) and not bool(jnp.any(q))
+
+    def test_stochastic_rounding_unbiased_many_draws(self):
+        """Mean over many independent draws converges to the true value for
+        a point exactly between two codes (the worst case for bias)."""
+        val = 0.15
+        w = jnp.full((1, 512), val)
+        keys = jax.random.split(jax.random.PRNGKey(21), 256)
+        deq = jax.vmap(lambda k: int8.dequantize(
+            int8.quantize_stochastic(w, k)))(keys)
+        assert float(deq.mean()) == pytest.approx(val, rel=0.005)
+
+    def test_int8weight_pytree_through_jit(self):
+        """Int8Weight is a registered pytree: it crosses jit boundaries as
+        an argument AND a return value without flattening surprises."""
+        w = jax.random.normal(jax.random.PRNGKey(22), (32, 16))
+        iw = int8.quantize(w)
+        leaves, treedef = jax.tree.flatten(iw)
+        assert len(leaves) == 2
+        assert isinstance(jax.tree.unflatten(treedef, leaves),
+                          int8.Int8Weight)
+
+        @jax.jit
+        def roundtrip(iw_in):
+            return int8.Int8Weight(q=iw_in.q, scale=iw_in.scale * 2.0)
+
+        out = roundtrip(iw)
+        assert isinstance(out, int8.Int8Weight)
+        np.testing.assert_array_equal(np.asarray(out.q), np.asarray(iw.q))
+        np.testing.assert_allclose(np.asarray(out.scale),
+                                   np.asarray(iw.scale) * 2.0)
+
+    def test_quantize_weight_channelwise_scales(self):
+        """quantize_weight keeps one scale per output channel (keepdims) so
+        badly-scaled channels don't poison each other."""
+        w = jax.random.normal(jax.random.PRNGKey(23), (64, 8))
+        w = w * (10.0 ** jnp.arange(8))        # 8 orders of magnitude
+        qd = int8.quantize_weight(w)
+        assert qd["s8"].shape == (1, 8)
+        back = qd["q8"].astype(jnp.float32) * qd["s8"]
+
+        def per_channel_rel(a):
+            return jnp.linalg.norm(a - w, axis=0) / jnp.linalg.norm(w, axis=0)
+
+        assert float(per_channel_rel(back).max()) < 0.01
+        # per-tensor quantization rounds the small channels to zero
+        amax = float(jnp.abs(w).max())
+        coarse = jnp.round(w / (amax / 127)) * (amax / 127)
+        assert float(per_channel_rel(coarse).max()) > 0.5
+
+    def test_rowwise_roundtrip_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(24), (4, 6, 2, 16))
+        q, s = int8.quantize_rowwise(x)
+        assert q.dtype == jnp.int8 and s.shape == (4, 6, 2)
+        back = int8.dequantize_rowwise(q, s)
+        assert bool(jnp.all(jnp.abs(back - x) <= s[..., None] / 2 + 1e-7))
+
     def test_inference_accuracy_preserved_on_cnn(self):
         """Ternary AlexNet-smoke logits correlate with fp32 logits (the
         paper's claim that ternary reduction keeps reasonable accuracy)."""
