@@ -1,7 +1,7 @@
 # Tier-1 verify — exactly as ROADMAP.md specifies.
 PY ?= python
 
-.PHONY: verify bench bench-serve
+.PHONY: verify bench bench-serve bench-train
 
 verify:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -14,3 +14,8 @@ bench:
 bench-serve:
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --quant int8
+
+# training fast path (DESIGN.md §13): fused TrainEngine tick vs the
+# host-loop autodiff-through-reference Trainer -> BENCH_train.json
+bench-train:
+	PYTHONPATH=src $(PY) benchmarks/train_bench.py

@@ -52,6 +52,16 @@ class CarbonAccountant:
         self._active_s = 0.0
         self._bytes_moved = 0.0
         self._modeled_flops = 0.0
+        # training-phase ledgers (DESIGN.md §13): forward and backward bill
+        # separately — the per-phase split the edge-training literature
+        # (DeepEn2023, Sobhani et al.) calls for
+        self._train_steps = 0
+        self._train_samples = 0.0
+        self._fwd_flops = 0.0
+        self._bwd_flops = 0.0
+        self._fwd_bytes = 0.0
+        self._bwd_bytes = 0.0
+        self._opt_bytes = 0.0
         self._wall_start = time.monotonic()
 
     # -- observation ---------------------------------------------------------
@@ -82,6 +92,29 @@ class CarbonAccountant:
             with self._lock:
                 self._bytes_moved += n_bytes
                 self._modeled_flops += flops
+
+    def observe_train(self, metrics) -> None:
+        """Bill one train-engine tick (train.TrainStepMetrics-shaped).
+
+        ``wall_s``/``tokens`` feed the wall-clock ledger exactly like serve
+        ticks; the per-phase modeled terms (``fwd_flops``/``bwd_flops``,
+        ``fwd_bytes``/``bwd_bytes``/``opt_bytes``) land in separate
+        forward/backward ledgers so J/step splits by phase in report() —
+        and the grand bytes/FLOPs totals stay comparable with serving."""
+        self.observe_step(metrics.wall_s, n_tokens=float(metrics.tokens))
+        with self._lock:
+            self._train_steps += int(getattr(metrics, "steps", 1))
+            self._train_samples += float(getattr(metrics, "samples", 0.0))
+            self._fwd_flops += float(getattr(metrics, "fwd_flops", 0.0))
+            self._bwd_flops += float(getattr(metrics, "bwd_flops", 0.0))
+            self._fwd_bytes += float(getattr(metrics, "fwd_bytes", 0.0))
+            self._bwd_bytes += float(getattr(metrics, "bwd_bytes", 0.0))
+            self._opt_bytes += float(getattr(metrics, "opt_bytes", 0.0))
+            self._bytes_moved += (float(getattr(metrics, "fwd_bytes", 0.0))
+                                  + float(getattr(metrics, "bwd_bytes", 0.0))
+                                  + float(getattr(metrics, "opt_bytes", 0.0)))
+            self._modeled_flops += (float(getattr(metrics, "fwd_flops", 0.0))
+                                    + float(getattr(metrics, "bwd_flops", 0.0)))
 
     # -- accounting ----------------------------------------------------------
 
@@ -137,10 +170,43 @@ class CarbonAccountant:
     def modeled_compute_j(self) -> float:
         return energy.compute_energy_j(self._modeled_flops, self._spec)
 
+    def train_report(self) -> Optional[Dict]:
+        """Per-phase training energy (None until observe_train was called).
+
+        ``fwd_j``/``bwd_j`` are the modeled FLOPs + per-byte DRAM energy of
+        the forward and backward phases; ``opt_j`` the optimizer-update
+        traffic. J/step and J/sample put on-line training next to the serve
+        path's J/token (paper Table 3's train rows, live)."""
+        if self._train_steps == 0:
+            return None
+        cost = energy.TrainStepCost(
+            fwd_flops=self._fwd_flops, bwd_flops=self._bwd_flops,
+            fwd_bytes=self._fwd_bytes, bwd_bytes=self._bwd_bytes,
+            opt_bytes=self._opt_bytes)
+        phases = energy.train_phase_energy_j(cost, self._spec)
+        n = self._train_steps
+        return {
+            "steps": n,
+            "samples": self._train_samples,
+            "fwd_flops": self._fwd_flops,
+            "bwd_flops": self._bwd_flops,
+            "fwd_bytes": self._fwd_bytes,
+            "bwd_bytes": self._bwd_bytes,
+            "opt_bytes": self._opt_bytes,
+            **phases,
+            "j_per_step": phases["total_j"] / n,
+            "j_per_sample": (phases["total_j"] / self._train_samples
+                             if self._train_samples > 0 else None),
+            "bwd_fwd_ratio": (phases["bwd_j"] / phases["fwd_j"]
+                              if phases["fwd_j"] > 0 else None),
+        }
+
     def report(self) -> Dict:
         op = self.operational_active_j
         modeled_j = self.modeled_compute_j + self.modeled_dram_j
+        train = self.train_report()
         return {
+            **({"train": train} if train else {}),
             "bytes_moved": self._bytes_moved,
             "modeled_flops": self._modeled_flops,
             "modeled_dram_j": self.modeled_dram_j,

@@ -162,3 +162,48 @@ def modeled_serve_energy_j(flops: float, n_bytes: float,
                            dram: str = "hbm2e") -> float:
     """FLOPs + per-byte DRAM energy for one serving interval."""
     return compute_energy_j(flops, spec) + dram_energy_j(n_bytes, dram)
+
+
+# ---------------------------------------------------------------------------
+# Training-phase energy (on-line training fast path, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+# The paper evaluates edge platforms for inference AND on-line training, and
+# the related edge-energy literature (DeepEn2023, Sobhani et al.) insists on
+# *per-phase* measurement: forward and backward bill separately, because the
+# backward's 2x FLOPs + grad-write traffic is exactly what a serve-only
+# energy model misses. TrainStepCost carries one optimizer step's modeled
+# phases; models/costing.py derives it from a live param/opt-state tree.
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepCost:
+    """Modeled FLOPs/bytes of ONE training step, split by phase."""
+    fwd_flops: float
+    bwd_flops: float
+    fwd_bytes: float
+    bwd_bytes: float
+    opt_bytes: float = 0.0
+    tokens: float = 0.0
+    samples: float = 0.0
+
+    def scaled(self, n_steps: int) -> "TrainStepCost":
+        f = float(n_steps)
+        return TrainStepCost(
+            fwd_flops=self.fwd_flops * f, bwd_flops=self.bwd_flops * f,
+            fwd_bytes=self.fwd_bytes * f, bwd_bytes=self.bwd_bytes * f,
+            opt_bytes=self.opt_bytes * f, tokens=self.tokens * f,
+            samples=self.samples * f)
+
+
+def train_phase_energy_j(cost: TrainStepCost,
+                         spec: Optional[hw.DeviceSpec] = None,
+                         dram: str = "hbm2e") -> Dict[str, float]:
+    """Per-phase modeled energy of one training step (J): the FLOPs term at
+    peak-rate efficiency plus the per-byte DRAM term, forward and backward
+    separately; the optimizer phase is pure traffic (negligible FLOPs)."""
+    fwd = compute_energy_j(cost.fwd_flops, spec) + dram_energy_j(
+        cost.fwd_bytes, dram)
+    bwd = compute_energy_j(cost.bwd_flops, spec) + dram_energy_j(
+        cost.bwd_bytes, dram)
+    opt = dram_energy_j(cost.opt_bytes, dram)
+    return {"fwd_j": fwd, "bwd_j": bwd, "opt_j": opt,
+            "total_j": fwd + bwd + opt}

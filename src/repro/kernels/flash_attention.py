@@ -26,11 +26,31 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _tile_mask(qi, ki, block_q: int, block_k: int, causal: bool, window: int):
+    """Valid-position mask for one (qi, ki) tile — THE masking rule, shared
+    by the forward and both backward kernels so the semantics cannot drift."""
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    diff = q_pos - k_pos
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask &= diff >= 0
+    if window > 0:
+        mask &= diff < window
+    return mask
+
+
 def _flash_kernel(*refs, scale: float, causal: bool, window: int,
                   block_q: int, block_k: int, n_k_blocks: int,
-                  quantized: bool = False):
+                  quantized: bool = False, save_lse: bool = False):
+    lse_ref = None
     if quantized:
         q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    elif save_lse:
+        q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
     else:
         q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
         ks_ref = vs_ref = None
@@ -42,14 +62,7 @@ def _flash_kernel(*refs, scale: float, causal: bool, window: int,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
-    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    diff = q_pos - k_pos
-    mask = jnp.ones((block_q, block_k), bool)
-    if causal:
-        mask &= diff >= 0
-    if window > 0:
-        mask &= diff < window
+    mask = _tile_mask(qi, ki, block_q, block_k, causal, window)
 
     # skip fully-masked K blocks (the causal upper triangle / outside-window)
     @pl.when(jnp.any(mask))
@@ -79,6 +92,10 @@ def _flash_kernel(*refs, scale: float, causal: bool, window: int,
     def _finish():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        if save_lse:
+            # per-row softmax normalizer, the residual the backward kernels
+            # recompute p = exp(s - lse) from (no O(Sq*Sk) probs in memory)
+            lse_ref[0, 0] = m_ref[...] + jnp.log(l)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
@@ -147,3 +164,217 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         interpret=interpret,
     )(*operands)
     return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Training fast path: custom VJP (DESIGN.md §13)
+#
+# Forward saves only O and the per-row softmax normalizer lse = m + log(l)
+# (B, H, Sq, 1) — the backward kernels recompute p = exp(s - lse) tile by
+# tile, so the O(Sq*Sk) probability matrix never exists in memory:
+#
+#   delta = rowsum(dO * O)                       (cheap jnp preprocess)
+#   dV    = p^T @ dO
+#   dS    = p * (dO @ V^T - delta)
+#   dQ    = scale * dS @ K ;  dK = scale * dS^T @ Q
+#
+# Two kernels: dQ sweeps K blocks innermost (grid b,h,nq,nk; dq tile
+# accumulates in VMEM scratch), dK/dV sweep Q blocks innermost (grid
+# b,h,nk,nq; dk/dv tiles in scratch). Both skip fully-masked tiles exactly
+# like the forward. GQA: dK/dV come out per *query* head and are
+# sum-reduced over the head group outside the kernel (fp32).
+# ---------------------------------------------------------------------------
+
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                         dq_ref, acc_ref, *, scale: float, causal: bool,
+                         window: int, block_q: int, block_k: int,
+                         n_k_blocks: int):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mask = _tile_mask(qi, ki, block_q, block_k, causal, window)
+
+    @pl.when(jnp.any(mask))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        # explicit mask (not just s=NEG_INF): rows whose every block is
+        # masked have lse ~ NEG_INF and exp(s - lse) would be 1, not 0
+        p = jnp.where(mask, jnp.exp(s - lse_ref[0, 0]), 0.0)   # (bq, bk)
+        do = do_ref[0, 0].astype(jnp.float32)               # (bq, d)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0, 0])                     # (bq, bk)
+        acc_ref[...] += jax.lax.dot(ds, k, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finish():
+        dq_ref[0, 0] = (acc_ref[...] * scale).astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                          dk_ref, dv_ref, dk_acc, dv_acc, *, scale: float,
+                          causal: bool, window: int, block_q: int,
+                          block_k: int, n_q_blocks: int):
+    ki, qi = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    mask = _tile_mask(qi, ki, block_q, block_k, causal, window)
+
+    @pl.when(jnp.any(mask))
+    def _compute():
+        # q pre-scaled: dS^T @ (scale*Q) == scale * dS^T @ Q == dK directly
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        p = jnp.where(mask, jnp.exp(s - lse_ref[0, 0]), 0.0)   # (bq, bk)
+        do = do_ref[0, 0].astype(jnp.float32)               # (bq, d)
+        dv_acc[...] += jax.lax.dot_general(                 # p^T @ dO
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0, 0])                     # (bq, bk)
+        dk_acc[...] += jax.lax.dot_general(                 # dS^T @ q*scale
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(qi == n_q_blocks - 1)
+    def _finish():
+        # fp32 out: the GQA head-group sum happens outside the kernel
+        dk_ref[0, 0] = dk_acc[...]
+        dv_ref[0, 0] = dv_acc[...]
+
+
+def _fwd_with_lse(q, k, v, statics):
+    """Forward pass that also returns the per-row lse residual (B,H,Sq,1)."""
+    scale, causal, window, block_q, block_k, interpret = statics
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    rep = h // hkv
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    kv_spec = pl.BlockSpec((1, 1, block_k, d),
+                           lambda bi, hi, qi, ki, rep=rep: (bi, hi // rep, ki, 0))
+    out, lse = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          n_k_blocks=nk, save_lse=True),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_q, 1), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, sq, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention_vjp(q, k, v, statics):
+    """Differentiable flash attention. ``statics`` is the hashable tuple
+    (scale, causal, window, block_q, block_k, interpret); shapes must be
+    block multiples (ops.flash_attention_train pads)."""
+    out, _ = _fwd_with_lse(q, k, v, statics)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, statics):
+    out, lse = _fwd_with_lse(q, k, v, statics)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(statics, res, dout):
+    scale, causal, window, block_q, block_k, interpret = statics
+    q, k, v, out, lse = res
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    rep = h // hkv
+    nq, nk = sq // block_q, sk // block_k
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    dot = dout.transpose(0, 2, 1, 3)
+    delta = jnp.sum(dot.astype(jnp.float32)
+                    * out.transpose(0, 2, 1, 3).astype(jnp.float32),
+                    axis=-1, keepdims=True)                # (B, H, Sq, 1)
+    q_spec = pl.BlockSpec((1, 1, block_q, d),
+                          lambda bi, hi, qi, ki: (bi, hi, qi, 0))
+    row_spec = pl.BlockSpec((1, 1, block_q, 1),
+                            lambda bi, hi, qi, ki: (bi, hi, qi, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_k, d),
+                           lambda bi, hi, qi, ki, rep=rep: (bi, hi // rep, ki, 0))
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          n_k_blocks=nk),
+        grid=(b, h, nq, nk),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt, dot, lse, delta)
+    # dK/dV grid: K blocks outer, Q sweep innermost
+    q_spec_t = pl.BlockSpec((1, 1, block_q, d),
+                            lambda bi, hi, ki, qi: (bi, hi, qi, 0))
+    row_spec_t = pl.BlockSpec((1, 1, block_q, 1),
+                              lambda bi, hi, ki, qi: (bi, hi, qi, 0))
+    kv_spec_t = pl.BlockSpec((1, 1, block_k, d),
+                             lambda bi, hi, ki, qi, rep=rep: (bi, hi // rep, ki, 0))
+    kv_out_spec = pl.BlockSpec((1, 1, block_k, d),
+                               lambda bi, hi, ki, qi: (bi, hi, ki, 0))
+    dkh, dvh = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          n_q_blocks=nq),
+        grid=(b, h, nk, nq),
+        in_specs=[q_spec_t, kv_spec_t, kv_spec_t, q_spec_t, row_spec_t,
+                  row_spec_t],
+        out_specs=[kv_out_spec, kv_out_spec],
+        out_shape=[jax.ShapeDtypeStruct((b, h, sk, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, h, sk, d), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((block_k, d), jnp.float32),
+                        pltpu.VMEM((block_k, d), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt, dot, lse, delta)
+    # GQA: per-query-head dK/dV sum over the head group (fp32), then layout
+    # back to (B, Sk, Hkv, D)
+    dk = dkh.reshape(b, hkv, rep, sk, d).sum(axis=2)
+    dv = dvh.reshape(b, hkv, rep, sk, d).sum(axis=2)
+    return (dq.transpose(0, 2, 1, 3),
+            dk.transpose(0, 2, 1, 3).astype(k.dtype),
+            dv.transpose(0, 2, 1, 3).astype(v.dtype))
+
+
+flash_attention_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)

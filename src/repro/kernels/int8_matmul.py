@@ -22,6 +22,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -79,3 +80,104 @@ def int8_matmul(x: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray, *,
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(x, q, scale.reshape(1, n))
+
+
+# ---------------------------------------------------------------------------
+# Training fast path: custom VJP (DESIGN.md §13)
+#
+# The backward wrt the activations is itself a fused kernel: dx = dy' @ q^T
+# with the per-channel scale folded into dy in-register (dy' = dy * scale)
+# and the int8 weight tile dequantized *inside the kernel body* — the
+# transposed weight never exists in fp in memory, the only narrow->wide
+# widening happens after the HBM->VMEM DMA, exactly like the forward.
+#
+# q is frozen int8 (its cotangent is float0 — quantized-weight training
+# updates the fp32 master copy through the straight-through estimator at the
+# call site); scale gets a real gradient, recovered from the saved forward
+# output: dscale[n] = sum_m dy[m,n] * y[m,n] / scale[n].
+# ---------------------------------------------------------------------------
+
+
+def _int8_bwd_dx_kernel(dy_ref, q_ref, scale_ref, dx_ref, acc_ref, *,
+                        n_n_blocks: int):
+    """One (bm, bk) dx tile; program_id(2) sweeps N blocks."""
+    n_idx = pl.program_id(2)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # fold the per-channel scale into the cotangent (VPU), dequantize the
+    # int8 weight tile in-register, contract over the shared N axis (MXU)
+    g = dy_ref[...].astype(jnp.float32) * scale_ref[...].astype(jnp.float32)
+    w = q_ref[...].astype(jnp.float32)                       # (bk, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        g, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(n_idx == n_n_blocks - 1)
+    def _finish():
+        dx_ref[...] = acc_ref[...].astype(dx_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret", "out_dtype"))
+def int8_matmul_dx(dy: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray, *,
+                   block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                   interpret: bool = False, out_dtype=None) -> jnp.ndarray:
+    """dx[m,k] = sum_n dy[m,n] * scale[n] * q[k,n] — the int8 backward."""
+    m, n = dy.shape
+    k, n2 = q.shape
+    assert n == n2 and scale.shape == (n,), (dy.shape, q.shape, scale.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, n, k), (block_m, block_n, block_k))
+    out_dtype = out_dtype or dy.dtype
+    nn = n // block_n
+
+    return pl.pallas_call(
+        functools.partial(_int8_bwd_dx_kernel, n_n_blocks=nn),
+        grid=(m // block_m, k // block_k, nn),
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j, ni: (i, ni)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, ni: (j, ni)),
+            pl.BlockSpec((1, block_n), lambda i, j, ni: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_k), lambda i, j, ni: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_k), jnp.float32)],
+        interpret=interpret,
+    )(dy, q, scale.reshape(1, n))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def int8_matmul_vjp(x, q, scale, statics):
+    """Differentiable int8 matmul. ``statics`` is the hashable tuple
+    (block_m, block_n, block_k, interpret, x_dtype_name); shapes must be
+    block multiples (ops.int8_matmul_train pads). The forward output is
+    fp32 so the dscale residual stays exact."""
+    block_m, block_n, block_k, interpret, _ = statics
+    return int8_matmul(x, q, scale, block_m=block_m, block_n=block_n,
+                       block_k=block_k, interpret=interpret,
+                       out_dtype=jnp.float32)
+
+
+def _int8_vjp_fwd(x, q, scale, statics):
+    y = int8_matmul_vjp(x, q, scale, statics)
+    return y, (q, scale, y)
+
+
+def _int8_vjp_bwd(statics, res, dy):
+    block_m, block_n, block_k, interpret, x_dtype = statics
+    q, scale, y = res
+    dy32 = dy.astype(jnp.float32)
+    dx = int8_matmul_dx(dy32, q, scale, block_m=block_m, block_n=block_n,
+                        block_k=block_k, interpret=interpret,
+                        out_dtype=jnp.dtype(x_dtype))
+    # y = acc * scale  =>  dscale[n] = sum_m dy[m,n] * acc[m,n]
+    #                               = sum_m dy[m,n] * y[m,n] / scale[n]
+    safe = jnp.where(scale == 0, 1.0, scale)
+    dscale = (jnp.sum(dy32 * y, axis=0) / safe).astype(scale.dtype)
+    dq = np.zeros(q.shape, dtype=jax.dtypes.float0)   # frozen int8 codes
+    return dx, dq, dscale
+
+
+int8_matmul_vjp.defvjp(_int8_vjp_fwd, _int8_vjp_bwd)

@@ -176,6 +176,69 @@ def _round_up_pow2(n: int) -> int:
     return p
 
 
+# -----------------------------------------------------------------------------
+# Training fast path: differentiable wrappers (custom-VJP kernels, §13)
+# -----------------------------------------------------------------------------
+
+def flash_attention_train(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                          scale: Optional[float] = None, causal: bool = True,
+                          window: int = -1, block_q: int = 128,
+                          block_k: int = 128,
+                          interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Differentiable flash attention (custom-VJP Pallas kernels).
+
+    Same shapes/semantics as :func:`flash_attention`, but ``jax.grad``
+    through it runs the fused backward kernels (recompute-from-lse; no
+    O(Sq*Sk) probability tensor) instead of failing on the pallas_call.
+    Padding/slicing here is plain jnp, so its VJP composes with the kernel's.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(block_q, _round_up_pow2(sq))
+    bk = min(block_k, _round_up_pow2(sk))
+    # same ragged-shape escape as the inference wrapper: padded keys are
+    # only hidden by causal masking when sq <= sk
+    if (-sk) % bk != 0 and (not causal or sq > sk):
+        return _ref.attention_ref(q, k, v, scale=scale, causal=causal,
+                                  window=window)
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    statics = (float(scale), bool(causal), int(window), bq, bk,
+               bool(interpret))
+    out = _fa.flash_attention_vjp(qp, kp, vp, statics)
+    return out[:, :sq]
+
+
+def int8_matmul_train(x: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray, *,
+                      block_m: int = 128, block_n: int = 128,
+                      block_k: int = 512,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Differentiable int8 matmul: dx runs the fused in-kernel-dequant
+    backward, dscale is recovered from the saved fp32 forward output, and
+    the int8 codes are frozen (float0 cotangent — pair with an STE at the
+    call site for quantization-aware training). Returns x.dtype."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = q.shape[-1]
+    sc = jnp.broadcast_to(scale.astype(jnp.float32).reshape(-1, n)
+                          if scale.ndim else scale.astype(jnp.float32),
+                          (1, n)).reshape(n)
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    bm = min(block_m, max(8, -(-m // 8) * 8))
+    x2 = _pad_to(_pad_to(x2, 0, bm), 1, block_k)
+    qp = _pad_to(_pad_to(q, 0, block_k), 1, block_n)
+    # pad scale with ones, not zeros: the dscale residual divides by it
+    sp = _pad_to(sc, 0, block_n, value=1.0)
+    statics = (bm, block_n, block_k, bool(interpret), jnp.dtype(x.dtype).name)
+    y = _im.int8_matmul_vjp(x2, qp, sp, statics)
+    return y[:m, :n].reshape(*lead, n).astype(x.dtype)
+
+
 def attention_auto(q, k, v, *, scale=None, causal=True, window=-1,
                    use_flash: bool = True):
     """Dispatch: flash kernel on TPU / interpret-validated path, else oracle."""

@@ -31,7 +31,8 @@ from repro.models import transformer as tf_lib
 from repro.optim import AdamWConfig
 from repro.optim.schedules import warmup_cosine
 from repro.checkpoint import CheckpointConfig
-from repro.train import TrainConfig, Trainer
+from repro.train import (TrainConfig, Trainer, TrainEngine,
+                         TrainEngineConfig)
 from repro.train.ft import HeartbeatWriter
 
 
@@ -83,6 +84,34 @@ def build_smoke_trainer(arch_id: str, *, steps: int, ckpt_dir: Optional[str],
     return trainer
 
 
+def build_smoke_engine(arch_id: str, *, steps: int, grid_mix: str = "NY",
+                       seed: int = 0, global_batch: int = 8,
+                       seq_len: int = 64, steps_per_tick: int = 8,
+                       lr: float = 3e-3) -> TrainEngine:
+    """Fused-engine variant of build_smoke_trainer (DESIGN.md §13): same
+    arch smoke config, data stream, and AdamW schedule, but the steps run
+    through the device-resident TrainEngine tick with per-phase energy
+    accounting. Decoder-only archs only (the engine's cost model and the
+    flash-VJP routing are LM-shaped; encdec smokes stay on the Trainer)."""
+    arch = cfgbase.get(arch_id)
+    if arch.kind == "encdec":
+        raise SystemExit(f"{arch_id}: encdec smoke runs use --engine loop")
+    cfg = arch.make_smoke()
+    params = tf_lib.init_lm(jax.random.PRNGKey(seed), cfg,
+                            dtype=jnp.float32).params
+    pipeline = make_pipeline(DataConfig(
+        vocab=cfg.vocab, seq_len=seq_len, global_batch=global_batch,
+        seed=seed, source="markov"))
+    acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+        device="tpu_v5e", n_devices=jax.device_count(), grid_mix=grid_mix))
+    return TrainEngine.for_lm(
+        params, cfg,
+        opt_cfg=AdamWConfig(lr=warmup_cosine(lr, max(steps // 10, 1), steps)),
+        pipeline=pipeline,
+        engine_cfg=TrainEngineConfig(steps_per_tick=steps_per_tick),
+        accountant=acct)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -93,6 +122,12 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--grid-mix", default="NY")
     ap.add_argument("--report", default=None, help="write accounting JSON")
+    ap.add_argument("--engine", choices=("loop", "fused"), default="loop",
+                    help="loop: host-loop Trainer (checkpoint/FT path); "
+                         "fused: device-resident TrainEngine tick with "
+                         "per-phase energy accounting (DESIGN.md §13)")
+    ap.add_argument("--steps-per-tick", type=int, default=8,
+                    help="fused engine: optimizer steps per jitted tick")
     args = ap.parse_args()
 
     if not args.smoke:
@@ -100,6 +135,21 @@ def main() -> None:
             "full-scale training needs a TPU fleet; on this container use "
             "`python -m repro.launch.dryrun` (the compile-time proof) or "
             "--smoke (the runnable reduced config).")
+
+    if args.engine == "fused":
+        eng = build_smoke_engine(args.arch, steps=args.steps,
+                                 grid_mix=args.grid_mix,
+                                 steps_per_tick=args.steps_per_tick)
+        metrics = eng.run(args.steps)
+        print("final metrics:", json.dumps(metrics))
+        print("engine summary:", json.dumps(eng.summary()))
+        rep = eng.accountant.report()
+        print("carbon report:", json.dumps(rep, default=float))
+        if args.report:
+            with open(args.report, "w") as f:
+                json.dump({"metrics": metrics, "summary": eng.summary(),
+                           "carbon": rep}, f, default=float)
+        return
 
     tr = build_smoke_trainer(args.arch, steps=args.steps,
                              ckpt_dir=args.ckpt_dir, grid_mix=args.grid_mix)

@@ -1,0 +1,110 @@
+"""Dtype-aware modeled traffic/compute for LM workloads (DESIGN.md §12/§13).
+
+The paper's core claim — per-byte data movement, not FLOPs, bounds edge
+energy — needs the runtime to *bill* bytes and FLOPs from the actual
+resident arrays. This module is the shared cost model: the serve engine
+bills its per-tick decode/prefill traffic through it, the train engine its
+per-step forward/backward/optimizer phases. Formulas are deliberately
+simple enough to recompute by hand (tests/test_train_accounting.py pins
+them):
+
+* a weight of E elements costs 2E FLOPs per token regardless of storage
+  dtype (int8 changes bytes, not FLOPs);
+* causal full-sequence attention costs 2 * n_attn * (H*Dh) * S FLOPs per
+  token (the causal half of the 4x qk+pv term);
+* the backward costs 2x the forward's FLOPs (grad-wrt-input + grad-wrt-
+  weight matmuls per forward matmul);
+* forward streams the weight tree once; backward streams it again (dx
+  needs W^T) and writes fp32 grads; the optimizer reads grads, reads+
+  writes its state, and reads+writes params.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.core import energy
+from repro.models import transformer as tf_lib
+
+PyTree = Any
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Resident bytes of a pytree — dtype-aware (int8 leaves bill 1 byte)."""
+    return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(tree))
+
+
+def kv_bytes(caches: PyTree) -> int:
+    """Bytes of the K/V payload (codes + scales; excludes position tags)."""
+    total = 0
+    for entry in caches.values():
+        for key in ("kv", "kv_scale"):
+            if key in entry:
+                total += tree_bytes(entry[key])
+    return total
+
+
+def matmul_weight_elems(params: PyTree, cfg: tf_lib.LMConfig) -> float:
+    """Logical matmul-weight elements executed per token (a weight of E
+    elements costs 2E FLOPs/token regardless of storage dtype — int8
+    changes bytes, not FLOPs). MoE experts count at their top_k/n_experts
+    activation fraction; includes the unembedding projection; excludes
+    norms/biases."""
+    from repro.quant.int8 import SERVING_QUANT_KEYS
+    total = 0.0
+    moe_frac = (cfg.moe_cfg.top_k / cfg.moe_cfg.n_experts
+                if cfg.moe_cfg is not None else 1.0)
+
+    def walk(p, frac):
+        nonlocal total
+        for k, v in p.items():
+            if isinstance(v, dict):
+                if "q8" in v:
+                    if k in SERVING_QUANT_KEYS:
+                        total += frac * int(v["q8"].size)
+                else:
+                    walk(v, moe_frac if k == "moe" else frac)
+            elif k in SERVING_QUANT_KEYS and getattr(v, "ndim", 0) >= 2:
+                total += frac * int(v.size)
+
+    walk(params, 1.0)
+    if cfg.tie_embeddings:
+        total += int(params["embed"]["w"].size)
+    else:
+        total += int(params["unembed"]["w"].size)
+    return total
+
+
+def attn_layers(cfg: tf_lib.LMConfig) -> int:
+    pat = sum(1 for sp in cfg.pattern if sp.kind == "attn") * cfg.repeats
+    return pat + sum(1 for sp in cfg.tail if sp.kind == "attn")
+
+
+def lm_train_step_cost(params: PyTree, cfg: tf_lib.LMConfig, *,
+                       batch: int, seq_len: int,
+                       opt_state: PyTree = None) -> energy.TrainStepCost:
+    """Per-optimizer-step modeled cost for one LM training step.
+
+    ``params`` is the live (dtype-bearing) weight tree, ``opt_state`` the
+    optimizer state tree (its resident bytes bill the update phase).
+    """
+    tokens = float(batch) * float(seq_len)
+    w_elems = matmul_weight_elems(params, cfg)
+    attn_dims = cfg.n_heads * cfg.resolved_head_dim
+    attn_flops_tok = 2.0 * attn_layers(cfg) * attn_dims * seq_len
+    fwd_flops = (2.0 * w_elems + attn_flops_tok) * tokens
+    weight_bytes = float(tree_bytes(params))
+    n_params = float(sum(int(l.size) for l in jax.tree.leaves(params)))
+    grad_bytes = 4.0 * n_params                    # grads are fp32
+    opt_bytes_ = float(tree_bytes(opt_state)) if opt_state is not None else 0.0
+    return energy.TrainStepCost(
+        fwd_flops=fwd_flops,
+        bwd_flops=2.0 * fwd_flops,
+        fwd_bytes=weight_bytes,
+        bwd_bytes=weight_bytes + grad_bytes,
+        opt_bytes=grad_bytes + 2.0 * opt_bytes_ + 2.0 * weight_bytes,
+        tokens=tokens,
+        samples=float(batch),
+    )

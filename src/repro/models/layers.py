@@ -271,6 +271,11 @@ class AttnConfig:
     # int8 kernel (set by LMConfig.attn_cfg on the quantized serving fast
     # path; XLA dequant+einsum elsewhere)
     int8_kernel: bool = False
+    # training fast path (DESIGN.md §13): full-sequence attention through
+    # the custom-VJP flash Pallas kernel — forward saves only (O, lse), the
+    # backward runs the fused recompute kernels instead of autodiff through
+    # sdpa's materialized probability tensor
+    flash_vjp: bool = False
 
     @property
     def scale(self) -> float:
@@ -400,15 +405,31 @@ def sdpa_q_chunked(q, k, v, q_pos, k_pos, *, causal: bool, window,
 
 def attention(params, cfg: AttnConfig, x: jnp.ndarray,
               positions: Optional[jnp.ndarray] = None,
-              window=None) -> jnp.ndarray:
-    """Full (training/prefill) self-attention."""
+              window=None, arange_positions: bool = False) -> jnp.ndarray:
+    """Full (training/prefill) self-attention.
+
+    ``arange_positions``: static promise from the caller that ``positions``
+    is the standard 0..S-1 arange (or None, which synthesizes it) — the
+    precondition for the flash-kernel route, whose masking is by block
+    index, not by the positions tensor.
+    """
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        arange_positions = True
     q, k, v = _project_qkv(params, cfg, x, positions)
     pos1d = positions[..., 0] if positions.ndim == 3 else positions
     w = cfg.window if window is None else window
-    if s > _CHUNKED_SDPA_THRESHOLD:
+    if (cfg.flash_vjp and arange_positions and cfg.causal
+            and isinstance(w, int) and not cfg.sp
+            and cfg.pos_emb != "mrope"):
+        # training fast path: block-index masking is exact because the
+        # caller vouched positions == arange (packed/custom-position
+        # batches stay on the mask-from-positions sdpa paths below)
+        from repro.kernels import ops as kops
+        out = kops.flash_attention_train(q, k, v, scale=cfg.scale,
+                                         causal=True, window=w)
+    elif s > _CHUNKED_SDPA_THRESHOLD:
         out = sdpa_q_chunked(q, k, v, pos1d, pos1d, causal=cfg.causal,
                              window=w, scale=cfg.scale)
     else:

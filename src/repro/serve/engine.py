@@ -127,56 +127,13 @@ def _bucket_len(n: int) -> int:
 
 
 # -- modeled traffic / compute (DESIGN.md §12) --------------------------------
+# Shared with the train engine: models/costing.py is the single cost model
+# (these aliases keep the engine's call sites and tests stable).
 
-def _tree_bytes(tree: PyTree) -> int:
-    """Resident bytes of a pytree — dtype-aware (int8 leaves bill 1 byte)."""
-    return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(tree))
-
-
-def _kv_bytes(caches: PyTree) -> int:
-    """Bytes of the K/V payload (codes + scales; excludes position tags)."""
-    total = 0
-    for entry in caches.values():
-        for key in ("kv", "kv_scale"):
-            if key in entry:
-                total += _tree_bytes(entry[key])
-    return total
-
-
-def _matmul_weight_elems(params: PyTree, cfg: tf_lib.LMConfig) -> float:
-    """Logical matmul-weight elements executed per token (a weight of E
-    elements costs 2E FLOPs/token regardless of storage dtype — int8
-    changes bytes, not FLOPs). MoE experts count at their top_k/n_experts
-    activation fraction; includes the unembedding projection; excludes
-    norms/biases."""
-    from repro.quant.int8 import SERVING_QUANT_KEYS
-    total = 0.0
-    moe_frac = (cfg.moe_cfg.top_k / cfg.moe_cfg.n_experts
-                if cfg.moe_cfg is not None else 1.0)
-
-    def walk(p, frac):
-        nonlocal total
-        for k, v in p.items():
-            if isinstance(v, dict):
-                if "q8" in v:
-                    if k in SERVING_QUANT_KEYS:
-                        total += frac * int(v["q8"].size)
-                else:
-                    walk(v, moe_frac if k == "moe" else frac)
-            elif k in SERVING_QUANT_KEYS and getattr(v, "ndim", 0) >= 2:
-                total += frac * int(v.size)
-
-    walk(params, 1.0)
-    if cfg.tie_embeddings:
-        total += int(params["embed"]["w"].size)
-    else:
-        total += int(params["unembed"]["w"].size)
-    return total
-
-
-def _attn_layers(cfg: tf_lib.LMConfig) -> int:
-    pat = sum(1 for sp in cfg.pattern if sp.kind == "attn") * cfg.repeats
-    return pat + sum(1 for sp in cfg.tail if sp.kind == "attn")
+from repro.models.costing import (attn_layers as _attn_layers,
+                                  kv_bytes as _kv_bytes,
+                                  matmul_weight_elems as _matmul_weight_elems,
+                                  tree_bytes as _tree_bytes)
 
 
 class ServeEngine:

@@ -1,3 +1,6 @@
-"""Training runtime: step builder, Trainer with FT hooks, elastic utilities."""
+"""Training runtime: step builder, Trainer with FT hooks, elastic utilities,
+and the device-resident fused TrainEngine (DESIGN.md §13)."""
 
 from repro.train.loop import TrainConfig, Trainer, make_train_step  # noqa: F401
+from repro.train.engine import (TrainEngine, TrainEngineConfig,  # noqa: F401
+                                TrainStepMetrics)
