@@ -9,11 +9,13 @@ verify:
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
 
-# reproduces BOTH serve bench artifacts: BENCH_serve.json (fused vs
-# host-loop reference) and BENCH_quant.json (bf16 vs int8 fast path)
+# reproduces ALL serve bench artifacts: BENCH_serve.json (fused vs
+# host-loop reference), BENCH_quant.json (bf16 vs int8 fast path), and
+# BENCH_serve_paged.json (dense vs paged+prefix-cache on shared prefixes)
 bench-serve:
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --quant int8
+	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --paged
 
 # training fast path (DESIGN.md §13): fused TrainEngine tick vs the
 # host-loop autodiff-through-reference Trainer -> BENCH_train.json

@@ -1,6 +1,6 @@
-"""Serve-core benchmarks: fused vs. reference, and bf16 vs. int8 serving.
+"""Serve-core benchmarks: fused vs. reference, bf16 vs. int8, dense vs. paged.
 
-Two modes on the SAME model, workload, and backend:
+Three modes on the SAME model and backend:
 
 * default — the fused device-resident engine (one jitted tick, one mask
   readback) against the host-loop reference engine (per-slot ``int(tok)``
@@ -12,8 +12,14 @@ Two modes on the SAME model, workload, and backend:
   reduction shows; wall-clock J/token reported alongside), resident cache
   bytes, and the teacher-forced token-agreement score vs. the
   full-precision oracle. Emits ``BENCH_quant.json``.
+* ``--paged`` — the paged KV cache with prefix reuse (DESIGN.md §14)
+  against the dense engine on a **shared-prefix workload** (one system
+  prompt, distinct user tails — the millions-of-users serving pattern):
+  prefix-hit rate, prefill tokens computed, modeled J/token, saved DRAM
+  joules, and the token-agreement score between the two engines. Emits
+  ``BENCH_serve_paged.json``.
 
-    PYTHONPATH=src python benchmarks/serve_bench.py [--quant int8|none]
+    PYTHONPATH=src python benchmarks/serve_bench.py [--quant int8|--paged]
 """
 
 from __future__ import annotations
@@ -29,6 +35,8 @@ import numpy as np
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 OUT_QUANT_PATH = os.path.join(os.path.dirname(__file__), "..",
                               "BENCH_quant.json")
+OUT_PAGED_PATH = os.path.join(os.path.dirname(__file__), "..",
+                              "BENCH_serve_paged.json")
 
 N_REQUESTS = 12
 MAX_TOKENS = 16
@@ -178,6 +186,84 @@ def bench_quant() -> dict:
     return res
 
 
+def _shared_prefix_prompts(prefix_len=24, tail_len=6):
+    """One shared system prompt + distinct per-request tails — the
+    serving pattern where prefix caching pays (DESIGN.md §14)."""
+    rng = np.random.default_rng(7)
+    sys_prompt = rng.integers(0, 100, size=prefix_len)
+    return [np.concatenate([sys_prompt, rng.integers(0, 100, size=tail_len)])
+            for _ in range(N_REQUESTS)]
+
+
+def bench_paged(prefix_len=24, tail_len=6) -> dict:
+    """Dense vs. paged+prefix-cache on the shared-prefix workload."""
+    from repro.core import accounting
+    from repro.serve import (ServeConfig, ServeEngine, generation_agreement,
+                             run_workload)
+    cfg, params = _model()
+    prompts = _shared_prefix_prompts(prefix_len, tail_len)
+
+    def arm(paged):
+        scfg = (ServeConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                            paged=True, page_size=8)
+                if paged else
+                ServeConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN))
+        eng = ServeEngine(params, cfg, scfg)
+        # warm: compile + prime the prefix cache (the steady state a
+        # long-lived server serves from)
+        run_workload(eng, prompts, max_tokens=MAX_TOKENS)
+        acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        eng.accountant = acct
+        eng.metrics_log = []
+        gens = run_workload(eng, prompts, max_tokens=MAX_TOKENS)
+        assert len(gens) == N_REQUESTS
+        toks = sum(m.tokens for m in eng.metrics_log)
+        wall = sum(m.wall_s for m in eng.metrics_log)
+        rep = acct.report()
+        out = {"decode_tokens": toks,
+               "decode_tokens_per_s": round(toks / wall, 2),
+               "prefill_tokens": sum(m.prefill_tokens
+                                     for m in eng.metrics_log),
+               "j_per_token": rep["modeled_j_per_token"],
+               "j_per_token_wall": rep["j_per_token"],
+               "bytes_moved": rep["bytes_moved"],
+               "modeled_dram_j": rep["modeled_dram_j"]}
+        if paged:
+            out.update(prefix_hit_tokens=rep["prefix_hit_tokens"],
+                       prefix_hit_rate=round(rep["prefix_hit_rate"], 4),
+                       saved_bytes=rep["saved_bytes"],
+                       saved_dram_j=rep["saved_dram_j"])
+        return out, gens
+
+    dense_m, dense_g = arm(False)
+    paged_m, paged_g = arm(True)
+    # uids differ across engines only by submission order (identical here)
+    agreement = generation_agreement(paged_g, dense_g)
+    res = {
+        "workload": {"requests": N_REQUESTS, "max_tokens": MAX_TOKENS,
+                     "slots": MAX_SLOTS, "prefix_len": prefix_len,
+                     "tail_len": tail_len,
+                     "backend": jax.default_backend()},
+        "notes": ("shared-prefix workload: one system prompt + distinct "
+                  "tails. j_per_token is modeled FLOPs + per-byte DRAM "
+                  "energy (deterministic); the paged engine admits only "
+                  "each prompt's non-shared suffix after the first "
+                  "request primes the prefix cache."),
+        "dense": dense_m,
+        "paged": paged_m,
+        "token_agreement": agreement,
+    }
+    res["prefill_token_ratio"] = round(
+        dense_m["prefill_tokens"] / max(paged_m["prefill_tokens"], 1), 2)
+    res["speedup"] = round(dense_m["j_per_token"] / paged_m["j_per_token"], 3)
+    res["wall_speedup"] = round(dense_m["j_per_token_wall"]
+                                / paged_m["j_per_token_wall"], 2)
+    with open(OUT_PAGED_PATH, "w") as f:
+        json.dump(res, f, indent=2)
+    return res
+
+
 def run():
     """benchmarks/run.py hook: name,us_per_call,derived rows."""
     res = bench()
@@ -199,8 +285,20 @@ if __name__ == "__main__":
     ap.add_argument("--quant", choices=("none", "int8"), default="none",
                     help="int8: benchmark the quantized serving fast path "
                          "(bf16 vs int8 arms) into BENCH_quant.json")
+    ap.add_argument("--paged", action="store_true",
+                    help="benchmark the paged KV + prefix-cache engine vs "
+                         "the dense engine on a shared-prefix workload "
+                         "into BENCH_serve_paged.json")
     args = ap.parse_args()
-    if args.quant == "int8":
+    if args.paged:
+        out = bench_paged()
+        print(json.dumps(out, indent=2))
+        print(f"\nwrote {os.path.abspath(OUT_PAGED_PATH)}")
+        print(f"prefix hit rate {out['paged']['prefix_hit_rate']:.1%}; "
+              f"prefill tokens {out['prefill_token_ratio']}x fewer; "
+              f"modeled J/token {out['speedup']}x lower; "
+              f"agreement {out['token_agreement']['agreement']:.2%}")
+    elif args.quant == "int8":
         out = bench_quant()
         print(json.dumps(out, indent=2))
         print(f"\nwrote {os.path.abspath(OUT_QUANT_PATH)}")

@@ -52,6 +52,13 @@ class CarbonAccountant:
         self._active_s = 0.0
         self._bytes_moved = 0.0
         self._modeled_flops = 0.0
+        # prefix-cache ledger (DESIGN.md §14): prompt tokens served from
+        # reused KV pages, and the DRAM/FLOP bill they avoided — the
+        # sustainability win of paged serving, reported first-class
+        self._prefill_tokens = 0.0
+        self._prefix_hit_tokens = 0.0
+        self._saved_bytes = 0.0
+        self._saved_flops = 0.0
         # training-phase ledgers (DESIGN.md §13): forward and backward bill
         # separately — the per-phase split the edge-training literature
         # (DeepEn2023, Sobhani et al.) calls for
@@ -88,10 +95,16 @@ class CarbonAccountant:
         n_bytes = (float(getattr(metrics, "weight_bytes", 0.0))
                    + float(getattr(metrics, "kv_bytes", 0.0)))
         flops = float(getattr(metrics, "flops", 0.0))
-        if n_bytes or flops:
-            with self._lock:
-                self._bytes_moved += n_bytes
-                self._modeled_flops += flops
+        with self._lock:
+            self._bytes_moved += n_bytes
+            self._modeled_flops += flops
+            self._prefill_tokens += float(getattr(metrics,
+                                                  "prefill_tokens", 0.0))
+            self._prefix_hit_tokens += float(getattr(metrics,
+                                                     "prefix_hit_tokens",
+                                                     0.0))
+            self._saved_bytes += float(getattr(metrics, "saved_bytes", 0.0))
+            self._saved_flops += float(getattr(metrics, "saved_flops", 0.0))
 
     def observe_train(self, metrics) -> None:
         """Bill one train-engine tick (train.TrainStepMetrics-shaped).
@@ -205,10 +218,21 @@ class CarbonAccountant:
         op = self.operational_active_j
         modeled_j = self.modeled_compute_j + self.modeled_dram_j
         train = self.train_report()
+        prompt_toks = self._prefill_tokens + self._prefix_hit_tokens
         return {
             **({"train": train} if train else {}),
             "bytes_moved": self._bytes_moved,
             "modeled_flops": self._modeled_flops,
+            # prefix-cache savings (zero for non-paged serving): what the
+            # reused pages did NOT cost in DRAM energy (paper Eq. energy
+            # per byte) and compute
+            "prefix_hit_tokens": self._prefix_hit_tokens,
+            "prefix_hit_rate": (self._prefix_hit_tokens / prompt_toks
+                                if prompt_toks > 0 else 0.0),
+            "saved_bytes": self._saved_bytes,
+            "saved_dram_j": energy.dram_energy_j(self._saved_bytes),
+            "saved_compute_j": energy.compute_energy_j(self._saved_flops,
+                                                       self._spec),
             "modeled_dram_j": self.modeled_dram_j,
             "modeled_compute_j": self.modeled_compute_j,
             "modeled_j_per_token": (modeled_j / self._tokens

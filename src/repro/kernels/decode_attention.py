@@ -23,6 +23,17 @@ block's compute issues.
 Supports causal semantics implicitly (the query is the newest position) and
 sliding windows. Validated in interpret mode against a masked SDPA oracle
 (tests/test_serve_core.py, tests/test_kernels_int8.py).
+
+**Paged variant** (``paged_decode_attention``, DESIGN.md §14): K/V live in a
+shared block *pool* of ``page_size``-token pages instead of one dense
+``max_len`` region per slot; each slot's logical blocks map to physical
+pages through a ``(B, NB)`` page table. The table rides in scalar-prefetch
+SMEM next to the lengths, and the K/V BlockSpec ``index_map`` resolves
+``page_table[b, logical_block]`` *before* the block's DMA issues — the
+gather is the DMA, no materialized per-slot copy of the cache ever exists.
+Everything else (grid, online softmax, per-slot length skip, int8-KV
+in-kernel dequant) matches the dense kernel, so a slot whose pages happen
+to be contiguous computes the identical FLOPs through either entry point.
 """
 
 from __future__ import annotations
@@ -156,4 +167,137 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), out_dtype),
         interpret=interpret,
     )(lengths.astype(jnp.int32), *operands)
+    return out.reshape(b, h, d)
+
+
+def _paged_kernel(len_ref, pt_ref, *refs, scale: float, window: int,
+                  page_size: int, n_blocks: int, quantized: bool):
+    """Same online-softmax body as ``_decode_kernel``; the only difference
+    is upstream — each K/V block was DMA'd from ``pt_ref[bi, ki]``'s pool
+    page rather than from a dense slot-major row, so ``ki`` remains the
+    *logical* block index and the length/window math is unchanged."""
+    del pt_ref                                   # consumed by the index_maps
+    if quantized:
+        q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
+    bi, ki = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[bi]                         # valid prefix; 0 = dead slot
+    k_pos = ki * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = k_pos < length
+    if window > 0:
+        valid &= (length - 1 - k_pos) < window
+
+    @pl.when(jnp.logical_and(length > 0, ki * page_size < length))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (rep, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (ps, d)
+        if quantized:
+            k = k * ks_ref[0, 0]                             # (ps, 1)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(valid, s, NEG_INF)                     # (rep, ps)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (ps, d)
+        if quantized:
+            v = v * vs_ref[0, 0]
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "interpret"))
+def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                           lengths: jnp.ndarray, *, scale: float,
+                           window: int = -1, interpret: bool = False,
+                           k_scale=None, v_scale=None) -> jnp.ndarray:
+    """Decode attention through a paged KV pool.
+
+    q: (B, H, D) one token per slot; k_pool/v_pool: (P, page_size, Hkv, D)
+    the shared block pool; page_table: (B, NB) int32 mapping slot b's
+    logical block j to a physical page (entries past a slot's length must
+    still be in-bounds — the engine points them at the sink page);
+    lengths: (B,) valid logical prefix per slot (0 = dead slot -> zeros).
+
+    ``k_scale``/``v_scale`` (P, page_size, Hkv) fp32 switch on int8-KV
+    mode (pool holds int8 codes, dequantized in the kernel body).
+
+    The grid's K sweep runs over *logical* blocks; the page indirection is
+    entirely inside the BlockSpec index_maps, which read the scalar-
+    prefetched table — so a K/V tile is DMA'd straight from its pool page.
+    Returns (B, H, D) in q.dtype (fp32 for int8 queries).
+    """
+    b, h, d = q.shape
+    p_pages, page_size, hkv, _ = k_pool.shape
+    nb = page_table.shape[1]
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), "pass both scales or neither"
+
+    qg = q.reshape(b, hkv, rep, d)
+    kt = k_pool.transpose(0, 2, 1, 3)            # (P, Hkv, ps, D)
+    vt = v_pool.transpose(0, 2, 1, 3)
+
+    def kv_map(bi, hi, ki, lens, pt):
+        del lens
+        return (pt[bi, ki], hi, 0, 0)
+
+    kv_spec = pl.BlockSpec((1, 1, page_size, d), kv_map)
+    in_specs = [
+        pl.BlockSpec((1, 1, rep, d),
+                     lambda bi, hi, ki, lens, pt: (bi, hi, 0, 0)),
+        kv_spec,
+    ]
+    operands = [qg, kt]
+    if quantized:
+        sc_spec = pl.BlockSpec((1, 1, page_size, 1), kv_map)
+        kst = k_scale.astype(jnp.float32).transpose(0, 2, 1)[..., None]
+        vst = v_scale.astype(jnp.float32).transpose(0, 2, 1)[..., None]
+        in_specs += [sc_spec, kv_spec, sc_spec]
+        operands += [kst, vt, vst]
+    else:
+        in_specs += [kv_spec]
+        operands += [vt]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, rep, d),
+                               lambda bi, hi, ki, lens, pt: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),     # running max
+            pltpu.VMEM((rep, 1), jnp.float32),     # running denom
+            pltpu.VMEM((rep, d), jnp.float32),     # output accumulator
+        ],
+    )
+    out_dtype = jnp.float32 if q.dtype == jnp.int8 else q.dtype
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, window=window,
+                          page_size=page_size, n_blocks=nb,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), out_dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32), *operands)
     return out.reshape(b, h, d)

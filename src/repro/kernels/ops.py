@@ -169,6 +169,36 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                                 k_scale=k_scale, v_scale=v_scale)
 
 
+def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                           lengths: jnp.ndarray, *,
+                           scale: Optional[float] = None, window: int = -1,
+                           interpret: Optional[bool] = None,
+                           k_scale: Optional[jnp.ndarray] = None,
+                           v_scale: Optional[jnp.ndarray] = None
+                           ) -> jnp.ndarray:
+    """Serve-core decode attention through a paged KV pool (DESIGN.md §14).
+
+    q: (B, H, D) — the one new token per slot; k_pool/v_pool:
+    (P, page_size, Hkv, D) shared block pool; page_table: (B, NB) int32
+    (entries past a slot's length must be in-bounds — the engine points
+    them at the sink page); lengths: (B,) valid logical prefix per slot.
+    ``k_scale``/``v_scale`` (P, page_size, Hkv) enable the int8-KV mode.
+
+    No padding is needed: the pool's page dimension is the block unit, and
+    the table indirection replaces the dense kernel's contiguous K sweep.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    assert (k_scale is None) == (v_scale is None), \
+        "pass both KV scales or neither"
+    return _da.paged_decode_attention(q, k_pool, v_pool, page_table, lengths,
+                                      scale=scale, window=window,
+                                      interpret=interpret,
+                                      k_scale=k_scale, v_scale=v_scale)
+
+
 def _round_up_pow2(n: int) -> int:
     p = 8
     while p < n and p < 128:

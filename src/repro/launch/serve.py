@@ -33,6 +33,17 @@ def main() -> None:
     ap.add_argument("--quant", default="none", choices=("none", "int8"),
                     help="int8: serve through the quantized fast path "
                          "(int8 weights + int8 KV cache, DESIGN.md §12)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache with prefix reuse (DESIGN.md §14)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool capacity in pages (default: dense-equivalent)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable content-hash prefix block reuse")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="admit prompts in chunks of this many tokens, "
+                         "interleaved with decode ticks (0 = whole prompt)")
     args = ap.parse_args()
 
     if not args.smoke:
@@ -50,7 +61,11 @@ def main() -> None:
     eng = ServeEngine(params, cfg,
                       ServeConfig(max_slots=args.slots, max_len=256,
                                   temperature=args.temperature,
-                                  quant=args.quant),
+                                  quant=args.quant, paged=args.paged,
+                                  page_size=args.page_size,
+                                  num_pages=args.num_pages,
+                                  prefix_cache=not args.no_prefix_cache,
+                                  prefill_chunk=args.prefill_chunk),
                       accountant=acct,
                       scheduler=Scheduler(SchedulerConfig(policy=args.policy)))
     rng = np.random.default_rng(0)
@@ -72,6 +87,11 @@ def main() -> None:
     if mjpt is not None:
         print(f"modeled (FLOPs+DRAM) J/token: {mjpt:.3e} "
               f"({rep['bytes_moved']:.3g} bytes moved)")
+    if args.paged:
+        print(f"prefix cache: {rep['prefix_hit_rate']:.1%} hit rate "
+              f"({rep['prefix_hit_tokens']:.0f} prompt tokens reused), "
+              f"saved {rep['saved_bytes']:.3g} KV bytes "
+              f"= {rep['saved_dram_j']:.3e} J DRAM")
     print("carbon report:", json.dumps(rep, default=float))
 
 

@@ -578,6 +578,17 @@ def decode_step(params, cfg: LMConfig, token: jnp.ndarray, pos: jnp.ndarray,
         x, nc = _decode_block(params.get(f"tail{i}"), shared, cfg, spec, x,
                               caches[f"tail{i}"], pos)
         new_caches[f"tail{i}"] = nc
+    return _lm_head(params, cfg, x), new_caches
+
+
+def _lm_head(params, cfg: LMConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Shared head: final norm -> (un)tied unembed -> softcap ->
+    true-vocab slice. Used by every cached-decode entry point (decode,
+    prefill, the paged paths) so admission and decode sample from the same
+    distribution family. prefill historically skipped logit_softcap —
+    harmless for argmax (tanh is monotonic) but it biased first-token
+    *temperature* sampling on softcap archs; unified here (no shipped
+    config sets softcap > 0, so no behavior shift today)."""
     x = layers.rms_norm(params["final_norm"], x)
     if cfg.tie_embeddings:
         logits = layers.unembed(params["embed"], x)
@@ -585,7 +596,355 @@ def decode_step(params, cfg: LMConfig, token: jnp.ndarray, pos: jnp.ndarray,
         logits = layers.apply_unembed(params["unembed"], x)
     if cfg.logit_softcap > 0:
         logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
-    return logits[..., :cfg.vocab], new_caches
+    return logits[..., :cfg.vocab]
+
+
+# -----------------------------------------------------------------------------
+# Paged KV cache (DESIGN.md §14): block pool + page-table indirection
+# -----------------------------------------------------------------------------
+
+def paged_supported(cfg: LMConfig) -> bool:
+    """The paged path is attention-only (SSM states are not position-
+    addressable) and replaces ring caches (pages are not reclaimed by
+    window; window masking still applies)."""
+    return (not cfg.ring_cache
+            and all(sp.kind == "attn"
+                    for sp in tuple(cfg.pattern) + tuple(cfg.tail)))
+
+
+def init_paged_caches(cfg: LMConfig, num_pages: int, page_size: int,
+                      dtype=jnp.bfloat16) -> Dict[str, PyTree]:
+    """KV block pools: ``num_pages + 1`` pages of ``page_size`` tokens per
+    attention layer (same pattern/tail tree shape as :func:`init_caches`,
+    pool-major instead of slot-major). The extra page is the **sink** —
+    writes from dead/padded lanes land there, so the host allocator can
+    recycle pages without any device-side scrub. One page table (built by
+    the serve engine) maps every layer's logical blocks to the same
+    physical page ids, which is what makes block-granular prefix sharing a
+    page-table copy instead of a per-layer KV copy.
+
+    No position-tag array: the engine maintains the contiguous-prefix
+    invariant (slot b's valid logical positions are exactly
+    ``[0, len_b)`` through its page chain), so validity is ``pos < len``.
+    Under ``cfg.quant.kv_int8`` pools hold int8 codes plus per-(page,
+    offset, kv-head) fp32 scale pools, exactly mirroring the dense int8
+    cache representation.
+    """
+    if not paged_supported(cfg):
+        raise NotImplementedError(
+            "paged KV caches are attention-only and incompatible with "
+            "ring_cache; use init_caches for SSD/hybrid or ring archs")
+    caches: Dict[str, PyTree] = {}
+    kvh, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    kv_dtype = jnp.int8 if cfg.quant.kv_int8 else dtype
+    p = num_pages + 1                              # +1: sink page
+
+    def one(stacked: bool):
+        shape = (cfg.repeats,) if stacked else ()
+        kv = KVCache(
+            k=jnp.zeros(shape + (p, page_size, kvh, dh), kv_dtype),
+            v=jnp.zeros(shape + (p, page_size, kvh, dh), kv_dtype))
+        if cfg.quant.kv_int8:
+            sc = KVCache(
+                k=jnp.zeros(shape + (p, page_size, kvh), jnp.float32),
+                v=jnp.zeros(shape + (p, page_size, kvh), jnp.float32))
+            return {"kv": kv, "kv_scale": sc}
+        return {"kv": kv}
+
+    for i, _ in enumerate(cfg.pattern):
+        caches[f"pat{i}"] = one(stacked=True)
+    for i, _ in enumerate(cfg.tail):
+        caches[f"tail{i}"] = one(stacked=False)
+    return caches
+
+
+def _paged_gather(cache, page_table: jnp.ndarray, compute_dtype):
+    """Gather a slot-major (B, NB*page_size, kvh, dh) K/V view through the
+    page table (XLA fallback path; the Pallas kernel's index_map does this
+    per-tile without materializing the view). Int8 pools dequantize at
+    gather so attention sees exactly what the dense int8 path sees."""
+    kv = cache["kv"]
+    b, nb = page_table.shape
+    ps = kv.k.shape[1]
+
+    def flat(pool):
+        g = pool[page_table]                       # (B, NB, ps, ...)
+        return g.reshape((b, nb * ps) + g.shape[3:])
+
+    k_all, v_all = flat(kv.k), flat(kv.v)
+    if "kv_scale" in cache:
+        from repro.quant import int8 as int8_lib
+        sc = cache["kv_scale"]
+        k_all = int8_lib.dequantize_rowwise(k_all, flat(sc.k),
+                                            dtype=compute_dtype)
+        v_all = int8_lib.dequantize_rowwise(v_all, flat(sc.v),
+                                            dtype=compute_dtype)
+    else:
+        k_all = k_all.astype(compute_dtype)
+        v_all = v_all.astype(compute_dtype)
+    return k_all, v_all
+
+
+def _paged_decode_attn(p, cfg: LMConfig, spec: BlockSpec, x, cache,
+                       pos: jnp.ndarray, page_table: jnp.ndarray,
+                       active: jnp.ndarray):
+    """One-token attention against the paged pool. ``pos`` is (B,) per-slot
+    positions (the paged path is serve-engine-only, always batched);
+    ``active`` routes dead lanes' writes to the sink page — their table
+    entries may point at pages since recycled to other slots."""
+    acfg = cfg.attn_cfg(spec.window)
+    b = x.shape[0]
+    kv = cache["kv"]
+    kv_int8 = "kv_scale" in cache
+    ps = kv.k.shape[1]
+    nb = page_table.shape[1]
+    sink = kv.k.shape[0] - 1
+    positions = pos[:, None].astype(jnp.int32)                  # (B, 1)
+    if cfg.pos_emb == "mrope":
+        positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
+    q, k_new, v_new = layers._project_qkv(p["attn"], acfg, x, positions)
+    rows = jnp.arange(b)
+    blk = jnp.clip(pos // ps, 0, nb - 1).astype(jnp.int32)
+    page = jnp.where(active, page_table[rows, blk], sink)
+    off = (pos % ps).astype(jnp.int32)
+    if kv_int8:
+        from repro.quant import int8 as int8_lib
+        sc = cache["kv_scale"]
+        k_q, k_s = int8_lib.quantize_rowwise(k_new)     # (B,1,H,D),(B,1,H)
+        v_q, v_s = int8_lib.quantize_rowwise(v_new)
+        k = kv.k.at[page, off].set(k_q[:, 0])
+        v = kv.v.at[page, off].set(v_q[:, 0])
+        k_scale = sc.k.at[page, off].set(k_s[:, 0])
+        v_scale = sc.v.at[page, off].set(v_s[:, 0])
+        new_cache = {"kv": KVCache(k=k, v=v),
+                     "kv_scale": KVCache(k=k_scale, v=v_scale)}
+    else:
+        k = kv.k.at[page, off].set(k_new[:, 0].astype(kv.k.dtype))
+        v = kv.v.at[page, off].set(v_new[:, 0].astype(kv.v.dtype))
+        new_cache = {"kv": KVCache(k=k, v=v)}
+    lengths = (pos + 1).astype(jnp.int32)
+    if cfg.decode_kernel:
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_attention(
+            q[:, 0], k, v, page_table, lengths, scale=acfg.scale,
+            window=spec.window,
+            k_scale=new_cache["kv_scale"].k if kv_int8 else None,
+            v_scale=new_cache["kv_scale"].v if kv_int8 else None)[:, None]
+    else:
+        k_all, v_all = _paged_gather(new_cache, page_table, q.dtype)
+        j_abs = jnp.arange(nb * ps, dtype=jnp.int32)[None]      # (1, W)
+        tags = jnp.where(j_abs < lengths[:, None], j_abs, -1)
+        q_pos = positions[..., 0] if positions.ndim == 3 else positions
+        mask = layers.attention_mask(q_pos, tags, causal=True,
+                                     window=spec.window)
+        mask &= (tags >= 0)[:, None, :]
+        out = layers.sdpa(q, k_all, v_all, mask, acfg.scale)
+    if layers._q8_active(acfg, p["attn"]["wo"]):
+        y = layers.q8_matmul(out, p["attn"]["wo"], contract_ndim=2)
+    else:
+        y = jnp.einsum("bshk,hkd->bsd", out,
+                       layers.wl(p["attn"]["wo"], out.dtype))
+    return y, new_cache
+
+
+def _paged_decode_block(params, shared_params, cfg: LMConfig,
+                        spec: BlockSpec, x, cache, pos, page_table, active):
+    p = shared_params if spec.shared_attn else params
+    h = layers.rms_norm(p["norm_attn"], x)
+    y, cache = _paged_decode_attn(p, cfg, spec, h, cache, pos, page_table,
+                                  active)
+    x = x + y
+    if spec.shared_attn:
+        h = layers.rms_norm(p["norm_ffn"], x)
+        return x + layers.mlp(p["mlp"], h, cfg.act,
+                              int8_kernel=cfg.use_int8_matmul), cache
+    if spec.has_ffn:
+        h = layers.rms_norm(params["norm_ffn"], x)
+        if spec.moe:
+            y, _ = moe_lib.moe_capacity(params["moe"], cfg.moe_cfg, h,
+                                        group_size=h.shape[0] * h.shape[1])
+            x = x + y
+        else:
+            x = x + layers.mlp(params["mlp"], h, cfg.act,
+                               int8_kernel=cfg.use_int8_matmul)
+    return x, cache
+
+
+def paged_decode_step(params, cfg: LMConfig, token: jnp.ndarray,
+                      pos: jnp.ndarray, page_table: jnp.ndarray,
+                      caches: Dict[str, PyTree],
+                      active: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """One decode step against the paged pools. token (B,1) int32, pos (B,)
+    per-slot positions, page_table (B, NB) -> (logits (B,1,V), caches).
+
+    ``active`` (B,) bool: lanes that are really decoding. Inactive lanes
+    still flow through the batch (the engine tick is one fused call) but
+    their K/V writes are routed to the sink page — their page-table rows
+    may reference pages that have been recycled to other slots.
+    """
+    if active is None:
+        active = jnp.ones(token.shape[0], bool)
+    x = layers.embed(params["embed"], token)
+    shared = params.get("shared_attn")
+    pat_caches = {f"pat{i}": caches[f"pat{i}"]
+                  for i in range(len(cfg.pattern))}
+
+    def body(x, inp):
+        pat_params, pat_cache = inp
+        new_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, nc = _paged_decode_block(pat_params.get(f"pat{i}"), shared,
+                                        cfg, spec, x, pat_cache[f"pat{i}"],
+                                        pos, page_table, active)
+            new_cache[f"pat{i}"] = nc
+        return x, new_cache
+
+    new_caches: Dict[str, PyTree] = {}
+    if cfg.repeats > 0:
+        x, new_pat = jax.lax.scan(
+            body, x, (_pattern_stack_params(params, cfg), pat_caches))
+        new_caches.update(new_pat)
+    for i, spec in enumerate(cfg.tail):
+        x, nc = _paged_decode_block(params.get(f"tail{i}"), shared, cfg,
+                                    spec, x, caches[f"tail{i}"], pos,
+                                    page_table, active)
+        new_caches[f"tail{i}"] = nc
+    return _lm_head(params, cfg, x), new_caches
+
+
+def paged_extend(params, cfg: LMConfig, tokens: jnp.ndarray,
+                 starts: jnp.ndarray, lens: jnp.ndarray,
+                 page_table: jnp.ndarray, caches: Dict[str, PyTree]
+                 ) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """Extend-prefill: run a chunk of prompt tokens against pre-populated
+    paged caches. The single primitive behind suffix-after-prefix-hit
+    admission AND chunked prefill (DESIGN.md §14).
+
+    tokens: (B, C) right-padded chunk per row; starts: (B,) absolute
+    position of each row's first chunk token (0 = plain prefill;
+    ``shared_len`` after a prefix-cache hit; ``k*chunk`` mid-chunking);
+    lens: (B,) valid tokens per row this call (0 = dead row — its writes
+    go to the sink page). Chunk K/V is written into the row's pages, then
+    each chunk query attends over the gathered cache window [0, start)
+    **plus the chunk itself in full precision** — exactly the dense
+    prefill's numerics for the in-chunk part and the dense decode's
+    (storage-dtype round-tripped) numerics for the cached part.
+
+    Returns per-row logits at the chunk's last valid token, (B, 1, V) —
+    meaningful only for rows whose prompt ends in this chunk.
+    """
+    b, c = tokens.shape
+    nb = page_table.shape[1]
+    x = layers.embed(params["embed"], tokens)
+    rel = jnp.arange(c, dtype=jnp.int32)[None]                  # (1, C)
+    valid = rel < lens[:, None]                                 # (B, C)
+    pos_abs = starts[:, None].astype(jnp.int32) + rel           # (B, C)
+    shared = params.get("shared_attn")
+
+    def fill_attn(p, spec, x, cache):
+        acfg = cfg.attn_cfg(spec.window)
+        kv = cache["kv"]
+        kv_int8 = "kv_scale" in cache
+        ps = kv.k.shape[1]
+        sink = kv.k.shape[0] - 1
+        w = nb * ps
+        positions = (jnp.broadcast_to(pos_abs[..., None], (b, c, 3))
+                     if cfg.pos_emb == "mrope" else pos_abs)
+        h = layers.rms_norm(p["norm_attn"], x)
+        q, k_new, v_new = layers._project_qkv(p["attn"], acfg, h, positions)
+        # scatter the chunk's K/V into the rows' pages (invalid lanes ->
+        # sink); rope-rotated K is what lands in HBM, same as prefill
+        rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, c))
+        blk = jnp.clip(pos_abs // ps, 0, nb - 1)
+        page = jnp.where(valid, page_table[rows, blk], sink)    # (B, C)
+        off = pos_abs % ps
+        if kv_int8:
+            from repro.quant import int8 as int8_lib
+            sc = cache["kv_scale"]
+            k_st, k_sc = int8_lib.quantize_rowwise(k_new)
+            v_st, v_sc = int8_lib.quantize_rowwise(v_new)
+            kc = kv.k.at[page, off].set(k_st)
+            vc = kv.v.at[page, off].set(v_st)
+            new_cache = {
+                "kv": KVCache(k=kc, v=vc),
+                "kv_scale": KVCache(k=sc.k.at[page, off].set(k_sc),
+                                    v=sc.v.at[page, off].set(v_sc))}
+        else:
+            kc = kv.k.at[page, off].set(k_new.astype(kv.k.dtype))
+            vc = kv.v.at[page, off].set(v_new.astype(kv.v.dtype))
+            new_cache = {"kv": KVCache(k=kc, v=vc)}
+        # attend over the gathered window, with the chunk's own K/V taken
+        # from the full-precision activations (dense-prefill numerics; the
+        # cached prefix is storage-dtype, dense-decode numerics)
+        k_all, v_all = _paged_gather(new_cache, page_table, q.dtype)
+        j_abs = jnp.arange(w, dtype=jnp.int32)[None]            # (1, W)
+        rel_w = j_abs - starts[:, None]                         # (B, W)
+        in_chunk = (rel_w >= 0) & (rel_w < lens[:, None])
+        idx = jnp.clip(rel_w, 0, c - 1)
+        k_att = jnp.where(in_chunk[..., None, None],
+                          jnp.take_along_axis(k_new.astype(q.dtype),
+                                              idx[..., None, None], axis=1),
+                          k_all)
+        v_att = jnp.where(in_chunk[..., None, None],
+                          jnp.take_along_axis(v_new.astype(q.dtype),
+                                              idx[..., None, None], axis=1),
+                          v_all)
+        tags = jnp.where(j_abs < (starts + lens)[:, None], j_abs, -1)
+        mask = layers.attention_mask(pos_abs, tags, causal=True,
+                                     window=spec.window)
+        mask &= (tags >= 0)[:, None, :]
+        out = layers.sdpa(q, k_att, v_att, mask, acfg.scale)
+        if layers._q8_active(acfg, p["attn"]["wo"]):
+            y = layers.q8_matmul(out, p["attn"]["wo"], contract_ndim=2)
+        else:
+            y = jnp.einsum("bshk,hkd->bsd", out,
+                           layers.wl(p["attn"]["wo"], out.dtype))
+        return x + y, new_cache
+
+    def fill_block(p, spec, x, cache):
+        pp = shared if spec.shared_attn else p
+        x, cache = fill_attn(pp, spec, x, cache)
+        if spec.shared_attn:
+            h = layers.rms_norm(pp["norm_ffn"], x)
+            return x + layers.mlp(pp["mlp"], h, cfg.act,
+                                  int8_kernel=cfg.use_int8_matmul), cache
+        if spec.has_ffn:
+            h = layers.rms_norm(p["norm_ffn"], x)
+            if spec.moe:
+                y, _ = moe_lib.moe_capacity(p["moe"], cfg.moe_cfg, h,
+                                            cfg.moe_group_size)
+                x = x + y
+            else:
+                x = x + layers.mlp(p["mlp"], h, cfg.act,
+                                   int8_kernel=cfg.use_int8_matmul)
+        return x, cache
+
+    def body(x, inp):
+        pat_params, pat_cache = inp
+        new_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, nc = fill_block(pat_params.get(f"pat{i}"), spec, x,
+                               pat_cache[f"pat{i}"])
+            new_cache[f"pat{i}"] = nc
+        return x, new_cache
+
+    pat_caches = {f"pat{i}": caches[f"pat{i}"]
+                  for i in range(len(cfg.pattern))}
+    new_caches: Dict[str, PyTree] = {}
+    if cfg.repeats > 0:
+        x, new_pat = jax.lax.scan(
+            body, x, (_pattern_stack_params(params, cfg), pat_caches))
+        new_caches.update(new_pat)
+    for i, spec in enumerate(cfg.tail):
+        x, nc = fill_block(params.get(f"tail{i}"), spec, x,
+                           caches[f"tail{i}"])
+        new_caches[f"tail{i}"] = nc
+    # per-row last valid chunk token (rows are right-padded to C)
+    idx = jnp.clip(lens - 1, 0, c - 1).astype(jnp.int32)[:, None, None]
+    x_last = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+    return _lm_head(params, cfg, x_last), new_caches
 
 
 def caches_axes(cfg: LMConfig) -> Dict[str, PyTree]:
@@ -787,9 +1146,4 @@ def prefill(params, cfg: LMConfig, tokens: jnp.ndarray,
             idx, (b, 1, x.shape[-1])), axis=1)
     else:
         x_last = x[:, -1:]
-    x = layers.rms_norm(params["final_norm"], x_last)
-    if cfg.tie_embeddings:
-        logits = layers.unembed(params["embed"], x)
-    else:
-        logits = layers.apply_unembed(params["unembed"], x)
-    return logits[..., :cfg.vocab], new_caches
+    return _lm_head(params, cfg, x_last), new_caches

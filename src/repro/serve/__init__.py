@@ -2,6 +2,8 @@
 
 from repro.serve.engine import (Request, ServeConfig, ServeEngine,  # noqa: F401
                                 StepMetrics)
-from repro.serve.quality import token_agreement  # noqa: F401
+from repro.serve.pages import PagePool, block_tokens  # noqa: F401
+from repro.serve.quality import (generation_agreement,  # noqa: F401
+                                 run_workload, token_agreement)
 from repro.serve.reference import ReferenceEngine  # noqa: F401
 from repro.serve.scheduler import Scheduler, SchedulerConfig  # noqa: F401

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import accounting
 from repro.models import transformer as tf_lib
+from repro.serve.pages import ROOT, PagePool, block_tokens
 from repro.serve.scheduler import Scheduler, SchedulerConfig
 
 PyTree = Any
@@ -54,6 +55,20 @@ class ServeConfig:
     # int8 quantizes the weight tree (per-channel scales) AND the KV cache
     # (per-token/head scales); cache_dtype is ignored for K/V in that mode.
     quant: str = "none"
+    # paged KV cache + prefix reuse + chunked prefill (DESIGN.md §14):
+    paged: bool = False
+    page_size: int = 16       # tokens per KV page (block granularity)
+    # pool capacity in pages. None = dense-equivalent:
+    # max_slots * ceil(max_len / page_size) — prefix sharing then *raises*
+    # effective capacity; smaller pools admit by deferral.
+    num_pages: Optional[int] = None
+    # content-matched block reuse at admission: a hit copies page-table
+    # entries instead of recomputing the shared prefix's prefill
+    prefix_cache: bool = True
+    # admit long prompts in chunks of this many tokens, interleaved with
+    # decode ticks (bounds tick-time tail latency). 0 = whole suffix in
+    # one extend call.
+    prefill_chunk: int = 0
 
 
 @dataclasses.dataclass
@@ -82,10 +97,29 @@ class StepMetrics:
     weight_bytes: float = 0.0   # parameter bytes streamed from HBM
     kv_bytes: float = 0.0       # KV-cache bytes read/written
     flops: float = 0.0          # modeled FLOPs
+    # prefix-cache effect of this tick's admission (DESIGN.md §14): prompt
+    # tokens served from cached pages, and the traffic/compute the dense
+    # path would have billed for them — the sustainability win, first-class
+    prefix_hit_tokens: int = 0  # prompt tokens reused via prefix-cache hits
+    saved_bytes: float = 0.0    # KV write bytes NOT moved thanks to reuse
+    saved_flops: float = 0.0    # prefill FLOPs NOT executed thanks to reuse
 
     @property
     def bytes_moved(self) -> float:
         return self.weight_bytes + self.kv_bytes
+
+
+@dataclasses.dataclass
+class _AdmitInfo:
+    """What one admission pass did + its modeled traffic/compute bill."""
+    admitted: int = 0           # requests newly selected this tick
+    prefill_tokens: int = 0     # prompt tokens actually computed this tick
+    weight_passes: int = 0      # extra weight-tree streams (0 or 1)
+    kv_bytes: float = 0.0
+    flops: float = 0.0
+    prefix_hit_tokens: int = 0
+    saved_bytes: float = 0.0
+    saved_flops: float = 0.0
 
 
 @dataclasses.dataclass
@@ -100,12 +134,16 @@ class DeviceState:
     temp: jnp.ndarray           # (B,)  per-slot sampling temperature
     rng: jnp.ndarray            # (B, 2) per-slot PRNG keys (uint32)
     out_buf: jnp.ndarray        # (B, max_len) device-side output ring buffer
+    # paged mode: (B, NB) logical-block -> physical-page map (serve/pages.py
+    # owns allocation; entries past a slot's pages point at the sink page).
+    # dense mode: (B, 0) placeholder.
+    page_table: jnp.ndarray = None
 
 
 jax.tree_util.register_dataclass(
     DeviceState,
     data_fields=["caches", "tok", "pos", "gen", "budget", "active", "temp",
-                 "rng", "out_buf"],
+                 "rng", "out_buf", "page_table"],
     meta_fields=[])
 
 
@@ -118,12 +156,19 @@ def _batch_axis_tree(caches: PyTree) -> PyTree:
     return {k: per_key(k, v) for k, v in caches.items()}
 
 
-def _bucket_len(n: int) -> int:
-    """Pad prompt-batch length to a pow2 bucket (bounds prefill recompiles)."""
+def _bucket_len(n: int, cap: Optional[int] = None) -> int:
+    """Pad prompt-batch length to a pow2 bucket (bounds prefill recompiles).
+
+    ``cap`` clamps the bucket ladder at the configured maximum (max prompt
+    length for dense admission, the chunk size for chunked prefill) — the
+    executable cache then holds at most ``log2(cap)`` entries, and with
+    chunked prefill one chunk-size bucket is the steady state
+    (tests/test_serve_paged.py::TestBucketCap).
+    """
     b = 4
     while b < n:
         b *= 2
-    return b
+    return min(b, cap) if cap is not None else b
 
 
 # -- modeled traffic / compute (DESIGN.md §12) --------------------------------
@@ -159,8 +204,31 @@ class ServeEngine:
         b, cap = serve_cfg.max_slots, serve_cfg.max_len
         base_key = jax.random.PRNGKey(serve_cfg.seed)
         self._base_key = base_key
+        if serve_cfg.paged:
+            # paged KV subsystem (DESIGN.md §14): a shared block pool
+            # replaces the per-slot dense cache; serve/pages.py owns
+            # allocation/refcounts/prefix registry on the host
+            if not tf_lib.paged_supported(self.cfg):
+                raise NotImplementedError(
+                    "paged serving is attention-only (no SSD/hybrid) and "
+                    "incompatible with ring caches")
+            ps = serve_cfg.page_size
+            self._blocks_per_slot = -(-cap // ps)
+            n_pages = serve_cfg.num_pages
+            if n_pages is None:
+                n_pages = b * self._blocks_per_slot
+            self.pool = PagePool(n_pages, ps)
+            caches = tf_lib.init_paged_caches(self.cfg, n_pages, ps,
+                                              serve_cfg.cache_dtype)
+            page_table = jnp.full((b, self._blocks_per_slot),
+                                  self.pool.sink, jnp.int32)
+        else:
+            self.pool = None
+            caches = tf_lib.init_caches(self.cfg, b, cap,
+                                        serve_cfg.cache_dtype)
+            page_table = jnp.zeros((b, 0), jnp.int32)
         self.state = DeviceState(
-            caches=tf_lib.init_caches(self.cfg, b, cap, serve_cfg.cache_dtype),
+            caches=caches,
             tok=jnp.zeros(b, jnp.int32),
             pos=jnp.zeros(b, jnp.int32),
             gen=jnp.zeros(b, jnp.int32),
@@ -169,12 +237,17 @@ class ServeEngine:
             temp=jnp.zeros(b, jnp.float32),
             rng=jax.vmap(lambda i: jax.random.fold_in(base_key, i))(
                 jnp.arange(b)),
-            out_buf=jnp.zeros((b, cap), jnp.int32))
+            out_buf=jnp.zeros((b, cap), jnp.int32),
+            page_table=page_table)
         # host mirrors (admission + finished-mask readbacks keep them exact;
         # no per-slot device transfers needed)
         self.slot_req: List[Optional[Request]] = [None] * b
         self._host_gen = [0] * b
         self._uid = 0
+        # paged host mirrors: pages owned per slot (released at finish) and
+        # in-flight chunked prefills {slot: {"req", "next", "plen", ...}}
+        self._slot_pages: List[List[int]] = [[] for _ in range(b)]
+        self._prefilling: Dict[int, Dict[str, Any]] = {}
         # padded prefill needs causal masking to localize each row; SSM
         # states integrate over padding, so SSD archs admit equal-length
         # groups instead
@@ -198,6 +271,11 @@ class ServeEngine:
         self._matmul_elems = _matmul_weight_elems(self.params, self.cfg)
         self._n_attn = _attn_layers(self.cfg)
         self._attn_dims = self.cfg.n_heads * self.cfg.resolved_head_dim
+        if serve_cfg.paged:
+            # KV payload bytes per cached token (codes + scales), for the
+            # page-granular traffic model (DESIGN.md §14)
+            self._kv_token_bytes = self.kv_cache_bytes / float(
+                (self.pool.num_pages + 1) * serve_cfg.page_size)
         self._build_tick()
         self._build_admit()
 
@@ -212,12 +290,20 @@ class ServeEngine:
     def _build_tick(self):
         cfg, scfg = self.cfg, self.scfg
         eos_id, max_len = scfg.eos_id, scfg.max_len
+        paged = scfg.paged
 
         def tick(params, st: DeviceState) -> Tuple[DeviceState, jnp.ndarray]:
             self.tick_trace_count += 1      # python side effect: trace count
             b = st.tok.shape[0]
-            logits1, caches = tf_lib.decode_step(params, cfg, st.tok[:, None],
-                                                 st.pos, st.caches)
+            if paged:
+                # dead/prefilling lanes' K/V writes go to the sink page —
+                # their page-table rows may reference recycled pages
+                logits1, caches = tf_lib.paged_decode_step(
+                    params, cfg, st.tok[:, None], st.pos, st.page_table,
+                    st.caches, active=st.active)
+            else:
+                logits1, caches = tf_lib.decode_step(
+                    params, cfg, st.tok[:, None], st.pos, st.caches)
             logits = logits1[:, 0]                          # (B, V) fp32
             tok_new, rng_new = _sample(logits, st.rng, st.temp)
             tok_new = jnp.where(st.active, tok_new, st.tok)
@@ -234,16 +320,22 @@ class ServeEngine:
             new_st = DeviceState(
                 caches=caches, tok=tok_new, pos=pos_new, gen=gen_new,
                 budget=st.budget, active=st.active & ~done, temp=st.temp,
-                rng=rng_new, out_buf=out_buf)
+                rng=rng_new, out_buf=out_buf, page_table=st.page_table)
             return new_st, done
 
         self._tick = jax.jit(tick, donate_argnums=self._donate())
 
     def _build_admit(self):
-        """Pad-and-stack prefill + all-slot scatter. Compiled per length
-        bucket (_bucket_len bounds how many buckets exist); each bucket's
-        executable is cached in ``_admit_fns`` and traced exactly once
-        (asserted via ``admit_trace_counts`` in tests/test_serve_quant.py)."""
+        """Admission executable body. Dense: pad-and-stack prefill + all-slot
+        scatter. Paged: page-table update + ``paged_extend`` over the current
+        prefill chunks (suffix-after-prefix-hit and chunked admission share
+        the one primitive). Either way compiled per length bucket
+        (_bucket_len caps how many buckets exist); each bucket's executable
+        is cached in ``_admit_fns`` and traced exactly once (asserted via
+        ``admit_trace_counts`` in tests/test_serve_quant.py)."""
+        if self.scfg.paged:
+            self._admit_impl = self._make_extend_impl()
+            return
         cfg, scfg = self.cfg, self.scfg
         base_key, max_len = self._base_key, scfg.max_len
         pad_ok = self._pad_ok
@@ -286,25 +378,73 @@ class ServeEngine:
                 active=st.active.at[slots].set(~done, mode="drop"),
                 temp=st.temp.at[slots].set(temps, mode="drop"),
                 rng=st.rng.at[slots].set(rng0, mode="drop"),
-                out_buf=st.out_buf.at[slots].set(out_rows, mode="drop"))
+                out_buf=st.out_buf.at[slots].set(out_rows, mode="drop"),
+                page_table=st.page_table)
             return new_st, done
 
         self._admit_impl = admit
 
+    def _make_extend_impl(self):
+        """Paged admission body: one ``paged_extend`` call advances every
+        in-flight prefill by one chunk. Rows whose prompt *ends* in this
+        chunk (``final``) sample their first token and activate their slot;
+        mid-chunk rows only record progress (``pos``) and stay inactive, so
+        decode ticks interleave freely with long admissions."""
+        cfg, scfg = self.cfg, self.scfg
+        base_key, max_len = self._base_key, scfg.max_len
+
+        def extend(params, st: DeviceState, toks, starts, lens, slots,
+                   tables, budgets, temps, uids, final
+                   ) -> Tuple[DeviceState, jnp.ndarray]:
+            # ``tables`` is ROW-major (row j belongs to batch row j, sink-
+            # filled for unused rows) — paged_extend indexes its table by
+            # batch row, NOT by slot id; handing it the slot-major state
+            # table would write through some *other* slot's pages whenever
+            # rows and slots misalign. The persistent slot-major table is
+            # updated separately (OOB slot ids drop).
+            pt = st.page_table.at[slots].set(tables, mode="drop")
+            logits1, caches = tf_lib.paged_extend(
+                params, cfg, toks, starts, lens, tables, st.caches)
+            logits = logits1[:, 0]                          # (N, V)
+            keys = jax.vmap(lambda u: jax.random.fold_in(base_key, u))(uids)
+            tok0, rng0 = _sample(logits, keys, temps)
+            end = starts + lens
+            done = final & ((budgets <= 1) | (end >= max_len - 1))
+            if scfg.eos_id >= 0:
+                done |= final & (tok0 == scfg.eos_id)
+            cap = st.out_buf.shape[1]
+            out_rows = jnp.zeros((tok0.shape[0], cap), jnp.int32
+                                 ).at[:, 0].set(jnp.where(final, tok0, 0))
+            new_st = DeviceState(
+                caches=caches,
+                tok=st.tok.at[slots].set(jnp.where(final, tok0, 0),
+                                         mode="drop"),
+                pos=st.pos.at[slots].set(end, mode="drop"),
+                gen=st.gen.at[slots].set(jnp.where(final, 1, 0),
+                                         mode="drop"),
+                budget=st.budget.at[slots].set(budgets, mode="drop"),
+                active=st.active.at[slots].set(final & ~done, mode="drop"),
+                temp=st.temp.at[slots].set(temps, mode="drop"),
+                rng=st.rng.at[slots].set(rng0, mode="drop"),
+                out_buf=st.out_buf.at[slots].set(out_rows, mode="drop"),
+                page_table=pt)
+            return new_st, done
+
+        return extend
+
     def _admit_exe(self, bucket: int):
-        """One jitted admit executable per prompt-length bucket, built on
+        """One jitted admit/extend executable per length bucket, built on
         first use and reused for every later admission in that bucket — no
         per-call rebuild churn."""
         fn = self._admit_fns.get(bucket)
         if fn is None:
             impl = self._admit_impl
 
-            def admit_b(params, st, toks, lens, slots, budgets, temps, uids):
+            def admit_b(params, st, *args):
                 # python side effect: per-bucket trace count
                 self.admit_trace_counts[bucket] = \
                     self.admit_trace_counts.get(bucket, 0) + 1
-                return impl(params, st, toks, lens, slots, budgets, temps,
-                            uids)
+                return impl(params, st, *args)
 
             fn = jax.jit(admit_b, donate_argnums=self._donate())
             self._admit_fns[bucket] = fn
@@ -318,6 +458,16 @@ class ServeEngine:
         if prompt.size >= self.scfg.max_len:
             raise ValueError(f"prompt length {prompt.size} >= max_len "
                              f"{self.scfg.max_len}")
+        if self.pool is not None:
+            # a request whose worst-case page demand can never be met would
+            # livelock admission (fits() false forever) — reject it here
+            need = self._pages_needed(prompt.size, max_tokens)
+            if need > self.pool.num_pages:
+                raise ValueError(
+                    f"request needs {need} pages (prompt {prompt.size} + "
+                    f"max_tokens {max_tokens}) but the pool has only "
+                    f"{self.pool.num_pages}; raise num_pages or lower "
+                    f"max_tokens")
         self._uid += 1
         self.scheduler.submit(Request(self._uid, prompt, max_tokens,
                                       temperature))
@@ -344,16 +494,25 @@ class ServeEngine:
         finished.append(req)
         self.slot_req[slot] = None
         self._host_gen[slot] = 0
+        if self.pool is not None and self._slot_pages[slot]:
+            # published prefix pages park in the pool's LRU (still
+            # hittable); private decode/suffix pages free immediately
+            self.pool.release_all(self._slot_pages[slot])
+            self._slot_pages[slot] = []
 
     # -- admission ------------------------------------------------------------
 
-    def _admit(self, finished: List[Request]) -> Tuple[int, int, int]:
-        """Batched admission. Returns (n_admitted, prompt_tokens,
-        sum of squared prompt lengths — the prefill-attention FLOPs term)."""
+    def _admit(self, finished: List[Request]) -> "_AdmitInfo":
+        if self.scfg.paged:
+            return self._admit_paged(finished)
+        return self._admit_dense(finished)
+
+    def _admit_dense(self, finished: List[Request]) -> "_AdmitInfo":
+        """Batched dense admission: ONE padded prefill + all-slot scatter."""
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         reqs = self.scheduler.select(len(free))
         if not reqs:
-            return 0, 0, 0
+            return _AdmitInfo()
         if not self._pad_ok:
             # SSD/hybrid archs: only equal-length prompts share a prefill
             same = [r for r in reqs if len(r.prompt) == len(reqs[0].prompt)]
@@ -362,10 +521,10 @@ class ServeEngine:
         nslots = self.scfg.max_slots
         # SSD path runs prefill without per-row lengths, so the stack width
         # must equal the (shared) true prompt length — no bucket padding.
-        # The bucket is clamped to max_len: a wider stack would push prefill
+        # The bucket is capped at max_len: a wider stack would push prefill
         # into its ring branch and silently drop the oldest prompt tokens.
-        lmax = (min(_bucket_len(max(len(r.prompt) for r in reqs)),
-                    self.scfg.max_len)
+        lmax = (_bucket_len(max(len(r.prompt) for r in reqs),
+                            cap=self.scfg.max_len)
                 if self._pad_ok else len(reqs[0].prompt))
         n = len(reqs)
         toks = np.zeros((nslots, lmax), np.int32)
@@ -393,7 +552,160 @@ class ServeEngine:
             self._host_gen[free[j]] = 1
             if done_mask[j]:
                 self._finish_slot(free[j], finished)
-        return len(reqs), int(lens.sum()), int((lens.astype(np.int64) ** 2).sum())
+        toks_n = int(lens.sum())
+        sq = int((lens.astype(np.int64) ** 2).sum())
+        return _AdmitInfo(
+            admitted=len(reqs), prefill_tokens=toks_n, weight_passes=1,
+            kv_bytes=self.kv_cache_bytes * len(reqs) / self.scfg.max_slots,
+            flops=(2.0 * self._matmul_elems * toks_n
+                   + 2.0 * self._n_attn * self._attn_dims * sq))
+
+    # -- paged admission (DESIGN.md §14) --------------------------------------
+
+    def _pages_needed(self, prompt_len: int, max_tokens: int) -> int:
+        """Worst-case (no-hit) page demand of a request: its full possible
+        context, prompt + budget, capped at max_len."""
+        ctx = min(prompt_len + max_tokens, self.scfg.max_len)
+        return -(-ctx // self.scfg.page_size)
+
+    def _admit_paged(self, finished: List[Request]) -> "_AdmitInfo":
+        """Paged admission tick: select new requests that fit the pool,
+        look up their prefix blocks, allocate suffix+decode pages, then
+        advance EVERY in-flight prefill (new and continuing) by one chunk
+        in a single ``paged_extend`` call. With ``prefill_chunk == 0`` the
+        whole suffix lands in one call (the dense-equivalent behaviour,
+        minus the shared prefix); with a chunk size, per-tick prefill work
+        is bounded by ``max_slots * prefill_chunk`` tokens regardless of
+        prompt length — the tick-time tail-latency bound."""
+        scfg = self.scfg
+        ps = scfg.page_size
+        nslots, nb = scfg.max_slots, self._blocks_per_slot
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        budget_pages = [self.pool.available]
+
+        def fits(req: Request) -> bool:
+            # conservative: ignores hits (submit() guarantees need can be
+            # met by an empty pool, so deferral always terminates)
+            need = self._pages_needed(len(req.prompt), req.max_tokens)
+            if need > budget_pages[0]:
+                return False
+            budget_pages[0] -= need
+            return True
+
+        reqs = self.scheduler.select(len(free), fits=fits)
+        admitted = len(reqs)
+        hit_tokens = 0
+        hit_sq = 0.0
+        for j, req in enumerate(reqs):
+            slot = free[j]
+            plen = len(req.prompt)
+            blocks = (block_tokens(req.prompt, ps)
+                      if scfg.prefix_cache else [])
+            hits = self.pool.lookup(blocks)
+            n_hit0 = len(hits)
+            # at least one suffix token must run to produce the sampling
+            # logits, so a fully cached prompt re-computes its last block
+            while hits and len(hits) * ps >= plen:
+                self.pool.release(hits.pop())
+            shared = len(hits) * ps
+            fresh = self.pool.alloc(
+                self._pages_needed(plen, req.max_tokens) - len(hits))
+            if fresh is None:       # estimate raced capacity: defer
+                self.pool.release_all(hits)
+                # the retry re-runs lookup: roll back this attempt's stats
+                # so hit_rate counts each admission once
+                self.pool.unbook_lookup(n_hit0, len(blocks))
+                self.scheduler.requeue_front(
+                    [req] + reqs[j + 1:])
+                admitted = j
+                break
+            pages = hits + fresh
+            self.slot_req[slot] = req
+            self._slot_pages[slot] = pages
+            self._prefilling[slot] = {
+                "req": req, "plen": plen, "next": shared,
+                "blocks": blocks, "pages": pages}
+            hit_tokens += shared
+            hit_sq += float(shared) ** 2
+        # one extend call advances every in-flight prefill by one chunk
+        work = sorted(self._prefilling.items())
+        if not work:
+            return _AdmitInfo(admitted=admitted,
+                              prefix_hit_tokens=hit_tokens)
+        # even with chunking off, cap the implicit chunk at the chunked-
+        # SDPA threshold: extend's attention materializes O(C * window)
+        # fp32 logits per layer, and dense prefill bounds the same blow-up
+        # by switching to sdpa_q_chunked at this width
+        from repro.models.layers import _CHUNKED_SDPA_THRESHOLD
+        chunk_cap = scfg.prefill_chunk or min(scfg.max_len,
+                                              _CHUNKED_SDPA_THRESHOLD)
+        call_lens = [min(w["plen"] - w["next"], chunk_cap)
+                     for _, w in work]
+        # every call_len <= chunk_cap, so the bucket always covers them
+        width = _bucket_len(max(call_lens), cap=chunk_cap)
+        toks = np.zeros((nslots, width), np.int32)
+        starts = np.zeros(nslots, np.int32)
+        lens = np.zeros(nslots, np.int32)
+        slots = np.full(nslots, nslots + 1, np.int32)   # OOB rows drop
+        # row-major page tables for this call; unused rows write to sink
+        tables = np.full((nslots, nb), self.pool.sink, np.int32)
+        budgets = np.ones(nslots, np.int32)
+        temps = np.zeros(nslots, np.float32)
+        uids = np.zeros(nslots, np.int32)
+        final = np.zeros(nslots, bool)
+        for j, ((slot, w), clen) in enumerate(zip(work, call_lens)):
+            req = w["req"]
+            toks[j, :clen] = req.prompt[w["next"]:w["next"] + clen]
+            starts[j] = w["next"]
+            lens[j] = clen
+            slots[j] = slot
+            budgets[j] = req.max_tokens
+            temps[j] = (scfg.temperature if req.temperature is None
+                        else req.temperature)
+            uids[j] = req.uid
+            final[j] = w["next"] + clen >= w["plen"]
+            row = w["pages"] + [self.pool.sink] * (nb - len(w["pages"]))
+            tables[j] = row[:nb]
+        self.state, done = self._admit_exe(width)(
+            self.params, self.state, jnp.asarray(toks), jnp.asarray(starts),
+            jnp.asarray(lens), jnp.asarray(slots), jnp.asarray(tables),
+            jnp.asarray(budgets), jnp.asarray(temps), jnp.asarray(uids),
+            jnp.asarray(final))
+        done_mask = self._readback(done)
+        computed = int(lens.sum())
+        # causal-attention FLOPs of the chunk: sum over rows of
+        # end^2 - start^2 (the start=0 case reduces to the dense bill)
+        ends = (starts + lens).astype(np.int64)
+        attn_sq = float((ends ** 2 - starts.astype(np.int64) ** 2).sum())
+        for j, ((slot, w), clen) in enumerate(zip(work, call_lens)):
+            if final[j]:
+                del self._prefilling[slot]
+                self._host_gen[slot] = 1
+                # publish the prompt's full, now-frozen blocks for reuse,
+                # chaining each key through the CANONICAL page publish()
+                # returns — two slots computing the same prefix in the same
+                # tick must converge on one chain, not register a shadow
+                # chain no lookup can reach
+                if scfg.prefix_cache:
+                    parent = ROOT
+                    for bi, block in enumerate(w["blocks"]):
+                        parent = self.pool.publish(w["pages"][bi], parent,
+                                                   block)
+                if done_mask[j]:
+                    self._finish_slot(slot, finished)
+            else:
+                w["next"] += clen
+        return _AdmitInfo(
+            admitted=admitted, prefill_tokens=computed, weight_passes=1,
+            prefix_hit_tokens=hit_tokens,
+            # extend reads the cached window [0, start) once per chunk and
+            # writes the chunk's KV — page-granular, not whole-cache
+            kv_bytes=self._kv_token_bytes * (float(starts.sum()) + computed),
+            flops=(2.0 * self._matmul_elems * computed
+                   + 2.0 * self._n_attn * self._attn_dims * attn_sq),
+            saved_bytes=self._kv_token_bytes * hit_tokens,
+            saved_flops=(2.0 * self._matmul_elems * hit_tokens
+                         + 2.0 * self._n_attn * self._attn_dims * hit_sq))
 
     # -- main tick ------------------------------------------------------------
 
@@ -401,36 +713,55 @@ class ServeEngine:
         """Admit + one fused decode tick. Returns finished requests."""
         t0 = time.monotonic()
         finished: List[Request] = []
-        admitted, prefill_toks, prefill_sq = self._admit(finished)
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        adm = self._admit(finished)
+        # decoding slots only: mid-prefill paged slots occupy a slot but
+        # don't produce decode tokens until their final chunk activates them
+        active = [i for i, r in enumerate(self.slot_req)
+                  if r is not None and i not in self._prefilling]
+        # live context per decoding slot: the tick attends lengths pos+1 =
+        # prompt + generated-so-far — captured before finishes clear the
+        # slot (page-granular KV read bill)
+        ctx = sum(len(self.slot_req[i].prompt) + self._host_gen[i]
+                  for i in active) if self.scfg.paged else 0
         if active:
             self.state, done = self._tick(self.params, self.state)
             done_mask = self._readback(done)   # the ONLY per-tick transfer
             for i in active:
                 self._host_gen[i] += 1
             for i in np.nonzero(done_mask)[0]:
-                if self.slot_req[int(i)] is not None:
+                if (self.slot_req[int(i)] is not None
+                        and int(i) not in self._prefilling):
                     self._finish_slot(int(i), finished)
-        # modeled traffic/compute of the tick (DESIGN.md §12): every jitted
-        # call streams the full weight tree once; the dense decode reads the
-        # whole resident KV payload, admission writes the admitted fraction.
+        # modeled traffic/compute of the tick (DESIGN.md §12/§14): every
+        # jitted call streams the full weight tree once; the dense decode
+        # reads the whole resident KV payload, while the paged decode reads
+        # only the active slots' live context (page-granular) — admission
+        # terms come pre-computed from the admit path.
         wb = kvb = fl = 0.0
         if active:
             wb += self.weight_bytes
-            kvb += self.kv_cache_bytes
-            fl += len(active) * (2.0 * self._matmul_elems
-                                 + 4.0 * self._n_attn * self._attn_dims
-                                 * self.scfg.max_len)
-        if admitted:
-            wb += self.weight_bytes
-            kvb += self.kv_cache_bytes * admitted / self.scfg.max_slots
-            fl += (2.0 * self._matmul_elems * prefill_toks
-                   + 2.0 * self._n_attn * self._attn_dims * prefill_sq)
+            if self.scfg.paged:
+                kvb += self._kv_token_bytes * ctx
+                fl += (len(active) * 2.0 * self._matmul_elems
+                       + 4.0 * self._n_attn * self._attn_dims * ctx)
+            else:
+                kvb += self.kv_cache_bytes
+                fl += len(active) * (2.0 * self._matmul_elems
+                                     + 4.0 * self._n_attn * self._attn_dims
+                                     * self.scfg.max_len)
+        if adm.weight_passes:
+            wb += self.weight_bytes * adm.weight_passes
+        kvb += adm.kv_bytes
+        fl += adm.flops
         m = StepMetrics(tokens=len(active), active_slots=len(active),
                         wall_s=time.monotonic() - t0,
-                        prefill_tokens=prefill_toks, admitted=admitted,
+                        prefill_tokens=adm.prefill_tokens,
+                        admitted=adm.admitted,
                         queue_depth=len(self.scheduler),
-                        weight_bytes=wb, kv_bytes=kvb, flops=fl)
+                        weight_bytes=wb, kv_bytes=kvb, flops=fl,
+                        prefix_hit_tokens=adm.prefix_hit_tokens,
+                        saved_bytes=adm.saved_bytes,
+                        saved_flops=adm.saved_flops)
         self.last_metrics = m
         self.metrics_log.append(m)
         if self.accountant is not None:
@@ -451,12 +782,21 @@ class ServeEngine:
     def summary(self) -> Dict[str, float]:
         toks = sum(m.tokens for m in self.metrics_log)
         wall = sum(m.wall_s for m in self.metrics_log)
-        return {"ticks": len(self.metrics_log),
-                "decode_tokens": toks,
-                "prefill_tokens": sum(m.prefill_tokens
-                                      for m in self.metrics_log),
-                "wall_s": wall,
-                "decode_tokens_per_s": toks / wall if wall > 0 else 0.0}
+        out = {"ticks": len(self.metrics_log),
+               "decode_tokens": toks,
+               "prefill_tokens": sum(m.prefill_tokens
+                                     for m in self.metrics_log),
+               "wall_s": wall,
+               "decode_tokens_per_s": toks / wall if wall > 0 else 0.0}
+        if self.scfg.paged:
+            hit = sum(m.prefix_hit_tokens for m in self.metrics_log)
+            total = hit + out["prefill_tokens"]
+            out["prefix_hit_tokens"] = hit
+            out["prefix_hit_rate"] = hit / total if total else 0.0
+            out["saved_bytes"] = sum(m.saved_bytes for m in self.metrics_log)
+            out["pool_pages"] = self.pool.num_pages
+            out["pool_pages_live"] = self.pool.live
+        return out
 
 
 def _sample(logits: jnp.ndarray, keys: jnp.ndarray, temp: jnp.ndarray

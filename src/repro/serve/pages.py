@@ -1,0 +1,224 @@
+"""Paged KV subsystem: host-side block pool + exact-match prefix cache.
+
+The paper's argument is that DRAM bytes — not FLOPs — dominate edge
+inference energy, and PR 2's bench confirmed it here. The dense serve core
+still books one ``max_len`` KV region per slot and re-prefills every prompt
+from scratch, so the common serving pattern (a shared system prompt +
+distinct user tails) pays its DRAM/FLOP bill once per request. This module
+is the host half of the fix (DESIGN.md §14):
+
+* **PagePool** — the allocator/refcount ledger for a device-resident block
+  pool (``transformer.init_paged_caches``). Physical page ``num_pages`` is
+  a reserved *sink*: device-side writes from dead/padded lanes land there,
+  so freed pages can be reused without any device-side page-table scrub.
+* **Prefix cache** — full prompt blocks are published under the key
+  ``(parent page id, block token tuple)``. Because the parent page is
+  itself content-verified by induction (block 0's parent is the root
+  sentinel), a registry hit proves *exact* token equality of the entire
+  prefix — there is no hash involved and therefore no collision mode that
+  could serve another request's KV pages. A later admission whose prompt
+  starts with the same blocks *retains* those pages instead of recomputing
+  and re-storing their K/V: the page-table copy replaces the prefill.
+  Shared pages are frozen (only ever read) — a slot's own writes go
+  exclusively to pages it allocated privately, so no copy-on-write
+  machinery is needed.
+* **Eviction** — pages whose refcount drops to zero but that are published
+  in the prefix cache park in an LRU; ``alloc`` reclaims from it only when
+  the free list runs dry, so cached prefixes survive as long as capacity
+  allows.
+
+The device half (pool arrays, page-table-indirect attention) lives in
+models/transformer.py and kernels/decode_attention.py; the admission logic
+that ties them together in serve/engine.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# parent id of a prompt's first block in the prefix registry
+ROOT = -1
+
+BlockKey = Tuple[int, Tuple[int, ...]]          # (parent page, block tokens)
+
+
+def block_tokens(tokens: Sequence[int], page_size: int
+                 ) -> List[Tuple[int, ...]]:
+    """Token tuples of the *full* blocks of ``tokens``. The trailing
+    partial block (if any) is never returned: only full, frozen blocks are
+    shareable."""
+    toks = np.asarray(tokens, np.int64)
+    return [tuple(int(t) for t in toks[j * page_size:(j + 1) * page_size])
+            for j in range(len(toks) // page_size)]
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """Cumulative prefix-cache/allocator counters (block granularity)."""
+    hit_blocks: int = 0
+    missed_blocks: int = 0      # full blocks that were not cached
+    evicted_blocks: int = 0
+    alloc_failures: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hit_blocks + self.missed_blocks
+        return self.hit_blocks / n if n else 0.0
+
+
+class PagePool:
+    """Host-side allocator + prefix registry for ``num_pages`` KV pages.
+
+    Invariants:
+
+    * every page is in exactly one of: the free list, the LRU park (cached,
+      refcount 0), or live (refcount > 0);
+    * a page carries at most one published key, and ``_key_to_page`` /
+      ``_page_key`` mirror each other;
+    * shared (published) pages are immutable — the engine only writes to
+      pages it holds privately (allocated this admission or for decode).
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.sink = num_pages          # reserved garbage row in the pool
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._ref: List[int] = [0] * num_pages
+        self._key_to_page: Dict[BlockKey, int] = {}
+        self._page_key: Dict[int, Optional[BlockKey]] = {}
+        # parent page -> published child pages: when a page is evicted (or
+        # otherwise unpublished) every key that names it as parent becomes
+        # uncertifiable — the page id may be recycled with new content —
+        # so children cascade-unpublish (no stale-chain false hits)
+        self._children: Dict[int, set] = {}
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self.stats = PoolStats()
+
+    # -- capacity -------------------------------------------------------------
+
+    @property
+    def available(self) -> int:
+        """Pages allocatable right now (free + evictable cached)."""
+        return len(self._free) + len(self._lru)
+
+    @property
+    def live(self) -> int:
+        return self.num_pages - self.available
+
+    # -- allocation / refcounting ---------------------------------------------
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` private pages (refcount 1), evicting LRU-parked
+        cached pages only if the free list runs dry. Returns None (and books
+        an alloc failure) when capacity is insufficient — the caller defers
+        the admission rather than corrupting live slots."""
+        if n > self.available:
+            self.stats.alloc_failures += 1
+            return None
+        pages: List[int] = []
+        for _ in range(n):
+            if self._free:
+                p = self._free.pop()
+            else:                       # reclaim the least-recently-used
+                p, _ = self._lru.popitem(last=False)
+                self._unpublish(p)
+                self.stats.evicted_blocks += 1
+            self._ref[p] = 1
+            pages.append(p)
+        return pages
+
+    def retain(self, page: int) -> None:
+        if self._ref[page] == 0 and page in self._lru:
+            del self._lru[page]
+        self._ref[page] += 1
+
+    def release(self, page: int) -> None:
+        assert self._ref[page] > 0, f"double release of page {page}"
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            if self._page_key.get(page) is not None:
+                self._lru[page] = None          # parked, evictable
+            else:
+                self._free.append(page)
+
+    def release_all(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            self.release(p)
+
+    # -- prefix cache ---------------------------------------------------------
+
+    def _unpublish(self, page: int) -> None:
+        stack = [page]
+        while stack:
+            p = stack.pop()
+            key = self._page_key.pop(p, None)
+            if key is not None:
+                if self._key_to_page.get(key) == p:
+                    del self._key_to_page[key]
+                if key[0] != ROOT:
+                    self._children.get(key[0], set()).discard(p)
+            # descendants' prefixes are no longer certifiable through p
+            stack.extend(self._children.pop(p, ()))
+
+    def publish(self, page: int, parent: int, block: Tuple[int, ...]) -> int:
+        """Register a *full, frozen* block under ``(parent page, tokens)``.
+        ``parent`` is the *canonical* page holding the previous block (ROOT
+        for the first), so a registry hit certifies the whole prefix by
+        induction. First writer wins: if the key is already published (an
+        earlier admission computed the same prefix), the existing page
+        stays canonical. Returns the canonical page for the key — callers
+        publishing a chain MUST thread it as the next block's parent, or a
+        duplicate chain would register keys no lookup can reach."""
+        key: BlockKey = (parent, block)
+        existing = self._key_to_page.get(key)
+        if existing is not None:
+            return existing
+        self._unpublish(page)           # a page carries at most one key
+        self._page_key[page] = key
+        self._key_to_page[key] = page
+        if parent != ROOT:
+            self._children.setdefault(parent, set()).add(page)
+        return page
+
+    def lookup(self, blocks: Sequence[Tuple[int, ...]]) -> List[int]:
+        """Longest cached chain for a prompt's full-block token tuples.
+        Retains every returned page (caller owns one reference each) and
+        books block-level hit/miss stats."""
+        pages: List[int] = []
+        parent = ROOT
+        for block in blocks:
+            p = self._key_to_page.get((parent, block))
+            if p is None:
+                break
+            self.retain(p)
+            pages.append(p)
+            parent = p
+        self.stats.hit_blocks += len(pages)
+        self.stats.missed_blocks += len(blocks) - len(pages)
+        return pages
+
+    def unbook_lookup(self, n_hits: int, n_total: int) -> None:
+        """Roll back one ``lookup``'s stats booking — used when the caller
+        defers the admission (the retry will look up, and book, again)."""
+        self.stats.hit_blocks -= n_hits
+        self.stats.missed_blocks -= n_total - n_hits
+
+    # -- introspection --------------------------------------------------------
+
+    def refcount(self, page: int) -> int:
+        return self._ref[page]
+
+    def cached_pages(self) -> Tuple[int, ...]:
+        return tuple(p for p, k in self._page_key.items() if k is not None)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"PagePool(pages={self.num_pages}, free={len(self._free)}, "
+                f"parked={len(self._lru)}, live={self.live}, "
+                f"hit_rate={self.stats.hit_rate:.2%})")

@@ -1,4 +1,4 @@
-"""Accuracy oracle for the quantized serving path (DESIGN.md §12).
+"""Accuracy oracles for the serving fast paths (DESIGN.md §12/§14).
 
 The full-precision model (the same functions serve/reference.py drives) is
 the ground truth; the int8 fast path must stay *bounded* against it. The
@@ -71,3 +71,35 @@ def token_agreement(params: PyTree, cfg: tf_lib.LMConfig,
         lg_q, cc_q = step_q(qparams, cur[:, None], pos, cc_q)
     return {"agreement": agree / total, "tokens": total,
             "max_logit_gap": max_gap}
+
+
+def run_workload(engine, prompts, max_tokens: int = 8,
+                 max_ticks: int = 10000) -> Dict[int, list]:
+    """Submit ``prompts`` in order and drain — the shared driver for
+    engine-vs-engine comparisons. Returns {uid: generated tokens}."""
+    for p in prompts:
+        engine.submit(np.asarray(p, np.int32), max_tokens=max_tokens)
+    done = engine.run_until_drained(max_ticks=max_ticks)
+    return {r.uid: list(r.generated) for r in done}
+
+
+def generation_agreement(got: Dict[int, list], want: Dict[int, list]
+                         ) -> Dict[str, float]:
+    """Position-wise token agreement between two engines' outputs on the
+    same workload (matched by request uid) — the paged-vs-dense acceptance
+    metric (DESIGN.md §14): exact on non-shared workloads, >= 99% on
+    shared-prefix workloads where chunk boundaries may shift one argmax.
+
+    ``identical`` is 1.0 iff every stream matches token for token
+    (including lengths)."""
+    assert set(got) == set(want), (sorted(got), sorted(want))
+    agree = total = 0
+    ident = True
+    for uid in got:
+        a, b = got[uid], want[uid]
+        ident &= a == b
+        total += max(len(a), len(b))
+        agree += sum(1 for x, y in zip(a, b) if x == y)
+    return {"agreement": agree / total if total else 1.0,
+            "tokens": total,
+            "identical": 1.0 if ident else 0.0}

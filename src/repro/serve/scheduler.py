@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, TYPE_CHECKING
+from typing import Callable, Deque, List, Optional, TYPE_CHECKING
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.serve.engine import Request
@@ -46,17 +46,38 @@ class Scheduler:
     def pending(self) -> List["Request"]:
         return list(self._q)
 
-    def select(self, n_free: int) -> List["Request"]:
-        """Pop up to ``n_free`` requests for admission, per policy."""
+    def select(self, n_free: int,
+               fits: Optional[Callable[["Request"], bool]] = None
+               ) -> List["Request"]:
+        """Pop up to ``n_free`` requests for admission, per policy.
+
+        ``fits`` is the engine's capacity gate (the paged engine passes its
+        page-pool estimate; it may consume budget as a side effect, so it
+        is called at most once per candidate). FIFO stops at the first
+        non-fitting request — head-of-line order is the policy's contract —
+        while ``longest_prompt`` skips non-fitting candidates (it already
+        reorders, so admitting a shorter prompt that fits is in-policy).
+        """
         if n_free <= 0 or not self._q:
             return []
         if self.config.policy == "fifo":
-            return [self._q.popleft() for _ in range(min(n_free, len(self._q)))]
+            out: List["Request"] = []
+            while self._q and len(out) < n_free:
+                if fits is not None and not fits(self._q[0]):
+                    break
+                out.append(self._q.popleft())
+            return out
         # longest_prompt: stable pick of the n longest pending prompts
-        ranked = sorted(self._q, key=lambda r: -len(r.prompt))[:n_free]
-        chosen = set(id(r) for r in ranked)
+        ranked = sorted(self._q, key=lambda r: -len(r.prompt))
+        picked: List["Request"] = []
+        for r in ranked:
+            if len(picked) >= n_free:
+                break
+            if fits is None or fits(r):
+                picked.append(r)
+        chosen = set(id(r) for r in picked)
         self._q = deque(r for r in self._q if id(r) not in chosen)
-        return ranked
+        return picked
 
     def requeue_front(self, reqs: List["Request"]) -> None:
         """Return selected-but-not-admitted requests to the queue head

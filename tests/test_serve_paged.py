@@ -1,0 +1,561 @@
+"""Paged KV cache + prefix reuse + chunked prefill (DESIGN.md §14).
+
+Covers the host page pool/prefix registry, the page-table-indirect Pallas
+decode kernel (interpret mode), token-identity of the paged engine against
+the dense engine (the parity oracle), shared-prefix reuse, chunked
+admission, the bucketed-executable cap, scheduler edge cases, and the
+suffix-only accounting of prefix hits.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accounting, energy
+from repro.models import transformer as tf_lib
+from repro.serve import (PagePool, Request, Scheduler, SchedulerConfig,
+                         ServeConfig, ServeEngine, block_tokens,
+                         generation_agreement, run_workload)
+from repro.serve.pages import ROOT
+from repro.serve.engine import _bucket_len
+
+
+def _cfg(vocab=61):
+    return tf_lib.LMConfig(name="t", d_model=48, n_heads=4, n_kv_heads=2,
+                           d_ff=96, vocab=vocab, pattern=(tf_lib.BlockSpec(),),
+                           repeats=2, remat="none", vocab_pad_multiple=1)
+
+
+def _params(cfg, seed=0):
+    return tf_lib.init_lm(jax.random.PRNGKey(seed), cfg,
+                          dtype=jnp.float32).params
+
+
+def _dense(params, cfg, **kw):
+    return ServeEngine(params, cfg, ServeConfig(max_slots=2, max_len=64, **kw))
+
+
+def _paged(params, cfg, **kw):
+    kw.setdefault("page_size", 4)
+    return ServeEngine(params, cfg, ServeConfig(max_slots=2, max_len=64,
+                                                paged=True, **kw))
+
+
+RAGGED = [np.arange(30), np.arange(3) + 7, np.arange(21) + 2,
+          np.arange(9) + 40]
+
+
+def _shared_prefix_workload(n=6, prefix_len=12, tail_len=4):
+    sys_prompt = np.arange(prefix_len) + 20
+    return [np.concatenate([sys_prompt, np.arange(tail_len) + 3 * i])
+            for i in range(n)]
+
+
+# -----------------------------------------------------------------------------
+# Host page pool + prefix registry
+# -----------------------------------------------------------------------------
+
+class TestPagePool:
+    def test_alloc_release_lifecycle(self):
+        pool = PagePool(4, page_size=8)
+        a = pool.alloc(3)
+        assert len(a) == 3 and all(pool.refcount(p) == 1 for p in a)
+        assert pool.available == 1 and pool.live == 3
+        pool.release_all(a)
+        assert pool.available == 4 and pool.live == 0
+        # unpublished pages return to the free list, not the LRU park
+        assert pool.cached_pages() == ()
+
+    def test_alloc_failure_defers(self):
+        pool = PagePool(2, page_size=4)
+        assert pool.alloc(3) is None
+        assert pool.stats.alloc_failures == 1
+        assert pool.available == 2            # nothing leaked
+
+    def _publish_chain(self, pool, pages, blocks):
+        parent = ROOT
+        for p, b in zip(pages, blocks):
+            parent = pool.publish(p, parent, b)
+
+    def test_duplicate_chain_converges_on_canonical(self):
+        """Two slots that computed the same prefix concurrently publish
+        the SAME chain: the loser's pages stay unpublished (freed, not
+        parked) and the registry holds one reachable chain, not a shadow
+        chain keyed on unreachable parents."""
+        pool = PagePool(8, page_size=2)
+        blocks = block_tokens([1, 2, 3, 4, 5, 6], 2)
+        a, b = pool.alloc(3), pool.alloc(3)
+        self._publish_chain(pool, a, blocks)
+        self._publish_chain(pool, b, blocks)     # first writer wins
+        assert set(pool.cached_pages()) == set(a)
+        pool.release_all(a)
+        pool.release_all(b)
+        # the loser's pages went back to the free list; canonical chain
+        # parks in LRU and stays fully hittable
+        assert set(pool.cached_pages()) == set(a)
+        assert pool.lookup(blocks) == a
+        pool.release_all(a)
+
+    def test_publish_lookup_longest_chain(self):
+        pool = PagePool(8, page_size=2)
+        toks = np.arange(8)
+        blocks = block_tokens(toks, 2)
+        pages = pool.alloc(4)
+        self._publish_chain(pool, pages, blocks)
+        # a prompt sharing 3 blocks then diverging hits exactly 3
+        other = np.concatenate([toks[:6], [99, 98]])
+        hits = pool.lookup(block_tokens(other, 2))
+        assert hits == pages[:3]
+        assert all(pool.refcount(p) == 2 for p in hits)   # retained
+        assert pool.stats.hit_blocks == 3
+        assert pool.stats.missed_blocks == 1
+
+    def test_lru_eviction_unpublishes(self):
+        pool = PagePool(2, page_size=2)
+        blocks = block_tokens(np.arange(4), 2)
+        pages = pool.alloc(2)
+        self._publish_chain(pool, pages, blocks)
+        pool.release_all(pages)               # park in LRU, still hittable
+        assert set(pool.cached_pages()) == set(pages)
+        fresh = pool.alloc(1)                 # free list dry -> evict LRU
+        assert fresh == [pages[0]]            # least-recently-used first
+        assert pool.stats.evicted_blocks == 1
+        # the evicted block's key is gone; the chain now misses at block 0
+        assert pool.lookup(blocks) == []
+
+    def test_block_tokens_and_chain_matching(self):
+        b1 = block_tokens([1, 2, 3, 4, 5], 2)
+        assert b1 == [(1, 2), (3, 4)]         # trailing partial dropped
+        # matching is CHAINED through parent pages: an earlier-block
+        # mismatch breaks the whole chain even if a later block's tokens
+        # are identical
+        pool = PagePool(8, page_size=2)
+        pages = pool.alloc(2)
+        self._publish_chain(pool, pages, b1)
+        assert pool.lookup(block_tokens([9, 2, 3, 4], 2)) == []
+        assert pool.lookup(block_tokens([1, 2, 3, 4], 2)) == pages
+
+    def test_recycled_parent_invalidates_child_keys(self):
+        """Evicting/recycling a parent page cascade-unpublishes children:
+        a recycled page id holding NEW content must never certify an old
+        child chain (the stale-chain false-hit hazard)."""
+        pool = PagePool(2, page_size=2)
+        pages = pool.alloc(2)
+        self._publish_chain(pool, pages, [(1, 2), (3, 4)])
+        pool.release_all(pages)
+        # evict the parent and republish it with different content
+        (recycled,) = pool.alloc(1)
+        assert recycled == pages[0]
+        pool.publish(recycled, ROOT, (7, 8))
+        # [7, 8, 3, 4]: block 0 hits the recycled page, but the old child
+        # key (parent=pages[0], (3, 4)) was computed under [1, 2] context
+        # and must NOT match
+        hits = pool.lookup([(7, 8), (3, 4)])
+        assert hits == [recycled]
+
+
+# -----------------------------------------------------------------------------
+# Paged decode kernel (interpret mode) vs gather oracle
+# -----------------------------------------------------------------------------
+
+class TestPagedKernel:
+    def _oracle(self, q, kpool, vpool, pt, lens, window):
+        from repro.models import layers
+        b, nb = pt.shape
+        ps = kpool.shape[1]
+        kg = kpool[pt].reshape(b, nb * ps, *kpool.shape[2:])
+        vg = vpool[pt].reshape(b, nb * ps, *vpool.shape[2:])
+        tags = jnp.where(jnp.arange(nb * ps)[None] < lens[:, None],
+                         jnp.arange(nb * ps)[None], -1)
+        mask = layers.attention_mask((lens - 1)[:, None], tags, causal=True,
+                                     window=window)
+        mask &= (tags >= 0)[:, None, :]
+        return layers.sdpa(q, kg, vg, mask, 0.25)[:, 0]
+
+    def test_matches_gather_oracle_ragged_lengths(self):
+        from repro.kernels import ops as kops
+        rng = np.random.default_rng(3)
+        b, ps, nb, h, hkv, d, P = 4, 8, 3, 4, 2, 16, 10
+        q = jnp.asarray(rng.standard_normal((b, 1, h, d)), jnp.float32)
+        kpool = jnp.asarray(rng.standard_normal((P + 1, ps, hkv, d)),
+                            jnp.float32)
+        vpool = jnp.asarray(rng.standard_normal((P + 1, ps, hkv, d)),
+                            jnp.float32)
+        pt = jnp.asarray(rng.integers(0, P, size=(b, nb)), jnp.int32)
+        lens = jnp.asarray([24, 10, 0, 1], jnp.int32)
+        for window in (-1, 6):
+            got = kops.paged_decode_attention(q[:, 0], kpool, vpool, pt,
+                                              lens, scale=0.25,
+                                              window=window, interpret=True)
+            want = self._oracle(q, kpool, vpool, pt, lens, window)
+            live = np.asarray(lens) > 0
+            err = np.abs(np.asarray(got)[live] - np.asarray(want)[live]).max()
+            assert err < 1e-5, (window, err)
+            # dead slots return exactly zero
+            assert np.abs(np.asarray(got)[~live]).max() == 0.0
+
+    def test_int8_kv_mode_matches_dequant_oracle(self):
+        from repro.kernels import ops as kops
+        from repro.quant import int8 as int8_lib
+        rng = np.random.default_rng(5)
+        b, ps, nb, h, hkv, d, P = 3, 8, 2, 4, 2, 16, 6
+        q = jnp.asarray(rng.standard_normal((b, 1, h, d)), jnp.float32)
+        kpool = jnp.asarray(rng.standard_normal((P + 1, ps, hkv, d)),
+                            jnp.float32)
+        vpool = jnp.asarray(rng.standard_normal((P + 1, ps, hkv, d)),
+                            jnp.float32)
+        kq, ks = int8_lib.quantize_rowwise(kpool)
+        vq, vs = int8_lib.quantize_rowwise(vpool)
+        pt = jnp.asarray(rng.integers(0, P, size=(b, nb)), jnp.int32)
+        lens = jnp.asarray([16, 5, 9], jnp.int32)
+        got = kops.paged_decode_attention(q[:, 0], kq, vq, pt, lens,
+                                          scale=0.25, interpret=True,
+                                          k_scale=ks, v_scale=vs)
+        kd = int8_lib.dequantize_rowwise(kq, ks, dtype=jnp.float32)
+        vd = int8_lib.dequantize_rowwise(vq, vs, dtype=jnp.float32)
+        want = self._oracle(q, kd, vd, pt, lens, -1)
+        assert np.abs(np.asarray(got) - np.asarray(want)).max() < 1e-5
+
+
+# -----------------------------------------------------------------------------
+# Engine token identity vs the dense parity oracle
+# -----------------------------------------------------------------------------
+
+class TestPagedIdentity:
+    def test_non_shared_token_identical(self):
+        """Acceptance oracle: the paged engine is token-identical to the
+        dense engine on a workload with no shared prefixes."""
+        cfg = _cfg()
+        params = _params(cfg)
+        got = run_workload(_paged(params, cfg), RAGGED, max_tokens=6)
+        want = run_workload(_dense(params, cfg), RAGGED, max_tokens=6)
+        assert generation_agreement(got, want)["identical"] == 1.0
+
+    def test_decode_kernel_token_identical(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        prompts = [np.arange(4), np.arange(3) + 7]
+        got = run_workload(
+            ServeEngine(params, cfg, ServeConfig(max_slots=2, max_len=16,
+                                                 paged=True, page_size=4,
+                                                 decode_kernel=True)),
+            prompts, max_tokens=3)
+        want = run_workload(
+            ServeEngine(params, cfg, ServeConfig(max_slots=2, max_len=16)),
+            prompts, max_tokens=3)
+        assert generation_agreement(got, want)["identical"] == 1.0
+
+    def test_chunked_prefill_token_identical(self):
+        """Chunked admission (long prompts spread over ticks, interleaved
+        with decode) must not change a single token."""
+        cfg = _cfg()
+        params = _params(cfg)
+        got = run_workload(_paged(params, cfg, prefill_chunk=8), RAGGED,
+                           max_tokens=6)
+        want = run_workload(_dense(params, cfg), RAGGED, max_tokens=6)
+        assert generation_agreement(got, want)["identical"] == 1.0
+
+    def test_int8_paged_token_identical_to_int8_dense(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        got = run_workload(_paged(params, cfg, quant="int8",
+                                  prefill_chunk=8), RAGGED, max_tokens=5)
+        want = run_workload(_dense(params, cfg, quant="int8"), RAGGED,
+                            max_tokens=5)
+        assert generation_agreement(got, want)["identical"] == 1.0
+
+    def test_sampling_deterministic_given_seed(self):
+        """The (engine seed, request uid) sampling invariant survives the
+        paged path — chunk count and slot placement don't leak into RNG."""
+        cfg = _cfg()
+        params = _params(cfg)
+
+        def run(chunk):
+            eng = _paged(params, cfg, prefill_chunk=chunk, seed=0)
+            for i, p in enumerate(RAGGED):
+                eng.submit(p, max_tokens=5, temperature=0.7)
+            return {r.uid: tuple(r.generated)
+                    for r in eng.run_until_drained()}
+
+        assert run(0) == run(8)
+
+    def test_paged_rejected_for_ssd(self):
+        from repro.models import ssd as ssd_lib
+        cfg = tf_lib.LMConfig(
+            name="ssd", d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+            vocab=31, pattern=(tf_lib.BlockSpec(kind="ssd", has_ffn=False),),
+            repeats=1, remat="none", vocab_pad_multiple=1,
+            ssd_cfg=ssd_lib.SSDConfig(d_model=32, d_state=8, head_dim=16))
+        with pytest.raises(NotImplementedError):
+            ServeEngine({}, cfg, ServeConfig(max_slots=1, paged=True))
+
+
+# -----------------------------------------------------------------------------
+# Prefix cache: reuse, quality bound, capacity
+# -----------------------------------------------------------------------------
+
+class TestPrefixReuse:
+    def test_shared_prefix_fp32_agreement_and_savings(self):
+        """>= 99% token agreement on a shared-prefix workload, with
+        prefix hits reported and prefill tokens strictly reduced."""
+        cfg = _cfg()
+        params = _params(cfg)
+        work = _shared_prefix_workload()
+        paged = _paged(params, cfg)
+        got = run_workload(paged, work, max_tokens=5)
+        want = run_workload(_dense(params, cfg), work, max_tokens=5)
+        assert generation_agreement(got, want)["agreement"] >= 0.99
+        s = paged.summary()
+        assert s["prefix_hit_tokens"] > 0
+        assert s["prefix_hit_rate"] > 0.3
+        assert s["prefill_tokens"] < sum(len(p) for p in work)
+
+    def test_shared_prefix_int8_agreement(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        work = _shared_prefix_workload()
+        paged = _paged(params, cfg, quant="int8")
+        got = run_workload(paged, work, max_tokens=5)
+        want = run_workload(_dense(params, cfg, quant="int8"), work,
+                            max_tokens=5)
+        assert generation_agreement(got, want)["agreement"] >= 0.99
+        assert paged.summary()["prefix_hit_tokens"] > 0
+
+    def test_fully_cached_prompt_recomputes_last_block(self):
+        """A 100%-cached prompt must still run >= 1 suffix token (the
+        sampling logits) — and stay token-identical across both runs."""
+        cfg = _cfg()
+        params = _params(cfg)
+        prompt = np.arange(8)                 # 2 full pages of 4
+        eng = _paged(params, cfg)
+        first = run_workload(eng, [prompt], max_tokens=4)
+        second = run_workload(eng, [prompt], max_tokens=4)
+        assert list(first.values()) == list(second.values())
+        # second admission hit one block (4 tokens), recomputed the other
+        assert eng.summary()["prefix_hit_tokens"] == 4
+
+    def test_oversized_request_rejected_at_submit(self):
+        """A request whose worst-case page demand exceeds the whole pool
+        can never be admitted — submit() must reject it instead of letting
+        admission livelock behind an un-fittable head-of-line request."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = _paged(params, cfg, num_pages=4)    # 16-token capacity
+        with pytest.raises(ValueError, match="pages"):
+            eng.submit(np.arange(20), max_tokens=8)
+        # a fitting request still goes through
+        eng.submit(np.arange(8), max_tokens=4)
+        assert len(eng.run_until_drained()) == 1
+
+    def test_tiny_pool_defers_admission_and_drains(self):
+        """A pool too small for concurrent occupancy serializes admissions
+        by deferral (alloc-aware select) without corrupting any stream."""
+        cfg = _cfg()
+        params = _params(cfg)
+        prompts = [np.arange(12), np.arange(9) + 2, np.arange(7) + 11]
+        got = run_workload(_paged(params, cfg, num_pages=5), prompts,
+                           max_tokens=5)
+        want = run_workload(_dense(params, cfg), prompts, max_tokens=5)
+        assert generation_agreement(got, want)["identical"] == 1.0
+
+    def test_prefix_survives_under_pool_pressure(self):
+        """Cached prefix pages park in LRU and stay hittable while
+        capacity allows; eviction (when forced) never corrupts streams."""
+        cfg = _cfg()
+        params = _params(cfg)
+        work = _shared_prefix_workload(n=4, prefix_len=8, tail_len=1)
+        paged = _paged(params, cfg, num_pages=6)
+        got = run_workload(paged, work, max_tokens=5)
+        want = run_workload(_dense(params, cfg), work, max_tokens=5)
+        assert generation_agreement(got, want)["agreement"] >= 0.99
+        assert paged.summary()["prefix_hit_tokens"] > 0
+
+
+# -----------------------------------------------------------------------------
+# Bucketed-executable cap + chunk steady state (satellite: compile churn)
+# -----------------------------------------------------------------------------
+
+class TestBucketCap:
+    def test_bucket_len_capped(self):
+        assert _bucket_len(3) == 4
+        assert _bucket_len(9) == 16
+        assert _bucket_len(40, cap=48) == 48      # not 64
+        assert _bucket_len(5, cap=48) == 8
+        assert _bucket_len(100, cap=8) == 8
+
+    def test_dense_bucket_capped_at_max_len(self):
+        """A prompt between the last pow2 bucket and max_len compiles the
+        max_len bucket, not the next pow2 — the executable cache is bounded
+        by the configured max prompt length."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = ServeEngine(params, cfg, ServeConfig(max_slots=1, max_len=48))
+        eng.submit(np.arange(40), max_tokens=2)
+        eng.run_until_drained()
+        assert set(eng.admit_trace_counts) == {48}
+        assert all(v == 1 for v in eng.admit_trace_counts.values())
+
+    def test_chunked_prefill_single_bucket_steady_state(self):
+        """With chunked prefill every admission call is at most chunk wide:
+        one chunk-size bucket is the steady state no matter how prompt
+        lengths vary (the regression the pow2 ladder used to cause)."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = _paged(params, cfg, prefill_chunk=8)
+        # distinct content (no accidental prefix sharing: a prefix hit
+        # shrinks the suffix below the chunk, which is a *different*,
+        # correct reason for a smaller bucket); remainders all bucket to 8
+        for i, n in enumerate((30, 21, 13, 29, 22)):
+            eng.submit(np.arange(n) + 7 * i + 1, max_tokens=2)
+        done = eng.run_until_drained()
+        assert len(done) == 5
+        assert set(eng.admit_trace_counts) == {8}
+        assert eng.admit_trace_counts[8] == 1  # traced exactly once
+
+
+# -----------------------------------------------------------------------------
+# Scheduler edge cases (satellite: select/requeue_front)
+# -----------------------------------------------------------------------------
+
+def _reqs(lengths):
+    return [Request(uid, np.arange(n)) for uid, n in enumerate(lengths, 1)]
+
+
+class TestSchedulerEdges:
+    def test_partial_fill_preserves_fifo_order(self):
+        sched = Scheduler(SchedulerConfig(policy="fifo"))
+        for r in _reqs([3, 9, 5, 7]):
+            sched.submit(r)
+        assert [r.uid for r in sched.select(2)] == [1, 2]
+        # the remaining queue keeps arrival order
+        assert [r.uid for r in sched.pending] == [3, 4]
+        assert [r.uid for r in sched.select(5)] == [3, 4]
+
+    def test_fifo_fits_is_head_of_line(self):
+        """FIFO stops at the first non-fitting request — no overtaking."""
+        sched = Scheduler(SchedulerConfig(policy="fifo"))
+        for r in _reqs([9, 3]):
+            sched.submit(r)
+        picked = sched.select(2, fits=lambda r: len(r.prompt) < 5)
+        assert picked == []                   # head doesn't fit -> nothing
+        assert [r.uid for r in sched.pending] == [1, 2]
+
+    def test_longest_prompt_skips_non_fitting(self):
+        sched = Scheduler(SchedulerConfig(policy="longest_prompt"))
+        for r in _reqs([3, 9, 5]):
+            sched.submit(r)
+        picked = sched.select(2, fits=lambda r: len(r.prompt) < 6)
+        assert [len(r.prompt) for r in picked] == [5, 3]
+        assert [r.uid for r in sched.pending] == [2]
+
+    def test_requeue_front_restores_selection_order(self):
+        sched = Scheduler(SchedulerConfig(policy="fifo"))
+        for r in _reqs([3, 9, 5]):
+            sched.submit(r)
+        picked = sched.select(2)
+        sched.requeue_front(picked)
+        assert [r.uid for r in sched.pending] == [1, 2, 3]
+
+    def test_longest_prompt_stable_under_requeue(self):
+        """Equal-length prompts keep arrival order across repeated
+        select/requeue cycles (stable sort + front requeue)."""
+        sched = Scheduler(SchedulerConfig(policy="longest_prompt"))
+        for r in _reqs([5, 5, 5, 7]):
+            sched.submit(r)
+        for _ in range(3):
+            picked = sched.select(3)
+            assert [r.uid for r in picked] == [4, 1, 2]
+            sched.requeue_front(picked)
+        assert [r.uid for r in sched.pending] == [4, 1, 2, 3]
+
+    def test_paged_engine_with_longest_prompt_policy(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        prompts = [np.arange(3), np.arange(9) + 1, np.arange(6) + 4]
+        paged = ServeEngine(
+            params, cfg,
+            ServeConfig(max_slots=2, max_len=64, paged=True, page_size=4),
+            scheduler=Scheduler(SchedulerConfig(policy="longest_prompt")))
+        dense = ServeEngine(
+            params, cfg, ServeConfig(max_slots=2, max_len=64),
+            scheduler=Scheduler(SchedulerConfig(policy="longest_prompt")))
+        got = run_workload(paged, prompts, max_tokens=4)
+        want = run_workload(dense, prompts, max_tokens=4)
+        assert generation_agreement(got, want)["identical"] == 1.0
+
+
+# -----------------------------------------------------------------------------
+# Accounting: a 75% prefix hit bills only the suffix (satellite)
+# -----------------------------------------------------------------------------
+
+class TestPrefixAccounting:
+    def test_hit_admission_bills_suffix_only(self):
+        """Hand-computed traffic/compute for an admission with a 75%
+        prefix hit: 16-token prompt, 12 tokens (3 pages of 4) cached."""
+        cfg = _cfg()
+        params = _params(cfg)
+        ps = 4
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(max_slots=1, max_len=64, paged=True,
+                                      page_size=ps))
+        warm = np.arange(16)
+        run_workload(eng, [warm], max_tokens=2)     # publishes 4 blocks
+        acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        eng.accountant = acct
+        eng.metrics_log = []
+        # same first 12 tokens, distinct last 4 -> 3-block (75%) hit
+        probe = np.concatenate([warm[:12], [50, 51, 52, 53]])
+        eng.submit(probe, max_tokens=2)
+        eng.step()                                   # the admission tick
+        m = eng.metrics_log[0]
+        assert m.prefix_hit_tokens == 12
+        assert m.prefill_tokens == 4                 # suffix only
+
+        # hand-computed KV payload: k+v, n_layers x kv_heads x head_dim,
+        # fp32 -> 2 * 2 * 2 * 12 * 4 = 768 bytes per cached token
+        token_bytes = 2 * cfg.n_layers * cfg.n_kv_heads * 12 * 4
+        assert eng._kv_token_bytes == token_bytes
+        assert m.saved_bytes == token_bytes * 12     # 12 un-written tokens
+
+        # FLOPs: matmul weights stream per computed token; causal attention
+        # pays end^2 - start^2 = 16^2 - 12^2 (the hit's 12^2 is saved).
+        # The same step also runs the first decode tick for the activated
+        # slot: one token at live context 16 + 1.
+        elems = eng._matmul_elems
+        attn_dims = cfg.n_heads * 12
+        n_attn = cfg.n_layers
+        want_flops = (2.0 * elems * 4
+                      + 2.0 * n_attn * attn_dims * (16 ** 2 - 12 ** 2)
+                      + 2.0 * elems + 4.0 * n_attn * attn_dims * 17)
+        assert m.flops == pytest.approx(want_flops)
+        want_saved = (2.0 * elems * 12
+                      + 2.0 * n_attn * attn_dims * 12 ** 2)
+        assert m.saved_flops == pytest.approx(want_saved)
+        # admission KV traffic: read the 12 cached tokens + write 4 new
+        tick_read = token_bytes * (16 + 1)           # decode part of the tick
+        assert m.kv_bytes == pytest.approx(token_bytes * (12 + 4)
+                                           + tick_read)
+
+        # the accountant surfaces the saved DRAM joules + hit rate
+        rep = acct.report()
+        assert rep["prefix_hit_tokens"] == 12
+        assert rep["prefix_hit_rate"] == pytest.approx(12 / 16)
+        assert rep["saved_bytes"] == m.saved_bytes
+        assert rep["saved_dram_j"] == pytest.approx(
+            energy.dram_energy_j(m.saved_bytes))
+        assert rep["saved_dram_j"] > 0
+
+    def test_no_hit_admission_books_no_savings(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        eng = _paged(params, cfg)
+        eng.accountant = acct
+        run_workload(eng, [np.arange(9)], max_tokens=3)
+        rep = acct.report()
+        assert rep["prefix_hit_tokens"] == 0
+        assert rep["saved_bytes"] == 0.0 and rep["saved_dram_j"] == 0.0
+        assert rep["prefix_hit_rate"] == 0.0
