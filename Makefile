@@ -10,12 +10,14 @@ bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
 
 # reproduces ALL serve bench artifacts: BENCH_serve.json (fused vs
-# host-loop reference), BENCH_quant.json (bf16 vs int8 fast path), and
-# BENCH_serve_paged.json (dense vs paged+prefix-cache on shared prefixes)
+# host-loop reference), BENCH_quant.json (bf16 vs int8 fast path),
+# BENCH_serve_paged.json (dense vs paged+prefix-cache on shared prefixes),
+# and BENCH_serve_spec.json (plain paged vs speculative multi-token decode)
 bench-serve:
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --quant int8
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --paged
+	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --paged --spec-k 4
 
 # training fast path (DESIGN.md §13): fused TrainEngine tick vs the
 # host-loop autodiff-through-reference Trainer -> BENCH_train.json

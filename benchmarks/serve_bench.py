@@ -1,6 +1,7 @@
-"""Serve-core benchmarks: fused vs. reference, bf16 vs. int8, dense vs. paged.
+"""Serve-core benchmarks: fused vs. reference, bf16 vs. int8, dense vs.
+paged, paged vs. speculative.
 
-Three modes on the SAME model and backend:
+Four modes on the SAME model and backend:
 
 * default — the fused device-resident engine (one jitted tick, one mask
   readback) against the host-loop reference engine (per-slot ``int(tok)``
@@ -18,8 +19,15 @@ Three modes on the SAME model and backend:
   prefix-hit rate, prefill tokens computed, modeled J/token, saved DRAM
   joules, and the token-agreement score between the two engines. Emits
   ``BENCH_serve_paged.json``.
+* ``--paged --spec-k K`` — speculative multi-token decode (DESIGN.md §15)
+  against the plain paged engine on the same shared-prefix workload:
+  accept rate, emitted tokens per slot-tick, draft vs. verify energy, and
+  modeled J/accepted-token — plus the stream-identity check against the
+  dense greedy engine (rejection sampling must preserve it exactly).
+  Emits ``BENCH_serve_spec.json``.
 
-    PYTHONPATH=src python benchmarks/serve_bench.py [--quant int8|--paged]
+    PYTHONPATH=src python benchmarks/serve_bench.py \
+        [--quant int8|--paged [--spec-k K]]
 """
 
 from __future__ import annotations
@@ -37,6 +45,8 @@ OUT_QUANT_PATH = os.path.join(os.path.dirname(__file__), "..",
                               "BENCH_quant.json")
 OUT_PAGED_PATH = os.path.join(os.path.dirname(__file__), "..",
                               "BENCH_serve_paged.json")
+OUT_SPEC_PATH = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_serve_spec.json")
 
 N_REQUESTS = 12
 MAX_TOKENS = 16
@@ -264,6 +274,80 @@ def bench_paged(prefix_len=24, tail_len=6) -> dict:
     return res
 
 
+def bench_spec(spec_k=4, prefix_len=24, tail_len=6) -> dict:
+    """Plain paged vs. speculative (ngram-drafted) paged decode on the
+    shared-prefix workload (DESIGN.md §15). The acceptance bar: emitted
+    tokens per slot-tick > 1.0 (plain decode is exactly 1.0) and a lower
+    modeled J per emitted token than the PR-4 paged baseline — one weight
+    stream now commits up to spec_k + 1 tokens per slot."""
+    from repro.core import accounting
+    from repro.serve import (ServeConfig, ServeEngine, generation_agreement,
+                             run_workload)
+    cfg, params = _model()
+    prompts = _shared_prefix_prompts(prefix_len, tail_len)
+
+    def arm(k):
+        scfg = ServeConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                           paged=True, page_size=8, spec_k=k)
+        eng = ServeEngine(params, cfg, scfg)
+        run_workload(eng, prompts, max_tokens=MAX_TOKENS)   # warm/compile
+        acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        eng.accountant = acct
+        eng.metrics_log = []
+        gens = run_workload(eng, prompts, max_tokens=MAX_TOKENS)
+        assert len(gens) == N_REQUESTS
+        s = eng.summary()
+        rep = acct.report()
+        out = {"decode_tokens": s["decode_tokens"],
+               "decode_tokens_per_s": round(s["decode_tokens_per_s"], 2),
+               "ticks": s["ticks"],
+               "j_per_token": rep["modeled_j_per_token"],
+               "j_per_token_wall": rep["j_per_token"],
+               "bytes_moved": rep["bytes_moved"],
+               "modeled_dram_j": rep["modeled_dram_j"]}
+        if k > 0:
+            out.update(accept_rate=round(s["accept_rate"], 4),
+                       accepted_tokens_per_tick=round(
+                           s["accepted_tokens_per_tick"], 4),
+                       spec_draft_tokens=s["spec_draft_tokens"],
+                       spec_accepted_tokens=s["spec_accepted_tokens"],
+                       j_per_accepted_token=rep["spec"]
+                       ["j_per_accepted_token"],
+                       draft_j=rep["spec"]["draft_j"],
+                       verify_j=rep["spec"]["verify_j"])
+        return out, gens
+
+    paged_m, paged_g = arm(0)
+    spec_m, spec_g = arm(spec_k)
+    # greedy rejection sampling must reproduce the plain stream exactly
+    agreement = generation_agreement(spec_g, paged_g)
+    res = {
+        "workload": {"requests": N_REQUESTS, "max_tokens": MAX_TOKENS,
+                     "slots": MAX_SLOTS, "prefix_len": prefix_len,
+                     "tail_len": tail_len, "spec_k": spec_k,
+                     "drafter": "ngram",
+                     "backend": jax.default_backend()},
+        "notes": ("speculative paged decode vs the plain paged engine on "
+                  "the shared-prefix workload. accepted_tokens_per_tick "
+                  "is emitted decode tokens per slot-tick (plain = 1.0); "
+                  "j_per_accepted_token is modeled FLOPs + per-byte DRAM "
+                  "energy per emitted token; draft_j/verify_j split the "
+                  "decode bill by phase (DESIGN.md §15)."),
+        "paged": paged_m,
+        "spec": spec_m,
+        "token_agreement": agreement,
+        "accept_rate": spec_m["accept_rate"],
+        "j_per_accepted_token": spec_m["j_per_accepted_token"],
+    }
+    res["speedup"] = round(
+        paged_m["j_per_token"] / spec_m["j_per_accepted_token"], 3)
+    res["tick_ratio"] = round(paged_m["ticks"] / max(spec_m["ticks"], 1), 2)
+    with open(OUT_SPEC_PATH, "w") as f:
+        json.dump(res, f, indent=2)
+    return res
+
+
 def run():
     """benchmarks/run.py hook: name,us_per_call,derived rows."""
     res = bench()
@@ -289,8 +373,21 @@ if __name__ == "__main__":
                     help="benchmark the paged KV + prefix-cache engine vs "
                          "the dense engine on a shared-prefix workload "
                          "into BENCH_serve_paged.json")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="with --paged: benchmark speculative decode "
+                         "(draft k tokens/tick, DESIGN.md §15) vs the "
+                         "plain paged engine into BENCH_serve_spec.json")
     args = ap.parse_args()
-    if args.paged:
+    if args.paged and args.spec_k > 0:
+        out = bench_spec(spec_k=args.spec_k)
+        print(json.dumps(out, indent=2))
+        print(f"\nwrote {os.path.abspath(OUT_SPEC_PATH)}")
+        print(f"accept rate {out['accept_rate']:.1%}; "
+              f"{out['spec']['accepted_tokens_per_tick']:.2f} emitted "
+              f"tokens/slot-tick; modeled J/accepted-token "
+              f"{out['speedup']}x lower than plain paged; "
+              f"stream identical: {out['token_agreement']['identical']}")
+    elif args.paged:
         out = bench_paged()
         print(json.dumps(out, indent=2))
         print(f"\nwrote {os.path.abspath(OUT_PAGED_PATH)}")

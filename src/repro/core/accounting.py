@@ -59,6 +59,16 @@ class CarbonAccountant:
         self._prefix_hit_tokens = 0.0
         self._saved_bytes = 0.0
         self._saved_flops = 0.0
+        # speculative-decode ledger (DESIGN.md §15): draft and verify
+        # phases bill separately — the drafter may be nearly free (n-gram
+        # history scan) or a full extra model pass per draft token
+        # (oracle), and the sustainability claim is J per *accepted* token
+        self._spec_draft_tokens = 0.0
+        self._spec_accepted_tokens = 0.0
+        self._draft_flops = 0.0
+        self._draft_bytes = 0.0
+        self._verify_flops = 0.0
+        self._verify_bytes = 0.0
         # training-phase ledgers (DESIGN.md §13): forward and backward bill
         # separately — the per-phase split the edge-training literature
         # (DeepEn2023, Sobhani et al.) calls for
@@ -105,6 +115,16 @@ class CarbonAccountant:
                                                      0.0))
             self._saved_bytes += float(getattr(metrics, "saved_bytes", 0.0))
             self._saved_flops += float(getattr(metrics, "saved_flops", 0.0))
+            self._spec_draft_tokens += float(
+                getattr(metrics, "spec_draft_tokens", 0.0))
+            self._spec_accepted_tokens += float(
+                getattr(metrics, "spec_accepted_tokens", 0.0))
+            self._draft_flops += float(getattr(metrics, "draft_flops", 0.0))
+            self._draft_bytes += float(getattr(metrics, "draft_bytes", 0.0))
+            self._verify_flops += float(
+                getattr(metrics, "verify_flops", 0.0))
+            self._verify_bytes += float(
+                getattr(metrics, "verify_bytes", 0.0))
 
     def observe_train(self, metrics) -> None:
         """Bill one train-engine tick (train.TrainStepMetrics-shaped).
@@ -214,13 +234,44 @@ class CarbonAccountant:
                               if phases["fwd_j"] > 0 else None),
         }
 
+    def spec_report(self) -> Optional[Dict]:
+        """Speculative-decode phase split (None until a spec tick was
+        observed). ``j_per_accepted_token`` is the modeled energy per
+        EMITTED decode token (accepted drafts + corrections — what the
+        user receives), the metric the paper's throughput-per-joule
+        argument cares about; every ratio degrades to 0.0 on empty or
+        all-rejected workloads."""
+        if self._spec_draft_tokens <= 0:
+            return None
+        modeled_j = self.modeled_compute_j + self.modeled_dram_j
+        return {
+            "draft_tokens": self._spec_draft_tokens,
+            "accepted_tokens": self._spec_accepted_tokens,
+            "accept_rate": (self._spec_accepted_tokens
+                            / self._spec_draft_tokens),
+            "draft_flops": self._draft_flops,
+            "draft_bytes": self._draft_bytes,
+            "verify_flops": self._verify_flops,
+            "verify_bytes": self._verify_bytes,
+            "draft_j": (energy.compute_energy_j(self._draft_flops,
+                                                self._spec)
+                        + energy.dram_energy_j(self._draft_bytes)),
+            "verify_j": (energy.compute_energy_j(self._verify_flops,
+                                                 self._spec)
+                         + energy.dram_energy_j(self._verify_bytes)),
+            "j_per_accepted_token": (modeled_j / self._tokens
+                                     if self._tokens > 0 else 0.0),
+        }
+
     def report(self) -> Dict:
         op = self.operational_active_j
         modeled_j = self.modeled_compute_j + self.modeled_dram_j
         train = self.train_report()
+        spec = self.spec_report()
         prompt_toks = self._prefill_tokens + self._prefix_hit_tokens
         return {
             **({"train": train} if train else {}),
+            **({"spec": spec} if spec else {}),
             "bytes_moved": self._bytes_moved,
             "modeled_flops": self._modeled_flops,
             # prefix-cache savings (zero for non-paged serving): what the

@@ -34,6 +34,14 @@ gather is the DMA, no materialized per-slot copy of the cache ever exists.
 Everything else (grid, online softmax, per-slot length skip, int8-KV
 in-kernel dequant) matches the dense kernel, so a slot whose pages happen
 to be contiguous computes the identical FLOPs through either entry point.
+
+**Multi-query verify variant** (``paged_verify_attention``, DESIGN.md §15):
+the speculative-decode verification pass carries a q-block of T tokens per
+slot (pending token + drafts) through the same page-table indirection; the
+T lanes and the GQA ``rep`` heads flatten into one MXU M dimension, and the
+causal mask becomes per-lane (lane t attends positions <= length - T + t).
+One K sweep scores every draft position — the per-tick weight/KV-traffic
+amortization the speculative path exists for.
 """
 
 from __future__ import annotations
@@ -301,3 +309,145 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
         interpret=interpret,
     )(lengths.astype(jnp.int32), page_table.astype(jnp.int32), *operands)
     return out.reshape(b, h, d)
+
+
+def _paged_verify_kernel(len_ref, pt_ref, *refs, scale: float, window: int,
+                         page_size: int, n_blocks: int, n_q: int, rep: int,
+                         quantized: bool):
+    """Multi-query variant of ``_paged_kernel`` for speculative verification
+    (DESIGN.md §15): each slot carries a q-block of ``n_q`` tokens (the
+    committed pending token + the drafts), flattened with the ``rep`` GQA
+    query heads into the MXU's M dimension. Query lane t of slot b sits at
+    absolute position ``lengths[b] - n_q + t`` — the lengths already count
+    the whole q-block — so the per-lane causal mask is
+    ``k_pos <= q_pos(lane)`` instead of the single-token kernel's uniform
+    ``k_pos < length``. One weight-free online-softmax sweep over the
+    slot's pages scores all ``n_q`` positions at once: the k-per-tick
+    weight amortization that speculative decode buys."""
+    del pt_ref                                   # consumed by the index_maps
+    if quantized:
+        q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
+    bi, ki = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[bi]                         # incl. the q-block; 0 = dead
+    k_pos = ki * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)                          # (1, ps)
+    # lane index of each flattened q row: rows are (t, rep) row-major
+    t_row = jax.lax.broadcasted_iota(jnp.int32, (n_q * rep, 1), 0) // rep
+    q_pos = length - n_q + t_row                               # (T*rep, 1)
+    valid = k_pos <= q_pos                                     # (T*rep, ps)
+    if window > 0:
+        valid &= (q_pos - k_pos) < window
+
+    @pl.when(jnp.logical_and(length > 0, ki * page_size < length))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (T*rep, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (ps, d)
+        if quantized:
+            k = k * ks_ref[0, 0]                             # (ps, 1)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(valid, s, NEG_INF)                     # (T*rep, ps)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (ps, d)
+        if quantized:
+            v = v * vs_ref[0, 0]
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "interpret"))
+def paged_verify_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                           lengths: jnp.ndarray, *, scale: float,
+                           window: int = -1, interpret: bool = False,
+                           k_scale=None, v_scale=None) -> jnp.ndarray:
+    """Multi-query decode attention through a paged KV pool.
+
+    q: (B, T, H, D) — T query tokens per slot, already written into the
+    pool at logical positions ``lengths[b] - T + t``; k_pool/v_pool:
+    (P, page_size, Hkv, D); page_table: (B, NB) int32 (out-of-chain
+    entries must point at the sink page); lengths: (B,) valid logical
+    prefix per slot INCLUDING the T chunk tokens (0 = dead slot -> zeros).
+    ``k_scale``/``v_scale`` (P, page_size, Hkv) fp32 switch on int8-KV
+    mode. Causal within the chunk: lane t attends positions
+    ``<= lengths - T + t``. Returns (B, T, H, D) in q.dtype (fp32 for
+    int8 queries)."""
+    b, t, h, d = q.shape
+    p_pages, page_size, hkv, _ = k_pool.shape
+    nb = page_table.shape[1]
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), "pass both scales or neither"
+
+    # (B, T, Hkv, rep, D) -> (B, Hkv, T*rep, D): lanes (t, rep) row-major,
+    # matching the kernel's t_row = row // rep decode
+    qg = q.reshape(b, t, hkv, rep, d).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(b, hkv, t * rep, d)
+    kt = k_pool.transpose(0, 2, 1, 3)            # (P, Hkv, ps, D)
+    vt = v_pool.transpose(0, 2, 1, 3)
+
+    def kv_map(bi, hi, ki, lens, pt):
+        del lens
+        return (pt[bi, ki], hi, 0, 0)
+
+    kv_spec = pl.BlockSpec((1, 1, page_size, d), kv_map)
+    in_specs = [
+        pl.BlockSpec((1, 1, t * rep, d),
+                     lambda bi, hi, ki, lens, pt: (bi, hi, 0, 0)),
+        kv_spec,
+    ]
+    operands = [qg, kt]
+    if quantized:
+        sc_spec = pl.BlockSpec((1, 1, page_size, 1), kv_map)
+        kst = k_scale.astype(jnp.float32).transpose(0, 2, 1)[..., None]
+        vst = v_scale.astype(jnp.float32).transpose(0, 2, 1)[..., None]
+        in_specs += [sc_spec, kv_spec, sc_spec]
+        operands += [kst, vt, vst]
+    else:
+        in_specs += [kv_spec]
+        operands += [vt]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, t * rep, d),
+                               lambda bi, hi, ki, lens, pt: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((t * rep, 1), jnp.float32),     # running max
+            pltpu.VMEM((t * rep, 1), jnp.float32),     # running denom
+            pltpu.VMEM((t * rep, d), jnp.float32),     # output accumulator
+        ],
+    )
+    out_dtype = jnp.float32 if q.dtype == jnp.int8 else q.dtype
+    out = pl.pallas_call(
+        functools.partial(_paged_verify_kernel, scale=scale, window=window,
+                          page_size=page_size, n_blocks=nb, n_q=t, rep=rep,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, t * rep, d), out_dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32), *operands)
+    return out.reshape(b, hkv, t, rep, d).transpose(0, 2, 1, 3, 4
+                                                    ).reshape(b, t, h, d)

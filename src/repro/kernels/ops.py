@@ -199,6 +199,35 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                                       k_scale=k_scale, v_scale=v_scale)
 
 
+def paged_verify_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                           lengths: jnp.ndarray, *,
+                           scale: Optional[float] = None, window: int = -1,
+                           interpret: Optional[bool] = None,
+                           k_scale: Optional[jnp.ndarray] = None,
+                           v_scale: Optional[jnp.ndarray] = None
+                           ) -> jnp.ndarray:
+    """Speculative-verify attention through a paged KV pool (DESIGN.md §15).
+
+    q: (B, T, H, D) — T query tokens per slot (the committed pending token
+    + the drafts), already written into the pool at logical positions
+    ``lengths - T + t``; lengths: (B,) valid prefix per slot INCLUDING the
+    T chunk tokens. Causal within the chunk: lane t attends positions
+    ``<= lengths - T + t``. ``k_scale``/``v_scale`` (P, page_size, Hkv)
+    enable the int8-KV mode. Like the single-token paged kernel, no
+    padding is needed — pages are the block unit.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    assert (k_scale is None) == (v_scale is None), \
+        "pass both KV scales or neither"
+    return _da.paged_verify_attention(q, k_pool, v_pool, page_table, lengths,
+                                      scale=scale, window=window,
+                                      interpret=interpret,
+                                      k_scale=k_scale, v_scale=v_scale)
+
+
 def _round_up_pow2(n: int) -> int:
     p = 8
     while p < n and p < 128:

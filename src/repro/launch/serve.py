@@ -44,6 +44,15 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="admit prompts in chunks of this many tokens, "
                          "interleaved with decode ticks (0 = whole prompt)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decode: draft this many tokens per "
+                         "tick and verify them in one multi-query pass "
+                         "(paged mode only, DESIGN.md §15; 0 = off)")
+    ap.add_argument("--spec-drafter", default="ngram",
+                    choices=("ngram", "oracle"),
+                    help="ngram: prompt-lookup self-drafting (near-free); "
+                         "oracle: the target model drafts itself (parity "
+                         "harness)")
     args = ap.parse_args()
 
     if not args.smoke:
@@ -65,7 +74,9 @@ def main() -> None:
                                   page_size=args.page_size,
                                   num_pages=args.num_pages,
                                   prefix_cache=not args.no_prefix_cache,
-                                  prefill_chunk=args.prefill_chunk),
+                                  prefill_chunk=args.prefill_chunk,
+                                  spec_k=args.spec_k,
+                                  spec_drafter=args.spec_drafter),
                       accountant=acct,
                       scheduler=Scheduler(SchedulerConfig(policy=args.policy)))
     rng = np.random.default_rng(0)
@@ -92,6 +103,12 @@ def main() -> None:
               f"({rep['prefix_hit_tokens']:.0f} prompt tokens reused), "
               f"saved {rep['saved_bytes']:.3g} KV bytes "
               f"= {rep['saved_dram_j']:.3e} J DRAM")
+    if args.spec_k > 0:
+        print(f"speculative decode (k={args.spec_k}, "
+              f"{args.spec_drafter}): {s['accept_rate']:.1%} accept rate, "
+              f"{s['accepted_tokens_per_tick']:.2f} emitted "
+              f"tokens/slot-tick, J/accepted-token "
+              f"{rep['spec']['j_per_accepted_token']:.3e}")
     print("carbon report:", json.dumps(rep, default=float))
 
 

@@ -82,6 +82,37 @@ def attn_layers(cfg: tf_lib.LMConfig) -> int:
     return pat + sum(1 for sp in cfg.tail if sp.kind == "attn")
 
 
+def decode_tick_flops(matmul_elems: float, n_attn: int, attn_dims: int,
+                      ctx_sum: float, n_active: int) -> float:
+    """Modeled FLOPs of one plain decode tick: every active slot streams
+    the matmul weights for one token and attends its live context
+    (``ctx_sum`` = sum over active slots of prompt + generated so far)."""
+    return (2.0 * matmul_elems * n_active
+            + 4.0 * n_attn * attn_dims * ctx_sum)
+
+
+def spec_verify_flops(matmul_elems: float, n_attn: int, attn_dims: int,
+                      ctx_sum: float, n_active: int, width: int) -> float:
+    """Modeled FLOPs of one speculative verification pass (DESIGN.md §15):
+    a q-block of ``width`` tokens per active slot through the matmul
+    weights ONCE, with causal attention — lane t of a slot at live context
+    c attends c + t keys, so the attention term is
+    ``sum_t (c + t) = width*c + width*(width-1)/2`` per slot."""
+    return (2.0 * matmul_elems * width * n_active
+            + 4.0 * n_attn * attn_dims
+            * (width * ctx_sum + n_active * width * (width - 1) / 2.0))
+
+
+def spec_oracle_draft_flops(matmul_elems: float, n_attn: int, attn_dims: int,
+                            ctx_sum: float, n_active: int, k: int) -> float:
+    """Modeled FLOPs of the ``oracle`` drafter: ``k`` sequential plain
+    decode passes of the target model itself, context growing by one per
+    pass — the accept-all harness's honest (weight-heavy) draft bill."""
+    return sum(decode_tick_flops(matmul_elems, n_attn, attn_dims,
+                                 ctx_sum + j * n_active, n_active)
+               for j in range(k))
+
+
 def lm_train_step_cost(params: PyTree, cfg: tf_lib.LMConfig, *,
                        batch: int, seq_len: int,
                        opt_state: PyTree = None) -> energy.TrainStepCost:

@@ -747,12 +747,91 @@ def _paged_decode_attn(p, cfg: LMConfig, spec: BlockSpec, x, cache,
     return y, new_cache
 
 
+def _paged_verify_attn(p, cfg: LMConfig, spec: BlockSpec, x, cache,
+                       pos: jnp.ndarray, page_table: jnp.ndarray,
+                       active: jnp.ndarray):
+    """Multi-query attention for speculative verification (DESIGN.md §15):
+    a q-block of T tokens per slot — the committed pending token plus the
+    drafts — written through the page table and attended causally.
+
+    Every key, including the chunk's own tokens, is read back *through the
+    storage dtype* (the gathered pool / the paged kernel), which is exactly
+    what sequential ``paged_decode_step`` ticks would see — so lane t's
+    logits match the plain single-token tick bit for bit and temp=0
+    rejection sampling reproduces the plain stream. (``paged_extend``
+    deliberately differs: it attends the in-flight chunk in full precision
+    to match *prefill* numerics.)
+
+    Writes of inactive lanes and of positions past the page-table capacity
+    go to the sink page; rejected lanes need no cleanup at all — the
+    engine simply does not advance ``pos`` past the accepted prefix, the
+    ``pos < length`` validity invariant masks the stale writes, and the
+    next tick overwrites them.
+    """
+    acfg = cfg.attn_cfg(spec.window)
+    b, t = x.shape[:2]
+    kv = cache["kv"]
+    kv_int8 = "kv_scale" in cache
+    ps = kv.k.shape[1]
+    nb = page_table.shape[1]
+    sink = kv.k.shape[0] - 1
+    rel = jnp.arange(t, dtype=jnp.int32)[None]                  # (1, T)
+    pos_abs = pos[:, None].astype(jnp.int32) + rel              # (B, T)
+    positions = (jnp.broadcast_to(pos_abs[..., None], (b, t, 3))
+                 if cfg.pos_emb == "mrope" else pos_abs)
+    q, k_new, v_new = layers._project_qkv(p["attn"], acfg, x, positions)
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, t))
+    blk = jnp.clip(pos_abs // ps, 0, nb - 1)
+    writable = active[:, None] & (pos_abs < nb * ps)
+    page = jnp.where(writable, page_table[rows, blk], sink)     # (B, T)
+    off = pos_abs % ps
+    if kv_int8:
+        from repro.quant import int8 as int8_lib
+        sc = cache["kv_scale"]
+        k_q, k_s = int8_lib.quantize_rowwise(k_new)
+        v_q, v_s = int8_lib.quantize_rowwise(v_new)
+        new_cache = {
+            "kv": KVCache(k=kv.k.at[page, off].set(k_q),
+                          v=kv.v.at[page, off].set(v_q)),
+            "kv_scale": KVCache(k=sc.k.at[page, off].set(k_s),
+                                v=sc.v.at[page, off].set(v_s))}
+    else:
+        new_cache = {"kv": KVCache(
+            k=kv.k.at[page, off].set(k_new.astype(kv.k.dtype)),
+            v=kv.v.at[page, off].set(v_new.astype(kv.v.dtype)))}
+    # total valid length per slot INCLUDING the chunk; lanes clipped to the
+    # sink (pos_abs >= nb*ps, only possible at the max_len edge) simply
+    # have no key to attend — the engine never emits from those lanes
+    lengths = (pos + t).astype(jnp.int32)
+    if cfg.decode_kernel:
+        from repro.kernels import ops as kops
+        out = kops.paged_verify_attention(
+            q, new_cache["kv"].k, new_cache["kv"].v, page_table, lengths,
+            scale=acfg.scale, window=spec.window,
+            k_scale=new_cache["kv_scale"].k if kv_int8 else None,
+            v_scale=new_cache["kv_scale"].v if kv_int8 else None)
+    else:
+        k_all, v_all = _paged_gather(new_cache, page_table, q.dtype)
+        j_abs = jnp.arange(nb * ps, dtype=jnp.int32)[None]      # (1, W)
+        tags = jnp.where(j_abs < lengths[:, None], j_abs, -1)
+        mask = layers.attention_mask(pos_abs, tags, causal=True,
+                                     window=spec.window)
+        mask &= (tags >= 0)[:, None, :]
+        out = layers.sdpa(q, k_all, v_all, mask, acfg.scale)
+    if layers._q8_active(acfg, p["attn"]["wo"]):
+        y = layers.q8_matmul(out, p["attn"]["wo"], contract_ndim=2)
+    else:
+        y = jnp.einsum("bshk,hkd->bsd", out,
+                       layers.wl(p["attn"]["wo"], out.dtype))
+    return y, new_cache
+
+
 def _paged_decode_block(params, shared_params, cfg: LMConfig,
-                        spec: BlockSpec, x, cache, pos, page_table, active):
+                        spec: BlockSpec, x, cache, pos, page_table, active,
+                        attn=_paged_decode_attn):
     p = shared_params if spec.shared_attn else params
     h = layers.rms_norm(p["norm_attn"], x)
-    y, cache = _paged_decode_attn(p, cfg, spec, h, cache, pos, page_table,
-                                  active)
+    y, cache = attn(p, cfg, spec, h, cache, pos, page_table, active)
     x = x + y
     if spec.shared_attn:
         h = layers.rms_norm(p["norm_ffn"], x)
@@ -809,6 +888,63 @@ def paged_decode_step(params, cfg: LMConfig, token: jnp.ndarray,
         x, nc = _paged_decode_block(params.get(f"tail{i}"), shared, cfg,
                                     spec, x, caches[f"tail{i}"], pos,
                                     page_table, active)
+        new_caches[f"tail{i}"] = nc
+    return _lm_head(params, cfg, x), new_caches
+
+
+def paged_verify_step(params, cfg: LMConfig, tokens: jnp.ndarray,
+                      pos: jnp.ndarray, page_table: jnp.ndarray,
+                      caches: Dict[str, PyTree],
+                      active: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """Speculative verification step (DESIGN.md §15): score a q-block of T
+    tokens per slot in ONE forward pass against the paged pools.
+
+    tokens (B, T) int32 — per slot, the committed pending token followed by
+    T-1 drafted tokens; pos (B,) — cache length before the tick (token t
+    lands at logical position ``pos + t``). Returns (logits (B, T, V),
+    caches): logits row t is the target distribution for the token *after*
+    ``tokens[:, :t+1]`` — draft t (``tokens[:, t]``, t >= 1) is accepted
+    against row t-1 (serve/spec.speculative_accept), and row T-1 supplies
+    the bonus token. All T lanes' K/V are written through the
+    page table (rejection rolls back by rewinding ``pos``, never by
+    scrubbing); attention is causal over the slot's whole chain *through
+    the storage dtype*, matching sequential ``paged_decode_step`` numerics
+    exactly — at temperature 0 the accepted stream is the plain paged
+    stream, token for token.
+
+    Lane-coupled blocks (MoE capacity routing) make verify numerics
+    batch-dependent; parity there is measured, not structural (the test
+    matrix covers dense-FFN archs).
+    """
+    if active is None:
+        active = jnp.ones(tokens.shape[0], bool)
+    x = layers.embed(params["embed"], tokens)
+    shared = params.get("shared_attn")
+    pat_caches = {f"pat{i}": caches[f"pat{i}"]
+                  for i in range(len(cfg.pattern))}
+
+    def body(x, inp):
+        pat_params, pat_cache = inp
+        new_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, nc = _paged_decode_block(pat_params.get(f"pat{i}"), shared,
+                                        cfg, spec, x, pat_cache[f"pat{i}"],
+                                        pos, page_table, active,
+                                        attn=_paged_verify_attn)
+            new_cache[f"pat{i}"] = nc
+        return x, new_cache
+
+    new_caches: Dict[str, PyTree] = {}
+    if cfg.repeats > 0:
+        x, new_pat = jax.lax.scan(
+            body, x, (_pattern_stack_params(params, cfg), pat_caches))
+        new_caches.update(new_pat)
+    for i, spec in enumerate(cfg.tail):
+        x, nc = _paged_decode_block(params.get(f"tail{i}"), shared, cfg,
+                                    spec, x, caches[f"tail{i}"], pos,
+                                    page_table, active,
+                                    attn=_paged_verify_attn)
         new_caches[f"tail{i}"] = nc
     return _lm_head(params, cfg, x), new_caches
 

@@ -5,5 +5,6 @@ from repro.serve.engine import (Request, ServeConfig, ServeEngine,  # noqa: F401
 from repro.serve.pages import PagePool, block_tokens  # noqa: F401
 from repro.serve.quality import (generation_agreement,  # noqa: F401
                                  run_workload, token_agreement)
+from repro.serve.spec import ngram_draft, speculative_accept  # noqa: F401
 from repro.serve.reference import ReferenceEngine  # noqa: F401
 from repro.serve.scheduler import Scheduler, SchedulerConfig  # noqa: F401

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import accounting
 from repro.models import transformer as tf_lib
+from repro.serve import spec as spec_lib
 from repro.serve.pages import ROOT, PagePool, block_tokens
 from repro.serve.scheduler import Scheduler, SchedulerConfig
 
@@ -69,6 +70,16 @@ class ServeConfig:
     # decode ticks (bounds tick-time tail latency). 0 = whole suffix in
     # one extend call.
     prefill_chunk: int = 0
+    # speculative multi-token decode on the paged path (DESIGN.md §15):
+    # draft spec_k tokens per slot per tick, verify all of them in ONE
+    # multi-query pass through the page table, commit the accepted prefix
+    # plus a correction/bonus token. 0 = off. Requires paged=True.
+    spec_k: int = 0
+    # "ngram": device-resident prompt-lookup drafter over each slot's own
+    # token history (near-zero draft cost); "oracle": the target model
+    # drafts greedily — k extra decode passes, the accept-all parity
+    # harness, not an energy win (serve/spec.py).
+    spec_drafter: str = "ngram"
 
 
 @dataclasses.dataclass
@@ -103,6 +114,17 @@ class StepMetrics:
     prefix_hit_tokens: int = 0  # prompt tokens reused via prefix-cache hits
     saved_bytes: float = 0.0    # KV write bytes NOT moved thanks to reuse
     saved_flops: float = 0.0    # prefill FLOPs NOT executed thanks to reuse
+    # speculative decode split (DESIGN.md §15): in spec mode ``tokens`` is
+    # the EMITTED count (accepted drafts + correction/bonus) and the tick's
+    # decode traffic/compute is additionally billed per phase — the drafter
+    # and the verification pass are different energy stories (an n-gram
+    # drafter is nearly free; the oracle drafter streams weights k times)
+    spec_draft_tokens: int = 0      # tokens drafted this tick (k * active)
+    spec_accepted_tokens: int = 0   # emitted beyond the 1/tick baseline
+    draft_flops: float = 0.0
+    draft_bytes: float = 0.0        # drafter DRAM traffic (incl. weights)
+    verify_flops: float = 0.0
+    verify_bytes: float = 0.0       # verify DRAM traffic (incl. weights)
 
     @property
     def bytes_moved(self) -> float:
@@ -138,12 +160,16 @@ class DeviceState:
     # owns allocation; entries past a slot's pages point at the sink page).
     # dense mode: (B, 0) placeholder.
     page_table: jnp.ndarray = None
+    # speculative mode: (B, max_len) full token history per slot (prompt +
+    # emitted), valid through pos inclusive — hist[b, pos[b]] is the
+    # pending token. The n-gram drafter's lookup corpus. (B, 0) otherwise.
+    hist: jnp.ndarray = None
 
 
 jax.tree_util.register_dataclass(
     DeviceState,
     data_fields=["caches", "tok", "pos", "gen", "budget", "active", "temp",
-                 "rng", "out_buf", "page_table"],
+                 "rng", "out_buf", "page_table", "hist"],
     meta_fields=[])
 
 
@@ -175,6 +201,7 @@ def _bucket_len(n: int, cap: Optional[int] = None) -> int:
 # Shared with the train engine: models/costing.py is the single cost model
 # (these aliases keep the engine's call sites and tests stable).
 
+from repro.models import costing
 from repro.models.costing import (attn_layers as _attn_layers,
                                   kv_bytes as _kv_bytes,
                                   matmul_weight_elems as _matmul_weight_elems,
@@ -191,6 +218,14 @@ class ServeEngine:
             use_kernel = jax.default_backend() == "tpu"
         if serve_cfg.quant not in ("none", "int8"):
             raise ValueError(f"unknown quant mode {serve_cfg.quant!r}")
+        if serve_cfg.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {serve_cfg.spec_k}")
+        if serve_cfg.spec_k > 0 and not serve_cfg.paged:
+            raise ValueError("speculative decode (spec_k > 0) runs on the "
+                             "paged path only; set paged=True")
+        if serve_cfg.spec_drafter not in spec_lib.DRAFTERS:
+            raise ValueError(f"unknown drafter {serve_cfg.spec_drafter!r}; "
+                             f"expected one of {spec_lib.DRAFTERS}")
         if serve_cfg.quant == "int8":
             # quantized fast path: int8 weight tree + int8 KV cache; the
             # already-quantized case (caller ran quantize_lm) passes through
@@ -238,7 +273,12 @@ class ServeEngine:
             rng=jax.vmap(lambda i: jax.random.fold_in(base_key, i))(
                 jnp.arange(b)),
             out_buf=jnp.zeros((b, cap), jnp.int32),
-            page_table=page_table)
+            page_table=page_table,
+            # token history only exists in speculative mode (the n-gram
+            # drafter's corpus); zero-width otherwise so the tick carries
+            # no dead weight
+            hist=jnp.zeros((b, cap if serve_cfg.spec_k > 0 else 0),
+                           jnp.int32))
         # host mirrors (admission + finished-mask readbacks keep them exact;
         # no per-slot device transfers needed)
         self.slot_req: List[Optional[Request]] = [None] * b
@@ -248,6 +288,8 @@ class ServeEngine:
         # in-flight chunked prefills {slot: {"req", "next", "plen", ...}}
         self._slot_pages: List[List[int]] = [[] for _ in range(b)]
         self._prefilling: Dict[int, Dict[str, Any]] = {}
+        # uids already screened by the never-fittable admission guard
+        self._fit_checked: set = set()
         # padded prefill needs causal masking to localize each row; SSM
         # states integrate over padding, so SSD archs admit equal-length
         # groups instead
@@ -320,10 +362,89 @@ class ServeEngine:
             new_st = DeviceState(
                 caches=caches, tok=tok_new, pos=pos_new, gen=gen_new,
                 budget=st.budget, active=st.active & ~done, temp=st.temp,
-                rng=rng_new, out_buf=out_buf, page_table=st.page_table)
+                rng=rng_new, out_buf=out_buf, page_table=st.page_table,
+                hist=st.hist)
             return new_st, done
 
-        self._tick = jax.jit(tick, donate_argnums=self._donate())
+        def spec_tick(params, st: DeviceState
+                      ) -> Tuple[DeviceState, jnp.ndarray]:
+            """Speculative tick (DESIGN.md §15): draft k, verify all k in
+            one multi-query pass, commit the accepted prefix + one
+            correction/bonus token. Returns (state, (2, B) int32 packed
+            [done, emitted]) — still ONE host readback per tick."""
+            self.tick_trace_count += 1
+            b = st.tok.shape[0]
+            k = scfg.spec_k
+            active = st.active
+            caches = st.caches
+            if scfg.spec_drafter == "oracle":
+                # the target model drafts itself greedily: k plain decode
+                # passes. The verify rewrite of the same positions is
+                # value-identical, so the combined tick stays idempotent.
+                d_list = []
+                tok_j, pos_j = st.tok, st.pos
+                for _ in range(k):
+                    lg, caches = tf_lib.paged_decode_step(
+                        params, cfg, tok_j[:, None], pos_j, st.page_table,
+                        caches, active=active)
+                    nxt = jnp.argmax(lg[:, 0], axis=-1).astype(jnp.int32)
+                    d_list.append(nxt)
+                    tok_j = jnp.where(active, nxt, tok_j)
+                    pos_j = pos_j + active
+                drafts = jnp.stack(d_list, axis=1)          # (B, K)
+            else:
+                drafts = spec_lib.ngram_draft(st.hist, st.pos, k)
+            chunk = jnp.concatenate([st.tok[:, None], drafts], axis=1)
+            logits, caches = tf_lib.paged_verify_step(
+                params, cfg, chunk, st.pos, st.page_table, caches,
+                active=active)                              # (B, K+1, V)
+            n_acc, fix_tok, rng_new = spec_lib.speculative_accept(
+                logits, drafts, st.rng, st.temp)
+            # emission clamps: never exceed the token budget or the context
+            # cap — exactly where the plain tick would have stopped
+            rem = jnp.minimum(st.budget - st.gen, max_len - 1 - st.pos)
+            n_emit = jnp.clip(jnp.minimum(n_acc + 1, rem), 1, k + 1)
+            t_idx = jnp.arange(k + 1, dtype=jnp.int32)[None]    # (1, K+1)
+            drafts_pad = jnp.concatenate(
+                [drafts, jnp.zeros((b, 1), jnp.int32)], axis=1)
+            emitted = jnp.where(t_idx < n_acc[:, None], drafts_pad,
+                                fix_tok[:, None])               # (B, K+1)
+            if eos_id >= 0:
+                # an EOS anywhere in the emitted run truncates it there
+                eos_lane = jnp.min(jnp.where(emitted == eos_id, t_idx,
+                                             k + 1), axis=1)
+                n_emit = jnp.minimum(n_emit, eos_lane + 1)
+            lane = t_idx < n_emit[:, None]
+            valid = lane & active[:, None]
+            rows2 = jnp.broadcast_to(jnp.arange(b)[:, None], (b, k + 1))
+            cap = st.out_buf.shape[1]
+            out_buf = st.out_buf.at[
+                rows2, jnp.where(valid, st.gen[:, None] + t_idx, cap)
+            ].set(emitted, mode="drop")
+            hist = st.hist.at[
+                rows2, jnp.where(valid, st.pos[:, None] + 1 + t_idx,
+                                 st.hist.shape[1])
+            ].set(emitted, mode="drop")
+            n_step = jnp.where(active, n_emit, 0)
+            last = jnp.take_along_axis(
+                emitted, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)[:, 0]
+            tok_new = jnp.where(active, last, st.tok)
+            pos_new = st.pos + n_step
+            gen_new = st.gen + n_step
+            hit_eos = ((tok_new == eos_id) if eos_id >= 0
+                       else jnp.zeros_like(active))
+            done = active & (hit_eos | (gen_new >= st.budget)
+                             | (pos_new >= max_len - 1))
+            new_st = DeviceState(
+                caches=caches, tok=tok_new, pos=pos_new, gen=gen_new,
+                budget=st.budget, active=active & ~done, temp=st.temp,
+                rng=rng_new, out_buf=out_buf, page_table=st.page_table,
+                hist=hist)
+            packed = jnp.stack([done.astype(jnp.int32), n_step])
+            return new_st, packed
+
+        self._tick = jax.jit(spec_tick if scfg.spec_k > 0 else tick,
+                             donate_argnums=self._donate())
 
     def _build_admit(self):
         """Admission executable body. Dense: pad-and-stack prefill + all-slot
@@ -379,7 +500,7 @@ class ServeEngine:
                 temp=st.temp.at[slots].set(temps, mode="drop"),
                 rng=st.rng.at[slots].set(rng0, mode="drop"),
                 out_buf=st.out_buf.at[slots].set(out_rows, mode="drop"),
-                page_table=st.page_table)
+                page_table=st.page_table, hist=st.hist)
             return new_st, done
 
         self._admit_impl = admit
@@ -415,6 +536,20 @@ class ServeEngine:
             cap = st.out_buf.shape[1]
             out_rows = jnp.zeros((tok0.shape[0], cap), jnp.int32
                                  ).at[:, 0].set(jnp.where(final, tok0, 0))
+            hist = st.hist
+            if hist.shape[1]:
+                # speculative mode: mirror the chunk (and the first sampled
+                # token of final rows) into the drafter's token history —
+                # invalid lanes index out of bounds and drop
+                n, width = toks.shape
+                rel = jnp.arange(width, dtype=jnp.int32)[None]
+                hrows = jnp.broadcast_to(slots[:, None], (n, width))
+                hidx = jnp.where(rel < lens[:, None],
+                                 starts[:, None] + rel, hist.shape[1])
+                hist = hist.at[hrows, hidx].set(toks, mode="drop")
+                hist = hist.at[
+                    slots, jnp.where(final, end, hist.shape[1])
+                ].set(tok0, mode="drop")
             new_st = DeviceState(
                 caches=caches,
                 tok=st.tok.at[slots].set(jnp.where(final, tok0, 0),
@@ -427,7 +562,7 @@ class ServeEngine:
                 temp=st.temp.at[slots].set(temps, mode="drop"),
                 rng=st.rng.at[slots].set(rng0, mode="drop"),
                 out_buf=st.out_buf.at[slots].set(out_rows, mode="drop"),
-                page_table=pt)
+                page_table=pt, hist=hist)
             return new_st, done
 
         return extend
@@ -495,9 +630,29 @@ class ServeEngine:
         self.slot_req[slot] = None
         self._host_gen[slot] = 0
         if self.pool is not None and self._slot_pages[slot]:
-            # published prefix pages park in the pool's LRU (still
-            # hittable); private decode/suffix pages free immediately
-            self.pool.release_all(self._slot_pages[slot])
+            pages = self._slot_pages[slot]
+            if self.scfg.prefix_cache and n > 0:
+                # publish the finished stream's full, frozen blocks —
+                # prompt AND committed generation — BEFORE releasing.
+                # Order matters: release_all frees unpublished pages to
+                # the free list, so publishing afterwards would certify
+                # recyclable pages; and without this step the stream's
+                # last exactly-full block (grown during decode) was never
+                # reusable as a prefix. The cache holds positions
+                # [0, prompt + n - 1): the final generated token is the
+                # pending one whose K/V never landed.
+                cached = np.concatenate(
+                    [np.asarray(req.prompt, np.int64),
+                     np.asarray(toks[:n - 1], np.int64)])
+                parent = ROOT
+                for bi, block in enumerate(
+                        block_tokens(cached, self.scfg.page_size)):
+                    if bi >= len(pages):
+                        break
+                    parent = self.pool.publish(pages[bi], parent, block)
+            # published blocks park in the pool's LRU (still hittable);
+            # private pages free immediately
+            self.pool.release_all(pages)
             self._slot_pages[slot] = []
 
     # -- admission ------------------------------------------------------------
@@ -564,9 +719,25 @@ class ServeEngine:
 
     def _pages_needed(self, prompt_len: int, max_tokens: int) -> int:
         """Worst-case (no-hit) page demand of a request: its full possible
-        context, prompt + budget, capped at max_len."""
-        ctx = min(prompt_len + max_tokens, self.scfg.max_len)
+        context, prompt + budget, capped at max_len. Speculative mode books
+        ``spec_k`` extra tokens — a verify tick transiently writes up to k
+        draft positions past the committed length, and booking them keeps
+        those writes in the slot's own (private, masked-out) pages instead
+        of colliding in the shared sink page."""
+        ctx = min(prompt_len + max_tokens + self.scfg.spec_k,
+                  self.scfg.max_len)
         return -(-ctx // self.scfg.page_size)
+
+    def _defer_admission(self, req: Request, hits: List[int], n_hit0: int,
+                         n_blocks: int, rest: List[Request]) -> None:
+        """The one deferral path for a selected-but-unallocatable paged
+        admission: release the retained hit pages, roll back the lookup's
+        stats booking (the retry re-runs lookup — without the unbook each
+        deferral would double-count its hits/misses and inflate
+        ``PoolStats.hit_rate``), and requeue head-of-line."""
+        self.pool.release_all(hits)
+        self.pool.unbook_lookup(n_hit0, n_blocks)
+        self.scheduler.requeue_front([req] + rest)
 
     def _admit_paged(self, finished: List[Request]) -> "_AdmitInfo":
         """Paged admission tick: select new requests that fit the pool,
@@ -580,12 +751,35 @@ class ServeEngine:
         scfg = self.scfg
         ps = scfg.page_size
         nslots, nb = scfg.max_slots, self._blocks_per_slot
+        # never-fittable guard: a queued request whose worst-case demand
+        # exceeds the whole pool can never be admitted (fits() false
+        # forever -> FIFO head-of-line livelock). submit() rejects these,
+        # but requests can reach the queue directly (scheduler.submit) or
+        # predate a config that raised the demand (spec_k) — fail them
+        # fast, with no stats booked (they never ran a lookup). The
+        # verdict per request is immutable, so it is computed once per
+        # uid (the memo is pruned at admission, bounding it to queue
+        # depth).
+        def never_fits(r: Request) -> bool:
+            if r.uid in self._fit_checked:
+                return False
+            self._fit_checked.add(r.uid)
+            return (self._pages_needed(len(r.prompt), r.max_tokens)
+                    > self.pool.num_pages)
+
+        for req in self.scheduler.drop(never_fits):
+            self._fit_checked.discard(req.uid)
+            req.done = True
+            req.generated = []
+            finished.append(req)
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         budget_pages = [self.pool.available]
 
         def fits(req: Request) -> bool:
             # conservative: ignores hits (submit() guarantees need can be
-            # met by an empty pool, so deferral always terminates)
+            # met by an empty pool, so deferral always terminates). A
+            # non-fitting request is NOT looked up — deferral by this gate
+            # books no prefix stats to roll back.
             need = self._pages_needed(len(req.prompt), req.max_tokens)
             if need > budget_pages[0]:
                 return False
@@ -597,6 +791,7 @@ class ServeEngine:
         hit_tokens = 0
         hit_sq = 0.0
         for j, req in enumerate(reqs):
+            self._fit_checked.discard(req.uid)
             slot = free[j]
             plen = len(req.prompt)
             blocks = (block_tokens(req.prompt, ps)
@@ -611,12 +806,8 @@ class ServeEngine:
             fresh = self.pool.alloc(
                 self._pages_needed(plen, req.max_tokens) - len(hits))
             if fresh is None:       # estimate raced capacity: defer
-                self.pool.release_all(hits)
-                # the retry re-runs lookup: roll back this attempt's stats
-                # so hit_rate counts each admission once
-                self.pool.unbook_lookup(n_hit0, len(blocks))
-                self.scheduler.requeue_front(
-                    [req] + reqs[j + 1:])
+                self._defer_admission(req, hits, n_hit0, len(blocks),
+                                      reqs[j + 1:])
                 admitted = j
                 break
             pages = hits + fresh
@@ -723,37 +914,84 @@ class ServeEngine:
         # slot (page-granular KV read bill)
         ctx = sum(len(self.slot_req[i].prompt) + self._host_gen[i]
                   for i in active) if self.scfg.paged else 0
+        spec_k = self.scfg.spec_k
+        emitted = len(active)       # decode tokens this tick (plain: 1/slot)
+        accepted = 0
         if active:
-            self.state, done = self._tick(self.params, self.state)
-            done_mask = self._readback(done)   # the ONLY per-tick transfer
-            for i in active:
-                self._host_gen[i] += 1
+            if spec_k > 0:
+                self.state, packed = self._tick(self.params, self.state)
+                arr = self._readback(packed)   # the ONLY per-tick transfer
+                done_mask = arr[0].astype(bool)
+                n_emit = arr[1]
+                emitted = int(n_emit.sum())
+                accepted = int(np.maximum(n_emit - 1, 0).sum())
+                for i in active:
+                    self._host_gen[i] += int(n_emit[i])
+            else:
+                self.state, done = self._tick(self.params, self.state)
+                done_mask = self._readback(done)   # the ONLY transfer
+                for i in active:
+                    self._host_gen[i] += 1
             for i in np.nonzero(done_mask)[0]:
                 if (self.slot_req[int(i)] is not None
                         and int(i) not in self._prefilling):
                     self._finish_slot(int(i), finished)
-        # modeled traffic/compute of the tick (DESIGN.md §12/§14): every
-        # jitted call streams the full weight tree once; the dense decode
-        # reads the whole resident KV payload, while the paged decode reads
-        # only the active slots' live context (page-granular) — admission
-        # terms come pre-computed from the admit path.
+        # modeled traffic/compute of the tick (DESIGN.md §12/§14/§15):
+        # every jitted call streams the full weight tree once; the dense
+        # decode reads the whole resident KV payload, while the paged
+        # decode reads only the active slots' live context (page-granular)
+        # — admission terms come pre-computed from the admit path. The
+        # speculative tick bills its draft and verify phases separately:
+        # the drafter's cost depends on the drafter (n-gram: one history
+        # scan; oracle: k more weight streams), the verify pass streams
+        # the weights ONCE for k+1 positions per slot — the amortization
+        # the whole design exists for.
         wb = kvb = fl = 0.0
+        d_fl = d_by = v_fl = v_by = 0.0
+        na = len(active)
         if active:
-            wb += self.weight_bytes
-            if self.scfg.paged:
-                kvb += self._kv_token_bytes * ctx
-                fl += (len(active) * 2.0 * self._matmul_elems
-                       + 4.0 * self._n_attn * self._attn_dims * ctx)
+            if spec_k > 0:
+                width = spec_k + 1
+                oracle = self.scfg.spec_drafter == "oracle"
+                v_fl = costing.spec_verify_flops(
+                    self._matmul_elems, self._n_attn, self._attn_dims,
+                    ctx, na, width)
+                # verify: one weight stream; KV = live context read once
+                # plus the chunk's write+readback (page-granular)
+                v_kv = self._kv_token_bytes * (ctx + 2.0 * width * na)
+                v_by = self.weight_bytes + v_kv
+                if oracle:
+                    d_fl = costing.spec_oracle_draft_flops(
+                        self._matmul_elems, self._n_attn, self._attn_dims,
+                        ctx, na, spec_k)
+                    d_kv = self._kv_token_bytes * (
+                        spec_k * ctx + na * spec_k * (spec_k - 1) / 2.0)
+                    d_wb = spec_k * self.weight_bytes
+                else:
+                    # n-gram drafter: one int32 history scan per slot
+                    d_kv = 4.0 * self.scfg.max_len * na
+                    d_wb = 0.0
+                d_by = d_wb + d_kv
+                wb += self.weight_bytes + d_wb
+                kvb += v_kv + d_kv
+                fl += v_fl + d_fl
             else:
-                kvb += self.kv_cache_bytes
-                fl += len(active) * (2.0 * self._matmul_elems
-                                     + 4.0 * self._n_attn * self._attn_dims
-                                     * self.scfg.max_len)
+                wb += self.weight_bytes
+                if self.scfg.paged:
+                    kvb += self._kv_token_bytes * ctx
+                    fl += costing.decode_tick_flops(
+                        self._matmul_elems, self._n_attn, self._attn_dims,
+                        ctx, na)
+                else:
+                    kvb += self.kv_cache_bytes
+                    fl += na * (2.0 * self._matmul_elems
+                                + 4.0 * self._n_attn * self._attn_dims
+                                * self.scfg.max_len)
         if adm.weight_passes:
             wb += self.weight_bytes * adm.weight_passes
         kvb += adm.kv_bytes
         fl += adm.flops
-        m = StepMetrics(tokens=len(active), active_slots=len(active),
+        m = StepMetrics(tokens=emitted, active_slots=na,
                         wall_s=time.monotonic() - t0,
                         prefill_tokens=adm.prefill_tokens,
                         admitted=adm.admitted,
@@ -761,7 +999,11 @@ class ServeEngine:
                         weight_bytes=wb, kv_bytes=kvb, flops=fl,
                         prefix_hit_tokens=adm.prefix_hit_tokens,
                         saved_bytes=adm.saved_bytes,
-                        saved_flops=adm.saved_flops)
+                        saved_flops=adm.saved_flops,
+                        spec_draft_tokens=spec_k * na,
+                        spec_accepted_tokens=accepted,
+                        draft_flops=d_fl, draft_bytes=d_by,
+                        verify_flops=v_fl, verify_bytes=v_by)
         self.last_metrics = m
         self.metrics_log.append(m)
         if self.accountant is not None:
@@ -780,6 +1022,11 @@ class ServeEngine:
     # -- aggregate metrics ----------------------------------------------------
 
     def summary(self) -> Dict[str, float]:
+        """Aggregate run stats. Every ratio degrades to 0.0 — never NaN or
+        a ZeroDivisionError — on degenerate runs (no ticks, no emitted
+        tokens, no prefix lookups, all drafts rejected): summaries are
+        read by dashboards and benches that must survive empty/drained
+        workloads (regression-locked in tests/test_serve_spec.py)."""
         toks = sum(m.tokens for m in self.metrics_log)
         wall = sum(m.wall_s for m in self.metrics_log)
         out = {"ticks": len(self.metrics_log),
@@ -792,10 +1039,22 @@ class ServeEngine:
             hit = sum(m.prefix_hit_tokens for m in self.metrics_log)
             total = hit + out["prefill_tokens"]
             out["prefix_hit_tokens"] = hit
-            out["prefix_hit_rate"] = hit / total if total else 0.0
+            out["prefix_hit_rate"] = hit / total if total > 0 else 0.0
             out["saved_bytes"] = sum(m.saved_bytes for m in self.metrics_log)
             out["pool_pages"] = self.pool.num_pages
             out["pool_pages_live"] = self.pool.live
+            out["pool_hit_rate"] = self.pool.stats.hit_rate
+        if self.scfg.spec_k > 0:
+            drafted = sum(m.spec_draft_tokens for m in self.metrics_log)
+            accepted = sum(m.spec_accepted_tokens for m in self.metrics_log)
+            slot_ticks = sum(m.active_slots for m in self.metrics_log)
+            out["spec_draft_tokens"] = drafted
+            out["spec_accepted_tokens"] = accepted
+            out["accept_rate"] = accepted / drafted if drafted > 0 else 0.0
+            # emitted decode tokens per slot-tick: the multi-token win
+            # (plain decode is exactly 1.0; upper bound spec_k + 1)
+            out["accepted_tokens_per_tick"] = (
+                toks / slot_ticks if slot_ticks > 0 else 0.0)
         return out
 
 

@@ -66,8 +66,11 @@ class PoolStats:
 
     @property
     def hit_rate(self) -> float:
+        """Block-level hit fraction; 0.0 (never NaN/raise) when no lookup
+        has been booked — empty pools and drained engines report clean
+        zeros (regression-locked in tests/test_serve_spec.py)."""
         n = self.hit_blocks + self.missed_blocks
-        return self.hit_blocks / n if n else 0.0
+        return self.hit_blocks / n if n > 0 else 0.0
 
 
 class PagePool:
@@ -206,9 +209,14 @@ class PagePool:
 
     def unbook_lookup(self, n_hits: int, n_total: int) -> None:
         """Roll back one ``lookup``'s stats booking — used when the caller
-        defers the admission (the retry will look up, and book, again)."""
+        defers the admission (the retry will look up, and book, again).
+        Without this, every deferral double-counts its blocks and inflates
+        ``hit_rate``; with it, each admission books exactly once."""
         self.stats.hit_blocks -= n_hits
         self.stats.missed_blocks -= n_total - n_hits
+        assert (self.stats.hit_blocks >= 0
+                and self.stats.missed_blocks >= 0), \
+            "unbook_lookup rolled back more than was booked"
 
     # -- introspection --------------------------------------------------------
 

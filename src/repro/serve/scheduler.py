@@ -83,3 +83,18 @@ class Scheduler:
         """Return selected-but-not-admitted requests to the queue head
         (e.g. SSD archs admit only equal-length groups per prefill call)."""
         self._q.extendleft(reversed(reqs))
+
+    def drop(self, pred: Callable[["Request"], bool]) -> List["Request"]:
+        """Remove and return every queued request matching ``pred``, in
+        queue order. The paged engine's never-fittable guard: a request
+        whose worst-case page demand (which books speculative-decode
+        growth too) exceeds the whole pool would pin a FIFO queue's head
+        forever — the engine drops it and fails it fast instead. ``pred``
+        is called exactly once per queued request."""
+        kept: Deque["Request"] = deque()
+        dropped: List["Request"] = []
+        for r in self._q:
+            (dropped if pred(r) else kept).append(r)
+        if dropped:
+            self._q = kept
+        return dropped

@@ -1,0 +1,138 @@
+"""Speculative multi-token decode for the paged serve core (DESIGN.md §15).
+
+The paper's operational-energy argument is a DRAM-bytes argument: every
+decode tick streams the whole weight tree from HBM to emit ONE token per
+slot. Speculative decoding amortizes that stream — a cheap drafter
+proposes ``k`` tokens per slot, and a single multi-query verification
+pass scores all ``k`` positions at once, so one weight fetch can commit
+up to ``k + 1`` tokens. Rejected positions cost only their (already
+masked-out) cache writes: the sink-page design and the ``pos < length``
+validity invariant mean rollback is a per-slot length rewind, with no
+device-side scrub.
+
+This module is the *device-side policy* half: drafters and the
+accept/rewind math. Both are pure jittable functions the engine fuses
+into its tick; the verification forward itself lives in
+``models/transformer.paged_verify_step``.
+
+Drafters:
+
+* ``ngram_draft`` — prompt-lookup decoding (self-drafting without a draft
+  model): match the slot's trailing bigram against its own token history
+  (prompt + everything generated) and propose the continuation of the
+  most recent earlier occurrence. Near-zero cost (one history scan, no
+  weights), and effective exactly when decode is repetitive — which is
+  also when the energy win is largest.
+* the ``"oracle"`` drafter (engine-side) runs the target model itself
+  greedily for ``k`` steps — an accept-everything harness for parity
+  tests and an upper bound on acceptance, not an energy win.
+
+Acceptance (``speculative_accept``) preserves the target distribution:
+at temperature 0 the emitted stream is *exactly* the plain greedy stream
+(accept iff the draft equals the verify-pass argmax; the first rejection
+emits the argmax instead). At temperature > 0 the drafter is a point
+mass, so standard speculative rejection sampling reduces to: accept
+draft ``d`` with probability ``p(d)``, else resample from ``p`` with
+``d`` removed (the renormalized residual ``max(p - q, 0)``) — the
+marginal of each emitted token is the target softmax.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+DRAFTERS = ("ngram", "oracle")
+
+
+def ngram_draft(hist: jnp.ndarray, pos: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Prompt-lookup drafter: propose ``k`` tokens per slot from the slot's
+    own token history.
+
+    ``hist`` (B, L) int32 — per-slot token history, valid through ``pos``
+    inclusive (``hist[b, pos[b]]`` is the slot's *pending* token: sampled,
+    not yet in the KV cache). ``pos`` (B,) int32. Rows whose trailing
+    bigram ``(hist[pos-1], hist[pos])`` occurred earlier in the history
+    draft the ``k`` tokens that followed the most recent occurrence
+    (clamped at ``pos`` — a near-end match pads by repeating); rows with
+    no match repeat the pending token (cheap, usually rejected, costs one
+    verify lane). Inactive rows produce garbage the engine masks off.
+    """
+    b, length = hist.shape
+    rows = jnp.arange(b)
+    pend = hist[rows, pos]
+    prev = hist[rows, jnp.maximum(pos - 1, 0)]
+    p_idx = jnp.arange(length - 1, dtype=jnp.int32)
+    # occurrence at p matches the trailing bigram and ends strictly before
+    # it (p + 1 <= pos - 1), so the continuation starts at a valid index
+    match = ((hist[:, :-1] == prev[:, None])
+             & (hist[:, 1:] == pend[:, None])
+             & (p_idx[None] <= (pos - 2)[:, None]))
+    best = jnp.max(jnp.where(match, p_idx[None], -1), axis=1)     # (B,)
+    start = jnp.where(best >= 0, best + 2, pos)   # no match -> repeat pending
+    idx = jnp.minimum(start[:, None] + jnp.arange(k, dtype=jnp.int32)[None],
+                      pos[:, None])
+    return jnp.take_along_axis(hist, idx, axis=1).astype(jnp.int32)
+
+
+def speculative_accept(logits: jnp.ndarray, drafts: jnp.ndarray,
+                       keys: jnp.ndarray, temp: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Accept/reject ``k`` drafted tokens against the verification logits.
+
+    ``logits`` (B, K+1, V) fp32 — position ``j``'s row is the target
+    distribution for the token *after* draft ``j`` tokens were consumed
+    (row 0: after the committed pending token; row K: the bonus position).
+    ``drafts`` (B, K); ``keys`` (B, 2) per-slot PRNG; ``temp`` (B,)
+    per-slot temperature (0 = greedy).
+
+    Returns ``(n_acc, fix_tok, new_keys)``: ``n_acc`` (B,) int32 in
+    [0, K] — length of the accepted draft prefix; ``fix_tok`` (B,) — the
+    token emitted at the first rejected position (greedy: the argmax;
+    temperature: a draw from the renormalized residual), or the bonus
+    token when every draft was accepted. The emitted stream for a slot is
+    ``drafts[:n_acc] + [fix_tok]``. Keys advance only for temperature
+    slots (greedy consumes no randomness), mirroring the plain tick.
+    """
+    b, k1, _ = logits.shape
+    k = k1 - 1
+    rows = jnp.arange(b)
+    use_t = temp > 0
+    tsafe = jnp.where(use_t, temp, 1.0)
+    accepting = jnp.ones(b, bool)
+    n_acc = jnp.zeros(b, jnp.int32)
+    fix = jnp.zeros(b, jnp.int32)
+    for j in range(k):
+        lj = logits[:, j]
+        greedy = jnp.argmax(lj, axis=-1).astype(jnp.int32)
+        d = drafts[:, j]
+        split = jax.vmap(lambda kk: jax.random.split(kk, 3))(keys)  # (B,3,2)
+        k_next, k_u, k_res = split[:, 0], split[:, 1], split[:, 2]
+        p = jax.nn.softmax(lj / tsafe[:, None], axis=-1)
+        p_d = jnp.take_along_axis(p, d[:, None], axis=-1)[:, 0]
+        u = jax.vmap(jax.random.uniform)(k_u)
+        # point-mass draft: accept w.p. p(d); residual max(p - q, 0) is p
+        # with the draft token zeroed (categorical renormalizes)
+        res = p.at[rows, d].set(0.0)
+        res_tok = jax.vmap(jax.random.categorical)(
+            k_res, jnp.log(jnp.maximum(res, 1e-30))).astype(jnp.int32)
+        acc = jnp.where(use_t, u < p_d, d == greedy)
+        corr = jnp.where(use_t, res_tok, greedy)
+        # only slots still inside their accepted prefix consume this draw
+        keys = jnp.where((use_t & accepting)[:, None], k_next, keys)
+        fix = jnp.where(accepting & ~acc, corr, fix)
+        n_acc = n_acc + (accepting & acc)
+        accepting &= acc
+    # bonus position: every draft accepted -> sample one more from row K
+    lb = logits[:, k]
+    split = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
+    bonus_keys, sub = split[:, 0], split[:, 1]
+    greedy_b = jnp.argmax(lb, axis=-1).astype(jnp.int32)
+    sampled_b = jax.vmap(jax.random.categorical)(
+        sub, lb / tsafe[:, None]).astype(jnp.int32)
+    bonus = jnp.where(use_t, sampled_b, greedy_b)
+    keys = jnp.where((use_t & accepting)[:, None], bonus_keys, keys)
+    fix = jnp.where(accepting, bonus, fix)
+    return n_acc, fix, keys

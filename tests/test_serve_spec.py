@@ -1,0 +1,604 @@
+"""Speculative multi-token decode on the paged path (DESIGN.md §15) + the
+serve-stats correctness sweep that rode along with it.
+
+Covers: the multi-query verify Pallas kernel (interpret mode) vs a gather
+oracle, the drafter/accept device policies, temp=0 stream identity of the
+speculative engine against the dense greedy engine across fp32/int8/
+chunked-prefill/kernel configs and k in {1, 2, 4}, the all-reject and
+mid-run-finish edges, the draft-vs-verify energy split, and the stats
+regressions (zero-division guards, defer-books-once, oversized-queue drop,
+publish-before-release at finish).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accounting
+from repro.models import transformer as tf_lib
+from repro.serve import (PagePool, Request, ServeConfig, ServeEngine,
+                         generation_agreement, ngram_draft, run_workload,
+                         speculative_accept)
+from repro.serve import spec as spec_lib
+from repro.serve.pages import PoolStats
+
+
+def _cfg(vocab=61, pad=1):
+    return tf_lib.LMConfig(name="t", d_model=48, n_heads=4, n_kv_heads=2,
+                           d_ff=96, vocab=vocab,
+                           pattern=(tf_lib.BlockSpec(),), repeats=2,
+                           remat="none", vocab_pad_multiple=pad)
+
+
+def _params(cfg, seed=0):
+    return tf_lib.init_lm(jax.random.PRNGKey(seed), cfg,
+                          dtype=jnp.float32).params
+
+
+def _dense(params, cfg, **kw):
+    return ServeEngine(params, cfg, ServeConfig(max_slots=2, max_len=64,
+                                                **kw))
+
+
+def _spec(params, cfg, k, **kw):
+    kw.setdefault("page_size", 4)
+    return ServeEngine(params, cfg, ServeConfig(max_slots=2, max_len=64,
+                                                paged=True, spec_k=k, **kw))
+
+
+RAGGED = [np.arange(30), np.arange(3) + 7, np.arange(21) + 2,
+          np.arange(9) + 40]
+
+
+# -----------------------------------------------------------------------------
+# Multi-query verify kernel (interpret mode) vs gather oracle
+# -----------------------------------------------------------------------------
+
+class TestPagedVerifyKernel:
+    def _oracle(self, q, kpool, vpool, pt, lens, window):
+        from repro.models import layers
+        b, t = q.shape[:2]
+        nb = pt.shape[1]
+        ps = kpool.shape[1]
+        kg = kpool[pt].reshape(b, nb * ps, *kpool.shape[2:])
+        vg = vpool[pt].reshape(b, nb * ps, *vpool.shape[2:])
+        j_abs = jnp.arange(nb * ps)[None]
+        tags = jnp.where(j_abs < lens[:, None], j_abs, -1)
+        q_pos = (lens - t)[:, None] + jnp.arange(t)[None]       # (B, T)
+        mask = layers.attention_mask(q_pos, tags, causal=True,
+                                     window=window)
+        mask &= (tags >= 0)[:, None, :]
+        return layers.sdpa(q, kg, vg, mask, 0.25)
+
+    def test_matches_gather_oracle_ragged_lengths(self):
+        from repro.kernels import ops as kops
+        rng = np.random.default_rng(3)
+        b, t, ps, nb, h, hkv, d, P = 4, 3, 8, 3, 4, 2, 16, 10
+        q = jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.float32)
+        kpool = jnp.asarray(rng.standard_normal((P + 1, ps, hkv, d)),
+                            jnp.float32)
+        vpool = jnp.asarray(rng.standard_normal((P + 1, ps, hkv, d)),
+                            jnp.float32)
+        pt = jnp.asarray(rng.integers(0, P, size=(b, nb)), jnp.int32)
+        # lengths INCLUDE the t-token chunk; 0 = dead slot
+        lens = jnp.asarray([24, 10, 0, 4], jnp.int32)
+        for window in (-1, 6):
+            got = kops.paged_verify_attention(q, kpool, vpool, pt, lens,
+                                              scale=0.25, window=window,
+                                              interpret=True)
+            want = self._oracle(q, kpool, vpool, pt, lens, window)
+            live = np.asarray(lens) > 0
+            err = np.abs(np.asarray(got)[live]
+                         - np.asarray(want)[live]).max()
+            assert err < 1e-5, (window, err)
+            assert np.abs(np.asarray(got)[~live]).max() == 0.0
+
+    def test_single_lane_matches_decode_kernel(self):
+        """T=1 verify degenerates to the single-token paged kernel."""
+        from repro.kernels import ops as kops
+        rng = np.random.default_rng(4)
+        b, ps, nb, h, hkv, d, P = 3, 8, 2, 4, 2, 16, 6
+        q = jnp.asarray(rng.standard_normal((b, 1, h, d)), jnp.float32)
+        kpool = jnp.asarray(rng.standard_normal((P + 1, ps, hkv, d)),
+                            jnp.float32)
+        vpool = jnp.asarray(rng.standard_normal((P + 1, ps, hkv, d)),
+                            jnp.float32)
+        pt = jnp.asarray(rng.integers(0, P, size=(b, nb)), jnp.int32)
+        lens = jnp.asarray([16, 5, 9], jnp.int32)
+        got = kops.paged_verify_attention(q, kpool, vpool, pt, lens,
+                                          scale=0.25, interpret=True)
+        want = kops.paged_decode_attention(q[:, 0], kpool, vpool, pt, lens,
+                                           scale=0.25, interpret=True)
+        assert np.abs(np.asarray(got[:, 0]) - np.asarray(want)).max() < 1e-6
+
+    def test_int8_kv_mode_matches_dequant_oracle(self):
+        from repro.kernels import ops as kops
+        from repro.quant import int8 as int8_lib
+        rng = np.random.default_rng(5)
+        b, t, ps, nb, h, hkv, d, P = 3, 2, 8, 2, 4, 2, 16, 6
+        q = jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.float32)
+        kpool = jnp.asarray(rng.standard_normal((P + 1, ps, hkv, d)),
+                            jnp.float32)
+        vpool = jnp.asarray(rng.standard_normal((P + 1, ps, hkv, d)),
+                            jnp.float32)
+        kq, ks = int8_lib.quantize_rowwise(kpool)
+        vq, vs = int8_lib.quantize_rowwise(vpool)
+        pt = jnp.asarray(rng.integers(0, P, size=(b, nb)), jnp.int32)
+        lens = jnp.asarray([16, 5, 9], jnp.int32)
+        got = kops.paged_verify_attention(q, kq, vq, pt, lens, scale=0.25,
+                                          interpret=True, k_scale=ks,
+                                          v_scale=vs)
+        kd = int8_lib.dequantize_rowwise(kq, ks, dtype=jnp.float32)
+        vd = int8_lib.dequantize_rowwise(vq, vs, dtype=jnp.float32)
+        want = self._oracle(q, kd, vd, pt, lens, -1)
+        assert np.abs(np.asarray(got) - np.asarray(want)).max() < 1e-5
+
+
+# -----------------------------------------------------------------------------
+# Device policies: n-gram drafter + rejection sampling (unit level)
+# -----------------------------------------------------------------------------
+
+class TestSpecPolicies:
+    def test_ngram_draft_continues_most_recent_match(self):
+        # history ... 5 6 9 | 5 6  (pending 6 at pos 4): bigram (5,6) last
+        # occurred at 0 -> draft continues 9, then clamps at the pending
+        hist = jnp.asarray([[5, 6, 9, 5, 6, 0, 0]], jnp.int32)
+        pos = jnp.asarray([4], jnp.int32)
+        d = ngram_draft(hist, pos, 3)
+        assert d.tolist() == [[9, 5, 6]]
+
+    def test_ngram_draft_no_match_repeats_pending(self):
+        hist = jnp.asarray([[1, 2, 3, 4, 0, 0]], jnp.int32)
+        pos = jnp.asarray([3], jnp.int32)
+        d = ngram_draft(hist, pos, 2)
+        assert d.tolist() == [[4, 4]]
+
+    def _logits(self, picks, vocab=8):
+        """One-hot-ish logits making ``picks`` the greedy tokens."""
+        k1 = len(picks)
+        lg = np.zeros((1, k1, vocab), np.float32)
+        for j, p in enumerate(picks):
+            lg[0, j, p] = 5.0
+        return jnp.asarray(lg)
+
+    def test_accept_all_emits_bonus(self):
+        lg = self._logits([3, 1, 4, 7])
+        drafts = jnp.asarray([[3, 1, 4]], jnp.int32)
+        keys = jax.random.split(jax.random.PRNGKey(0), 1)
+        n_acc, fix, _ = speculative_accept(lg, drafts, keys,
+                                           jnp.zeros(1))
+        assert int(n_acc[0]) == 3 and int(fix[0]) == 7
+
+    def test_reject_all_emits_correction(self):
+        lg = self._logits([3, 1, 4])
+        drafts = jnp.asarray([[0, 0]], jnp.int32)      # never the argmax
+        keys = jax.random.split(jax.random.PRNGKey(0), 1)
+        n_acc, fix, _ = speculative_accept(lg, drafts, keys,
+                                           jnp.zeros(1))
+        assert int(n_acc[0]) == 0 and int(fix[0]) == 3
+
+    def test_mid_rejection_emits_argmax_at_break(self):
+        lg = self._logits([3, 1, 4, 6])
+        drafts = jnp.asarray([[3, 2, 4]], jnp.int32)   # rejects at j=1
+        keys = jax.random.split(jax.random.PRNGKey(0), 1)
+        n_acc, fix, _ = speculative_accept(lg, drafts, keys,
+                                           jnp.zeros(1))
+        assert int(n_acc[0]) == 1 and int(fix[0]) == 1
+
+    def test_temperature_never_emits_the_rejected_draft(self):
+        """Point-mass rejection sampling: the correction token is drawn
+        from the residual (the draft removed), so a rejected draft can
+        never be re-emitted at its own position."""
+        lg = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (16, 2, 8)), jnp.float32)
+        drafts = jnp.full((16, 1), 2, jnp.int32)
+        keys = jax.random.split(jax.random.PRNGKey(1), 16)
+        temp = jnp.full(16, 1.5)
+        n_acc, fix, _ = speculative_accept(lg, drafts, keys, temp)
+        rejected = np.asarray(n_acc) == 0
+        assert rejected.any()                   # the draw isn't degenerate
+        assert not np.any(np.asarray(fix)[rejected] == 2)
+
+
+# -----------------------------------------------------------------------------
+# Engine: temp=0 stream identity vs the dense greedy oracle
+# -----------------------------------------------------------------------------
+
+class TestSpecIdentity:
+    @pytest.mark.parametrize("k", [1, 2, 4])
+    def test_fp32_ngram_token_identical(self, k):
+        cfg = _cfg()
+        params = _params(cfg)
+        got = run_workload(_spec(params, cfg, k), RAGGED, max_tokens=8)
+        want = run_workload(_dense(params, cfg), RAGGED, max_tokens=8)
+        assert generation_agreement(got, want)["identical"] == 1.0
+
+    @pytest.mark.parametrize("k", [1, 2, 4])
+    def test_oracle_drafter_accepts_and_stays_identical(self, k):
+        """The accept-all harness: the target model drafts itself, so at
+        temp=0 every draft verifies — the speculative stream is the plain
+        stream AND the per-slot-tick emission approaches k + 1."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = _spec(params, cfg, k, spec_drafter="oracle")
+        got = run_workload(eng, RAGGED, max_tokens=2 * (k + 1) + 1)
+        want = run_workload(_dense(params, cfg), RAGGED,
+                            max_tokens=2 * (k + 1) + 1)
+        assert generation_agreement(got, want)["identical"] == 1.0
+        assert eng.summary()["accepted_tokens_per_tick"] > 1.0
+
+    @pytest.mark.parametrize("k", [1, 2, 4])
+    def test_int8_token_identical_to_int8_dense(self, k):
+        cfg = _cfg()
+        params = _params(cfg)
+        got = run_workload(_spec(params, cfg, k, quant="int8"), RAGGED,
+                           max_tokens=6)
+        want = run_workload(_dense(params, cfg, quant="int8"), RAGGED,
+                            max_tokens=6)
+        assert generation_agreement(got, want)["identical"] == 1.0
+
+    @pytest.mark.parametrize("k", [1, 2, 4])
+    def test_chunked_prefill_token_identical(self, k):
+        cfg = _cfg()
+        params = _params(cfg)
+        got = run_workload(_spec(params, cfg, k, prefill_chunk=8), RAGGED,
+                           max_tokens=6)
+        want = run_workload(_dense(params, cfg), RAGGED, max_tokens=6)
+        assert generation_agreement(got, want)["identical"] == 1.0
+
+    def test_decode_kernel_token_identical(self):
+        """End-to-end through the multi-query verify Pallas kernel
+        (interpret mode on CPU)."""
+        cfg = _cfg()
+        params = _params(cfg)
+        prompts = [np.arange(4), np.arange(3) + 7]
+        got = run_workload(
+            ServeEngine(params, cfg,
+                        ServeConfig(max_slots=2, max_len=16, paged=True,
+                                    page_size=4, decode_kernel=True,
+                                    spec_k=2)), prompts, max_tokens=3)
+        want = run_workload(
+            ServeEngine(params, cfg, ServeConfig(max_slots=2, max_len=16)),
+            prompts, max_tokens=3)
+        assert generation_agreement(got, want)["identical"] == 1.0
+
+    def test_reject_every_draft_still_exact(self, monkeypatch):
+        """A drafter whose proposals are never the argmax (it drafts a
+        vocab-pad token the true-vocab argmax can't equal): every tick is
+        a pure rewind — k stale writes masked out behind the unadvanced
+        length — and the stream must still be the plain greedy stream at
+        one token per slot-tick."""
+        cfg = _cfg(vocab=61, pad=64)             # embed rows 61..63 exist
+        params = _params(cfg)
+
+        def never_matches(hist, pos, k):
+            return jnp.full((hist.shape[0], k), 63, jnp.int32)
+
+        monkeypatch.setattr(spec_lib, "ngram_draft", never_matches)
+        eng = _spec(params, cfg, 3)
+        got = run_workload(eng, RAGGED, max_tokens=6)
+        want = run_workload(_dense(params, cfg), RAGGED, max_tokens=6)
+        assert generation_agreement(got, want)["identical"] == 1.0
+        s = eng.summary()
+        assert s["accept_rate"] == 0.0
+        assert s["accepted_tokens_per_tick"] == 1.0
+
+    @pytest.mark.parametrize("mt", [1, 2, 3])
+    def test_finish_inside_accepted_run(self, mt):
+        """max_tokens below k: the budget exhausts mid-draft-run and the
+        emission clamp must stop exactly where the plain engine stops."""
+        cfg = _cfg()
+        params = _params(cfg)
+        got = run_workload(_spec(params, cfg, 4, spec_drafter="oracle"),
+                           RAGGED, max_tokens=mt)
+        want = run_workload(_dense(params, cfg), RAGGED, max_tokens=mt)
+        assert generation_agreement(got, want)["identical"] == 1.0
+
+    def test_eos_inside_accepted_run(self):
+        """An EOS accepted mid-run truncates the emission there — same
+        stream as the plain engine with the same eos_id."""
+        cfg = _cfg()
+        params = _params(cfg)
+        ref = run_workload(_dense(params, cfg), RAGGED, max_tokens=10)
+        eos = next(g[2] for g in ref.values() if len(g) > 3)
+        got = run_workload(_spec(params, cfg, 4, eos_id=eos), RAGGED,
+                           max_tokens=10)
+        want = run_workload(_dense(params, cfg, eos_id=eos), RAGGED,
+                            max_tokens=10)
+        assert generation_agreement(got, want)["identical"] == 1.0
+
+    def test_max_len_cap_inside_accepted_run(self):
+        """Generation running into the context cap: draft lanes past
+        max_len sink-write and the emission clamp stops at max_len - 1."""
+        cfg = _cfg()
+        params = _params(cfg)
+        prompts = [np.arange(10), np.arange(7) + 3]
+        got = run_workload(
+            ServeEngine(params, cfg,
+                        ServeConfig(max_slots=2, max_len=16, paged=True,
+                                    page_size=4, spec_k=4)),
+            prompts, max_tokens=12)
+        want = run_workload(
+            ServeEngine(params, cfg, ServeConfig(max_slots=2, max_len=16)),
+            prompts, max_tokens=12)
+        assert generation_agreement(got, want)["identical"] == 1.0
+
+    def test_sampling_deterministic_given_seed(self):
+        cfg = _cfg()
+        params = _params(cfg)
+
+        def run():
+            eng = _spec(params, cfg, 2, seed=0)
+            for p in RAGGED:
+                eng.submit(p, max_tokens=5, temperature=0.7)
+            return {r.uid: tuple(r.generated)
+                    for r in eng.run_until_drained()}
+
+        assert run() == run()
+
+    def test_tick_stays_fused(self):
+        """One trace, one readback per tick — speculation must not cost
+        the device-residency discipline."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = _spec(params, cfg, 2)
+        eng.submit(np.arange(6), max_tokens=30)
+        eng.step()
+        base = eng.host_readbacks
+        ticks = eng.tick_trace_count
+        for i in range(3):
+            eng.step()
+            assert eng.host_readbacks == base + (i + 1)
+        assert eng.tick_trace_count == ticks == 1
+
+    def test_spec_requires_paged(self):
+        cfg = _cfg()
+        with pytest.raises(ValueError, match="paged"):
+            ServeEngine({}, cfg, ServeConfig(max_slots=1, spec_k=2))
+        with pytest.raises(ValueError, match="drafter"):
+            ServeEngine({}, cfg, ServeConfig(max_slots=1, paged=True,
+                                             spec_k=2,
+                                             spec_drafter="psychic"))
+
+
+# -----------------------------------------------------------------------------
+# Accounting: draft vs verify billed separately (satellite)
+# -----------------------------------------------------------------------------
+
+class TestSpecAccounting:
+    def test_verify_tick_bill_hand_computed(self):
+        """First speculative tick after a chunk-free admission: the
+        verify pass streams weights once and bills k+1 lanes of causal
+        attention; the n-gram drafter bills one history scan."""
+        cfg = _cfg()
+        params = _params(cfg)
+        k = 2
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(max_slots=1, max_len=64, paged=True,
+                                      page_size=4, spec_k=k))
+        eng.submit(np.arange(8), max_tokens=12)
+        eng.step()                  # admission + the slot's first spec tick
+        eng.step()                  # a pure spec tick
+        m = eng.metrics_log[-1]
+        width = k + 1
+        # live context: prompt + admission token + tick-0's spec emission
+        ctx = 8 + 1 + eng.metrics_log[0].tokens
+        elems, n_attn = eng._matmul_elems, eng._n_attn
+        dims = eng._attn_dims
+        want_v = (2.0 * elems * width
+                  + 4.0 * n_attn * dims
+                  * (width * ctx + width * (width - 1) / 2.0))
+        assert m.verify_flops == pytest.approx(want_v)
+        assert m.draft_flops == 0.0                 # ngram drafts for free
+        assert m.draft_bytes == 4.0 * 64            # one int32 history row
+        assert m.verify_bytes == pytest.approx(
+            eng.weight_bytes + eng._kv_token_bytes * (ctx + 2.0 * width))
+        assert m.flops == pytest.approx(want_v)     # no admission this tick
+        assert m.spec_draft_tokens == k
+        assert m.spec_accepted_tokens == m.tokens - 1
+
+    def test_accountant_spec_report(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        eng = _spec(params, cfg, 2)
+        eng.accountant = acct
+        run_workload(eng, RAGGED, max_tokens=6)
+        rep = acct.report()
+        assert "spec" in rep
+        spec = rep["spec"]
+        assert spec["draft_tokens"] > 0
+        assert 0.0 <= spec["accept_rate"] <= 1.0
+        assert spec["verify_j"] > 0
+        assert spec["j_per_accepted_token"] > 0
+        # totals stay consistent: the spec split is part of bytes_moved
+        assert rep["bytes_moved"] >= spec["verify_bytes"]
+
+    def test_oracle_drafter_bills_extra_weight_streams(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        k = 3
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(max_slots=1, max_len=64, paged=True,
+                                      page_size=4, spec_k=k,
+                                      spec_drafter="oracle"))
+        eng.submit(np.arange(8), max_tokens=12)
+        eng.step()
+        eng.step()
+        m = eng.metrics_log[-1]
+        assert m.draft_flops > 0
+        assert m.draft_bytes > k * 0.9 * eng.weight_bytes
+        assert m.weight_bytes == pytest.approx((k + 1) * eng.weight_bytes)
+
+
+# -----------------------------------------------------------------------------
+# Stats correctness sweep (satellites 1-3)
+# -----------------------------------------------------------------------------
+
+class TestStatsRegressions:
+    def test_pool_stats_zero_lookups_hit_rate(self):
+        assert PoolStats().hit_rate == 0.0
+        pool = PagePool(4, page_size=4)
+        assert pool.stats.hit_rate == 0.0
+        repr(pool)                                  # formats without raising
+
+    def test_summary_zero_ticks_and_zero_tokens(self):
+        """A paged+spec engine that never served must summarize to clean
+        zeros — no NaN, no ZeroDivisionError (satellite regression)."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = _spec(params, cfg, 2)
+        s = eng.summary()
+        assert s["decode_tokens_per_s"] == 0.0
+        assert s["prefix_hit_rate"] == 0.0
+        assert s["pool_hit_rate"] == 0.0
+        assert s["accept_rate"] == 0.0
+        assert s["accepted_tokens_per_tick"] == 0.0
+        assert all(v == v for v in s.values() if isinstance(v, float))
+        # accountant mirror: a report with zero tokens is None-guarded
+        acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        rep = acct.report()
+        assert rep["prefix_hit_rate"] == 0.0 and "spec" not in rep
+
+    def test_unbook_lookup_restores_counts(self):
+        pool = PagePool(8, page_size=2)
+        from repro.serve import block_tokens
+        blocks = block_tokens(np.arange(6), 2)
+        pages = pool.alloc(3)
+        parent = -1
+        for p, blk in zip(pages, blocks):
+            parent = pool.publish(p, parent, blk)
+        pool.release_all(pages)
+        hits = pool.lookup(blocks)
+        assert (pool.stats.hit_blocks, pool.stats.missed_blocks) == (3, 0)
+        pool.release_all(hits)
+        pool.unbook_lookup(3, 3)
+        assert (pool.stats.hit_blocks, pool.stats.missed_blocks) == (0, 0)
+        assert pool.stats.hit_rate == 0.0
+
+    def test_deferred_admission_books_stats_once(self):
+        """Hand-computed PoolStats through a defer-retry cycle: request B
+        (same prompt as A) waits behind A on a pool with capacity for one,
+        deferred by the fits gate for many ticks. Deferral must book NO
+        lookup stats; the final ledger is exactly one booking per
+        admission: A missed its 2 blocks, B hit them."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(max_slots=2, max_len=64, paged=True,
+                                      page_size=4, num_pages=4))
+        P = np.arange(8)
+        eng.submit(P, max_tokens=8)                 # A: needs all 4 pages
+        eng.submit(P, max_tokens=8)                 # B: deferred until A ends
+        done = eng.run_until_drained()
+        assert len(done) == 2
+        st = eng.pool.stats
+        assert st.missed_blocks == 2                # A's two blocks, once
+        assert st.hit_blocks == 2                   # B's two hits, once
+        assert st.alloc_failures == 0               # fits-gated, no race
+        assert st.hit_rate == pytest.approx(0.5)
+
+    def test_defer_admission_helper_rolls_back(self):
+        """The centralized deferral path: stats and refcounts return to
+        their pre-lookup values and the request requeues head-of-line."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(max_slots=2, max_len=64, paged=True,
+                                      page_size=4))
+        P = np.arange(8)
+        run_workload(eng, [P], max_tokens=2)        # publish P's blocks
+        from repro.serve import block_tokens
+        before = dataclasses.replace(eng.pool.stats)
+        blocks = block_tokens(P, 4)
+        hits = eng.pool.lookup(blocks)
+        assert len(hits) == 2
+        req = Request(99, P, 4)
+        eng._defer_admission(req, hits, len(hits), len(blocks), [])
+        assert eng.pool.stats == before
+        assert all(eng.pool.refcount(p) == 0 for p in hits)
+        assert eng.scheduler.pending[0] is req
+
+    def test_oversized_queued_request_dropped_not_livelocked(self):
+        """A never-fittable request that reached the queue directly (past
+        the submit guard) is dropped and failed fast — with no lookup
+        stats booked — instead of pinning FIFO admission forever."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(max_slots=2, max_len=64, paged=True,
+                                      page_size=4, num_pages=4))
+        big = Request(7777, np.arange(30), 16)      # needs 12 > 4 pages
+        eng.scheduler.submit(big)
+        eng.submit(np.arange(8), max_tokens=2)      # must still be served
+        done = eng.run_until_drained()
+        assert {r.uid for r in done} == {7777, 1}
+        assert big.done and big.generated == []
+        assert eng.pool.stats.missed_blocks == 2    # only the real request
+        assert eng.pool.stats.hit_blocks == 0
+
+    def test_finish_publishes_full_blocks_before_release(self):
+        """Satellite: a finished stream's exactly-full final block becomes
+        a reusable prefix. Publishing happens BEFORE release_all (a page
+        released unpublished would go to the free list and be recyclable),
+        and pool refcounts return to baseline after drain."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(max_slots=2, max_len=64, paged=True,
+                                      page_size=4))
+        P = np.arange(6)
+        gen = list(run_workload(eng, [P], max_tokens=6).values())[0]
+        # cached stream = prompt + generated[:-1] = 11 tokens -> blocks
+        # 0 (prompt) and 1 (prompt tail + first generated) are published
+        assert len(eng.pool.cached_pages()) == 2
+        assert eng.pool.live == 0
+        assert all(eng.pool.refcount(p) == 0
+                   for p in range(eng.pool.num_pages))
+        # a prompt continuing into the generation hits the decode-grown
+        # block: 8 of its tokens (2 blocks) come from the registry
+        probe = np.concatenate([P, gen[:4]])
+        eng.submit(probe, max_tokens=2)
+        eng.step()
+        assert eng.metrics_log[-1].prefix_hit_tokens == 8
+
+    def test_partial_final_block_not_published(self):
+        """Only full, frozen blocks are shareable: a stream whose cache
+        ends mid-block publishes the full prefix blocks only."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(max_slots=1, max_len=64, paged=True,
+                                      page_size=4))
+        run_workload(eng, [np.arange(5)], max_tokens=2)   # cache = 6 toks
+        assert len(eng.pool.cached_pages()) == 1          # block 0 only
+
+    def test_spec_mode_refcounts_baseline_after_drain(self):
+        """Speculative ticks transiently write k positions past the
+        committed length; after drain nothing may leak — refcounts at
+        zero, live pages zero."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = _spec(params, cfg, 4)
+        run_workload(eng, RAGGED, max_tokens=6)
+        assert eng.pool.live == 0
+        assert all(eng.pool.refcount(p) == 0
+                   for p in range(eng.pool.num_pages))
+
+    def test_spec_booking_counts_draft_growth(self):
+        """The page budget books worst-case k-token growth per tick
+        (scheduler/fits + the submit guard share _pages_needed)."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = _spec(params, cfg, 4)
+        # 8 + 4 + spec_k(4) = 16 tokens -> 4 pages
+        assert eng._pages_needed(8, 4) == 4
+        plain = ServeEngine(params, cfg,
+                            ServeConfig(max_slots=2, max_len=64, paged=True,
+                                        page_size=4))
+        assert plain._pages_needed(8, 4) == 3
