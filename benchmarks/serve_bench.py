@@ -25,9 +25,17 @@ Four modes on the SAME model and backend:
   modeled J/accepted-token — plus the stream-identity check against the
   dense greedy engine (rejection sampling must preserve it exactly).
   Emits ``BENCH_serve_spec.json``.
+* ``--paged --long-context`` — the long-context tier (DESIGN.md §16) on a
+  fragmented-RAG workload (distinct long documents, chunked prefill):
+  the paged flash-prefill kernel on a contiguous vs. a maximally
+  fragmented page layout, against the chunked whole-table-gather
+  baseline. Gates on MODELED prefill throughput (roofline over the
+  gather-byte accounting — kernel wall times are meaningless in CPU
+  interpret mode): fragmented within 5% of contiguous, and >= 1.3x the
+  gather baseline. Emits ``BENCH_serve_longctx.json``.
 
     PYTHONPATH=src python benchmarks/serve_bench.py \
-        [--quant int8|--paged [--spec-k K]]
+        [--quant int8|--paged [--spec-k K|--long-context]]
 """
 
 from __future__ import annotations
@@ -47,11 +55,25 @@ OUT_PAGED_PATH = os.path.join(os.path.dirname(__file__), "..",
                               "BENCH_serve_paged.json")
 OUT_SPEC_PATH = os.path.join(os.path.dirname(__file__), "..",
                              "BENCH_serve_spec.json")
+OUT_LONGCTX_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_serve_longctx.json")
 
 N_REQUESTS = 12
 MAX_TOKENS = 16
 MAX_SLOTS = 4
 MAX_LEN = 64
+
+# long-context tier workload (DESIGN.md §16): long distinct documents,
+# chunked prefill — the gather-heavy fragmented-RAG shape. The pool gets
+# headroom beyond the dense-equivalent so compaction can find contiguous
+# free runs.
+LC_REQUESTS = 8
+LC_MAX_TOKENS = 4
+LC_SLOTS = 4
+LC_MAX_LEN = 256
+LC_PAGE = 8
+LC_CHUNK = 32
+LC_NUM_PAGES = LC_SLOTS * (LC_MAX_LEN // LC_PAGE) + 24
 
 
 def _model():
@@ -348,6 +370,121 @@ def bench_spec(spec_k=4, prefix_len=24, tail_len=6) -> dict:
     return res
 
 
+def bench_longctx() -> dict:
+    """Long-context tier (DESIGN.md §16): three arms on the same
+    fragmented-RAG workload (distinct long documents, chunked prefill,
+    no shareable prefix):
+
+    * ``chunked_gather`` — the PR-4 XLA extend path: every prefill chunk
+      materializes the FULL page-table window per layer;
+    * ``kernel_contiguous`` — the paged flash-prefill kernel, free list
+      sorted so every slot gets one ascending page run;
+    * ``kernel_fragmented`` — the same kernel on a deterministically
+      shuffled free list (maximal fragmentation), with page-table
+      compaction enabled.
+
+    The gate rides on MODELED prefill throughput — a roofline over the
+    engine's gather-byte accounting at TPU v5e constants — because the
+    kernel runs in interpret mode on CPU backends, where wall time
+    measures the Pallas interpreter, not the machine. Wall numbers are
+    reported untrusted. The kernel's page-granular gather makes its
+    modeled bytes IDENTICAL across layouts (the whole point: prefill
+    cost independent of fragmentation, DMA locality aside), while the
+    gather baseline pays the whole table width every chunk."""
+    from repro.core import accounting, energy, hw
+    from repro.serve import ServeConfig, ServeEngine, generation_agreement, \
+        run_workload
+    cfg, params = _model()
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, 100, size=int(n))
+               for n in rng.integers(100, 180, size=LC_REQUESTS)]
+
+    def arm(kernel: bool, frag: bool, compact: float = 0.0) -> tuple:
+        scfg = ServeConfig(max_slots=LC_SLOTS, max_len=LC_MAX_LEN,
+                           paged=True, page_size=LC_PAGE,
+                           num_pages=LC_NUM_PAGES,
+                           prefill_chunk=LC_CHUNK, prefix_cache=False,
+                           decode_kernel=kernel,
+                           compact_threshold=compact)
+        eng = ServeEngine(params, cfg, scfg)
+        run_workload(eng, prompts, max_tokens=LC_MAX_TOKENS)   # warm/compile
+        # deterministic page layout for the measured pass: ascending run
+        # (pool pops from the list tail) or seeded max-fragmentation
+        rs = np.random.default_rng(13)
+        free = sorted(eng.pool._free)
+        eng.pool._free = (list(rs.permutation(free)) if frag
+                          else sorted(free, reverse=True))
+        acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        eng.accountant = acct
+        eng.metrics_log = []
+        gens = run_workload(eng, prompts, max_tokens=LC_MAX_TOKENS)
+        assert len(gens) == LC_REQUESTS
+        s = eng.summary()
+        ptoks = s["prefill_tokens"]
+        flops = sum(2.0 * eng._matmul_elems * len(p)
+                    + 2.0 * eng._n_attn * eng._attn_dims * float(len(p)) ** 2
+                    for p in prompts)
+        n_admit = sum(1 for m in eng.metrics_log if m.prefill_tokens > 0)
+        # prefill DRAM bill: cached-window gather (the fragmentation-
+        # sensitive term) + chunk KV writes + one weight stream per admit
+        # tick + the compaction copies this layout forced
+        pre_bytes = (s["prefill_gather_bytes"]
+                     + eng._kv_token_bytes * ptoks
+                     + eng.weight_bytes * n_admit
+                     + 2.0 * s["compaction_moves"] * LC_PAGE
+                     * eng._kv_token_bytes)
+        t_model = max(pre_bytes / hw.TPU_HBM_BW, flops / hw.TPU_PEAK_FLOPS)
+        pre_j = energy.dram_energy_j(pre_bytes) + energy.compute_energy_j(
+            flops)
+        wall = sum(m.wall_s for m in eng.metrics_log)
+        out = {"prefill_tokens": ptoks,
+               "prefill_gather_bytes": s["prefill_gather_bytes"],
+               "prefill_dram_bytes": pre_bytes,
+               "modeled_prefill_s": t_model,
+               "modeled_prefill_tok_s": round(ptoks / t_model, 1),
+               "modeled_prefill_j_per_token": pre_j / max(ptoks, 1),
+               "compaction_moves": s["compaction_moves"],
+               "decode_tokens": s["decode_tokens"],
+               "wall_s_untrusted": round(wall, 4),
+               "ticks": s["ticks"]}
+        return out, gens
+
+    base_m, base_g = arm(kernel=False, frag=True)
+    contig_m, contig_g = arm(kernel=True, frag=False)
+    frag_m, frag_g = arm(kernel=True, frag=True, compact=0.3)
+    agree_cf = generation_agreement(frag_g, contig_g)
+    agree_kb = generation_agreement(frag_g, base_g)
+    res = {
+        "workload": {"requests": LC_REQUESTS, "max_tokens": LC_MAX_TOKENS,
+                     "slots": LC_SLOTS, "max_len": LC_MAX_LEN,
+                     "page_size": LC_PAGE, "prefill_chunk": LC_CHUNK,
+                     "num_pages": LC_NUM_PAGES,
+                     "prompt_lens": [len(p) for p in prompts],
+                     "backend": jax.default_backend()},
+        "notes": ("fragmented-RAG long-context workload (distinct "
+                  "documents, chunked prefill, prefix cache off). "
+                  "modeled_prefill_tok_s is a TPU v5e roofline over the "
+                  "engine's gather-byte accounting (DESIGN.md §16); "
+                  "wall_s_untrusted measures the Pallas interpreter on "
+                  "non-TPU backends, not the machine."),
+        "chunked_gather": base_m,
+        "kernel_contiguous": contig_m,
+        "kernel_fragmented": frag_m,
+        "frag_vs_contig_ratio": round(
+            frag_m["modeled_prefill_tok_s"]
+            / contig_m["modeled_prefill_tok_s"], 4),
+        "kernel_vs_gather_speedup": round(
+            frag_m["modeled_prefill_tok_s"]
+            / base_m["modeled_prefill_tok_s"], 3),
+        "token_agreement_frag_vs_contig": agree_cf,
+        "token_agreement_vs_gather": agree_kb,
+    }
+    with open(OUT_LONGCTX_PATH, "w") as f:
+        json.dump(res, f, indent=2)
+    return res
+
+
 def run():
     """benchmarks/run.py hook: name,us_per_call,derived rows."""
     res = bench()
@@ -377,8 +514,22 @@ if __name__ == "__main__":
                     help="with --paged: benchmark speculative decode "
                          "(draft k tokens/tick, DESIGN.md §15) vs the "
                          "plain paged engine into BENCH_serve_spec.json")
+    ap.add_argument("--long-context", action="store_true",
+                    help="with --paged: benchmark the long-context tier "
+                         "(paged flash-prefill kernel, fragmented vs "
+                         "contiguous layouts vs the chunked-gather "
+                         "baseline, DESIGN.md §16) into "
+                         "BENCH_serve_longctx.json")
     args = ap.parse_args()
-    if args.paged and args.spec_k > 0:
+    if args.paged and args.long_context:
+        out = bench_longctx()
+        print(json.dumps(out, indent=2))
+        print(f"\nwrote {os.path.abspath(OUT_LONGCTX_PATH)}")
+        print(f"modeled prefill tok/s: fragmented/contiguous "
+              f"{out['frag_vs_contig_ratio']}x; kernel vs chunked gather "
+              f"{out['kernel_vs_gather_speedup']}x; streams identical: "
+              f"{out['token_agreement_vs_gather']['identical']}")
+    elif args.paged and args.spec_k > 0:
         out = bench_spec(spec_k=args.spec_k)
         print(json.dumps(out, indent=2))
         print(f"\nwrote {os.path.abspath(OUT_SPEC_PATH)}")

@@ -59,6 +59,12 @@ class CarbonAccountant:
         self._prefix_hit_tokens = 0.0
         self._saved_bytes = 0.0
         self._saved_flops = 0.0
+        # long-context ledger (DESIGN.md §16): the cached-window gather
+        # share of prefill DRAM traffic (the fragmentation-sensitive term
+        # the paged prefill kernel bounds) and pages relocated by
+        # page-table compaction
+        self._prefill_gather_bytes = 0.0
+        self._compaction_moves = 0.0
         # speculative-decode ledger (DESIGN.md §15): draft and verify
         # phases bill separately — the drafter may be nearly free (n-gram
         # history scan) or a full extra model pass per draft token
@@ -115,6 +121,10 @@ class CarbonAccountant:
                                                      0.0))
             self._saved_bytes += float(getattr(metrics, "saved_bytes", 0.0))
             self._saved_flops += float(getattr(metrics, "saved_flops", 0.0))
+            self._prefill_gather_bytes += float(
+                getattr(metrics, "prefill_gather_bytes", 0.0))
+            self._compaction_moves += float(
+                getattr(metrics, "compaction_moves", 0.0))
             self._spec_draft_tokens += float(
                 getattr(metrics, "spec_draft_tokens", 0.0))
             self._spec_accepted_tokens += float(
@@ -284,6 +294,12 @@ class CarbonAccountant:
             "saved_dram_j": energy.dram_energy_j(self._saved_bytes),
             "saved_compute_j": energy.compute_energy_j(self._saved_flops,
                                                        self._spec),
+            # long-context tier (DESIGN.md §16): gather share of the
+            # prefill DRAM bill, and its energy at the per-byte DRAM cost
+            "prefill_gather_bytes": self._prefill_gather_bytes,
+            "prefill_gather_dram_j": energy.dram_energy_j(
+                self._prefill_gather_bytes),
+            "compaction_moves": self._compaction_moves,
             "modeled_dram_j": self.modeled_dram_j,
             "modeled_compute_j": self.modeled_compute_j,
             "modeled_j_per_token": (modeled_j / self._tokens

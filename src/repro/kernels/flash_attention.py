@@ -378,3 +378,214 @@ def _flash_vjp_bwd(statics, res, dout):
 
 
 flash_attention_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Paged flash prefill (DESIGN.md §16)
+#
+# The long-context serving tier's prefill kernel: an in-flight prompt chunk
+# attends over its slot's paged KV pool DIRECTLY — the per-sequence page
+# table rides in scalar-prefetch SMEM (the paged_decode_attention idiom) and
+# the K/V BlockSpec index_map resolves pt[b, j] per tile, so the page gather
+# IS the HBM->VMEM DMA. This replaces paged_extend's XLA fallback, which
+# materializes the slot's ENTIRE (NB * page_size) window per chunk — O(chunks
+# x window) gather bytes on a fragmented long context, the exact DRAM term
+# the paper says dominates edge energy.
+#
+# Numerics contract (must match the paged_extend oracle token-for-token):
+# the cached prefix [0, start) is read from the pool in STORAGE dtype (int8
+# codes dequantized in-kernel — decode numerics), while the chunk's own
+# K/V arrive as separate full-precision operands (dense-prefill numerics).
+# The K sweep therefore runs NB page steps plus ONE chunk step; pages past
+# the cached window are clamped in the index_map to the last needed page,
+# so the revolving-window pipeline issues no DMA for them — gather traffic
+# is ceil(start/ps) pages per row, independent of fragmentation.
+# ---------------------------------------------------------------------------
+
+
+def _paged_prefill_kernel(start_ref, len_ref, pt_ref, *refs, scale: float,
+                          window: int, page_size: int, n_blocks: int,
+                          block_q: int, rep: int, quantized: bool):
+    """Online-softmax body. Grid (B, Hkv, NQ, NB + 1): page steps
+    ki < NB score the cached window in storage dtype; the final step
+    ki == NB scores the full-precision in-flight chunk with the causal
+    in-chunk mask. Query rows flatten (token, rep) row-major, ``block_q``
+    chunk tokens per tile."""
+    del pt_ref                                   # consumed by the index_maps
+    if quantized:
+        (q_ref, kp_ref, kps_ref, vp_ref, vps_ref, kc_ref, vc_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, kp_ref, vp_ref, kc_ref, vc_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+        kps_ref = vps_ref = None
+    bi, qi, ki = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = start_ref[bi]                        # cached-prefix length
+    ln = len_ref[bi]                             # valid chunk tokens; 0=dead
+    rows = block_q * rep
+    # chunk-relative token index of each flattened q row ((t, rep) major)
+    q_rel = (qi * rows + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+             ) // rep
+    q_abs = start + q_rel                        # absolute position
+
+    def _accumulate(s, valid, v):
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    # -- page step: cached window [0, start), storage dtype ------------------
+    k_pos = ki * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid_p = k_pos < start                      # chunk's own pages excluded
+    if window > 0:
+        valid_p &= (q_abs - k_pos) < window
+
+    @pl.when(jnp.logical_and(ln > 0,
+                             jnp.logical_and(ki < n_blocks,
+                                             ki * page_size < start)))
+    def _page():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (rows, d)
+        k = kp_ref[0, 0].astype(jnp.float32)                 # (ps, d)
+        if quantized:
+            k = k * kps_ref[0, 0]                            # (ps, 1)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        v = vp_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            v = v * vps_ref[0, 0]
+        _accumulate(s, valid_p, v)
+
+    # -- chunk step: in-flight tokens, full precision, causal ----------------
+    c = kc_ref.shape[2]
+    k_rel = jax.lax.broadcasted_iota(jnp.int32, (1, c), 1)
+    valid_c = (k_rel <= q_rel) & (k_rel < ln)
+    if window > 0:
+        valid_c &= (q_rel - k_rel) < window
+
+    @pl.when(jnp.logical_and(ln > 0, ki == n_blocks))
+    def _chunk():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (rows, d)
+        k = kc_ref[0, 0].astype(jnp.float32)                 # (c, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        _accumulate(s, valid_c, vc_ref[0, 0].astype(jnp.float32))
+
+    @pl.when(ki == n_blocks)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "block_q",
+                                             "interpret"))
+def paged_prefill_attention(q: jnp.ndarray, k_new: jnp.ndarray,
+                            v_new: jnp.ndarray, k_pool: jnp.ndarray,
+                            v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                            starts: jnp.ndarray, lens: jnp.ndarray, *,
+                            scale: float, window: int = -1,
+                            block_q: int = 128, interpret: bool = False,
+                            k_scale=None, v_scale=None) -> jnp.ndarray:
+    """Chunk prefill attention through a paged KV pool.
+
+    q: (B, C, H, D) chunk queries (rope applied); k_new/v_new: (B, C, Hkv,
+    D) the chunk's FULL-PRECISION K/V (what the in-chunk attention sees —
+    dense-prefill numerics); k_pool/v_pool: (P, page_size, Hkv, D) storage
+    pools, already holding the scattered chunk (the kernel only reads pages
+    covering [0, start)); page_table: (B, NB) int32 (entries past a slot's
+    chain must be in-bounds — the engine points them at the sink page);
+    starts: (B,) cached-prefix length per row; lens: (B,) valid chunk
+    tokens (0 = dead row -> zeros). ``k_scale``/``v_scale`` (P, page_size,
+    Hkv) fp32 switch on int8-KV in-kernel dequant for the cached window.
+    ``block_q`` is in chunk TOKENS (C % block_q == 0; ops.py pads).
+    Returns (B, C, H, D) in q.dtype; rows past ``lens`` are garbage (the
+    caller's padding contract, same as paged_extend)."""
+    b, c, h, d = q.shape
+    p_pages, page_size, hkv, _ = k_pool.shape
+    nb = page_table.shape[1]
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    assert c % block_q == 0, (c, block_q)
+    nq = c // block_q
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), "pass both scales or neither"
+
+    # (B, C, Hkv, rep, D) -> (B, Hkv, C*rep, D): rows (t, rep) row-major,
+    # matching the kernel's q_rel = row // rep decode
+    qg = q.reshape(b, c, hkv, rep, d).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(b, hkv, c * rep, d)
+    kpt = k_pool.transpose(0, 2, 1, 3)           # (P, Hkv, ps, D)
+    vpt = v_pool.transpose(0, 2, 1, 3)
+    kct = k_new.transpose(0, 2, 1, 3)            # (B, Hkv, C, D)
+    vct = v_new.transpose(0, 2, 1, 3)
+
+    def kv_map(bi, hi, qi, ki, starts, lens, pt):
+        del lens
+        # pages past the cached window re-map to the last needed page: the
+        # revolving-window pipeline skips their DMA, so gather traffic is
+        # ceil(start/ps) pages per row regardless of NB or fragmentation
+        last = jnp.maximum(starts[bi] - 1, 0) // page_size
+        return (pt[bi, jnp.minimum(ki, last)], hi, 0, 0)
+
+    def chunk_map(bi, hi, qi, ki, starts, lens, pt):
+        del starts, lens, pt
+        return (bi, hi, 0, 0)
+
+    rows = block_q * rep
+    kv_spec = pl.BlockSpec((1, 1, page_size, d), kv_map)
+    chunk_spec = pl.BlockSpec((1, 1, c, d), chunk_map)
+    in_specs = [
+        pl.BlockSpec((1, 1, rows, d),
+                     lambda bi, hi, qi, ki, starts, lens, pt:
+                     (bi, hi, qi, 0)),
+        kv_spec,
+    ]
+    operands = [qg, kpt]
+    if quantized:
+        sc_spec = pl.BlockSpec((1, 1, page_size, 1), kv_map)
+        kst = k_scale.astype(jnp.float32).transpose(0, 2, 1)[..., None]
+        vst = v_scale.astype(jnp.float32).transpose(0, 2, 1)[..., None]
+        in_specs += [sc_spec, kv_spec, sc_spec]
+        operands += [kst, vpt, vst]
+    else:
+        in_specs += [kv_spec]
+        operands += [vpt]
+    in_specs += [chunk_spec, chunk_spec]
+    operands += [kct, vct]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, nq, nb + 1),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, rows, d),
+                               lambda bi, hi, qi, ki, starts, lens, pt:
+                               (bi, hi, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),     # running max
+            pltpu.VMEM((rows, 1), jnp.float32),     # running denom
+            pltpu.VMEM((rows, d), jnp.float32),     # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_prefill_kernel, scale=scale, window=window,
+                          page_size=page_size, n_blocks=nb, block_q=block_q,
+                          rep=rep, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, c * rep, d), q.dtype),
+        interpret=interpret,
+    )(starts.astype(jnp.int32), lens.astype(jnp.int32),
+      page_table.astype(jnp.int32), *operands)
+    return out.reshape(b, hkv, c, rep, d).transpose(0, 2, 1, 3, 4
+                                                    ).reshape(b, c, h, d)

@@ -228,6 +228,51 @@ def paged_verify_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                                       k_scale=k_scale, v_scale=v_scale)
 
 
+def paged_prefill_attention(q: jnp.ndarray, k_new: jnp.ndarray,
+                            v_new: jnp.ndarray, k_pool: jnp.ndarray,
+                            v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                            starts: jnp.ndarray, lens: jnp.ndarray, *,
+                            scale: Optional[float] = None, window: int = -1,
+                            block_q: int = 128,
+                            interpret: Optional[bool] = None,
+                            k_scale: Optional[jnp.ndarray] = None,
+                            v_scale: Optional[jnp.ndarray] = None
+                            ) -> jnp.ndarray:
+    """Chunk-prefill attention through a paged KV pool (DESIGN.md §16).
+
+    q: (B, C, H, D) chunk queries; k_new/v_new: (B, C, Hkv, D) the chunk's
+    full-precision K/V (in-chunk attention sees these — dense-prefill
+    numerics); k_pool/v_pool: (P, page_size, Hkv, D) the shared block pool
+    holding the cached prefix [0, starts[b]) (read in storage dtype —
+    decode numerics); page_table: (B, NB) int32 (out-of-chain entries must
+    point at the sink page); starts/lens: (B,) cached-prefix length and
+    valid chunk tokens per row (lens 0 = dead row). ``k_scale``/``v_scale``
+    (P, page_size, Hkv) enable int8-KV in-kernel dequant.
+
+    The page gather is the DMA: the scalar-prefetched table resolves each
+    K/V tile's pool page in the BlockSpec index_map, and pages past the
+    cached window collapse onto the last needed one — per-row gather
+    traffic is ceil(start/page_size) pages, independent of how fragmented
+    the chain is. Pads C up to a ``block_q`` multiple; rows past ``lens``
+    return garbage (the caller's padding contract, same as paged_extend).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, c, h, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    assert (k_scale is None) == (v_scale is None), \
+        "pass both KV scales or neither"
+    bq = min(block_q, _round_up_pow2(c))
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k_new, 1, bq)
+    vp = _pad_to(v_new, 1, bq)
+    out = _fa.paged_prefill_attention(qp, kp, vp, k_pool, v_pool, page_table,
+                                      starts, lens, scale=scale,
+                                      window=window, block_q=bq,
+                                      interpret=interpret,
+                                      k_scale=k_scale, v_scale=v_scale)
+    return out[:, :c]
+
+
 def _round_up_pow2(n: int) -> int:
     p = 8
     while p < n and p < 128:

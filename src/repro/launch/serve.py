@@ -53,6 +53,17 @@ def main() -> None:
                     help="ngram: prompt-lookup self-drafting (near-free); "
                          "oracle: the target model drafts itself (parity "
                          "harness)")
+    ap.add_argument("--compact-threshold", type=float, default=0.0,
+                    help="compact a slot's private page suffix into a "
+                         "contiguous run when its page-table fragmentation "
+                         "reaches this score in [0, 1] (paged mode, "
+                         "DESIGN.md §16; 0 = compaction off)")
+    ap.add_argument("--evict-policy", default="lru",
+                    choices=("lru", "cost"),
+                    help="parked-prefix reclamation: lru evicts the least-"
+                         "recently-parked block; cost evicts the cheapest-"
+                         "to-recompute block first (recompute FLOPs per "
+                         "byte, DESIGN.md §16)")
     args = ap.parse_args()
 
     if not args.smoke:
@@ -76,7 +87,9 @@ def main() -> None:
                                   prefix_cache=not args.no_prefix_cache,
                                   prefill_chunk=args.prefill_chunk,
                                   spec_k=args.spec_k,
-                                  spec_drafter=args.spec_drafter),
+                                  spec_drafter=args.spec_drafter,
+                                  compact_threshold=args.compact_threshold,
+                                  evict_policy=args.evict_policy),
                       accountant=acct,
                       scheduler=Scheduler(SchedulerConfig(policy=args.policy)))
     rng = np.random.default_rng(0)
@@ -103,6 +116,9 @@ def main() -> None:
               f"({rep['prefix_hit_tokens']:.0f} prompt tokens reused), "
               f"saved {rep['saved_bytes']:.3g} KV bytes "
               f"= {rep['saved_dram_j']:.3e} J DRAM")
+        print(f"long-context: {rep['prefill_gather_bytes']:.3g} prefill "
+              f"gather bytes = {rep['prefill_gather_dram_j']:.3e} J DRAM, "
+              f"{rep['compaction_moves']:.0f} pages compacted")
     if args.spec_k > 0:
         print(f"speculative decode (k={args.spec_k}, "
               f"{args.spec_drafter}): {s['accept_rate']:.1%} accept rate, "

@@ -91,6 +91,26 @@ def decode_tick_flops(matmul_elems: float, n_attn: int, attn_dims: int,
             + 4.0 * n_attn * attn_dims * ctx_sum)
 
 
+def block_recompute_flops(matmul_elems: float, n_attn: int, attn_dims: int,
+                          start_tok: int, n_tok: int) -> float:
+    """Modeled FLOPs to *recompute* one cached KV block of ``n_tok`` tokens
+    whose first token sits at absolute position ``start_tok`` (=
+    block depth x page size). Each token streams the matmul weights once
+    and causally attends its own prefix, so deeper blocks are strictly
+    more expensive to regenerate:
+
+        2 * matmul_elems * n_tok
+        + 4 * n_attn * attn_dims * sum_{p=start}^{start+n-1} (p + 1).
+
+    The cost-aware eviction policy (DESIGN.md §16) divides this by the
+    block's resident bytes to get recompute-FLOPs-per-byte; since every
+    block in a pool has identical byte size, ranking by this value alone
+    preserves the per-byte ordering."""
+    n = float(n_tok)
+    attn_keys = n * float(start_tok) + n * (n + 1.0) / 2.0
+    return 2.0 * matmul_elems * n + 4.0 * n_attn * attn_dims * attn_keys
+
+
 def spec_verify_flops(matmul_elems: float, n_attn: int, attn_dims: int,
                       ctx_sum: float, n_active: int, width: int) -> float:
     """Modeled FLOPs of one speculative verification pass (DESIGN.md §15):

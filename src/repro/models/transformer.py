@@ -685,6 +685,28 @@ def _paged_gather(cache, page_table: jnp.ndarray, compute_dtype):
     return k_all, v_all
 
 
+def move_pages(caches: Dict[str, PyTree], src: jnp.ndarray,
+               dst: jnp.ndarray) -> Dict[str, PyTree]:
+    """Copy pool page ``src[i]`` -> ``dst[i]`` in every layer's K/V (and
+    scale) pool — the device half of page-table compaction (DESIGN.md §16).
+    ``src``/``dst`` are (M,) int32; padding entries may point both at the
+    sink page (a sink->sink copy is the identity). The caller (serve
+    engine) owns the host-side invariants: destinations are freshly
+    allocated private pages, sources are released after the copy, and the
+    slot's page-table row is rewritten in the same device call."""
+    def per_key(key, sub):
+        ax = 1 if key.startswith("pat") else 0
+
+        def mv(pool):
+            if ax == 0:
+                return pool.at[dst].set(pool[src])
+            return pool.at[:, dst].set(pool[:, src])
+
+        return jax.tree.map(mv, sub)
+
+    return {k: per_key(k, v) for k, v in caches.items()}
+
+
 def _paged_decode_attn(p, cfg: LMConfig, spec: BlockSpec, x, cache,
                        pos: jnp.ndarray, page_table: jnp.ndarray,
                        active: jnp.ndarray):
@@ -1010,9 +1032,27 @@ def paged_extend(params, cfg: LMConfig, tokens: jnp.ndarray,
             kc = kv.k.at[page, off].set(k_new.astype(kv.k.dtype))
             vc = kv.v.at[page, off].set(v_new.astype(kv.v.dtype))
             new_cache = {"kv": KVCache(k=kc, v=vc)}
-        # attend over the gathered window, with the chunk's own K/V taken
-        # from the full-precision activations (dense-prefill numerics; the
-        # cached prefix is storage-dtype, dense-decode numerics)
+        # attend over the cached window [0, start) plus the chunk itself in
+        # full precision (dense-prefill numerics for the in-chunk part, the
+        # dense decode's storage-dtype numerics for the cached part).
+        # Kernel path (DESIGN.md §16): the page table rides in scalar-
+        # prefetch SMEM and each K/V tile is DMA'd straight from its pool
+        # page — per-row gather traffic is ceil(start/ps) pages instead of
+        # the XLA fallback's whole-window materialization.
+        if cfg.decode_kernel:
+            from repro.kernels import ops as kops
+            out = kops.paged_prefill_attention(
+                q, k_new.astype(q.dtype), v_new.astype(q.dtype),
+                new_cache["kv"].k, new_cache["kv"].v, page_table,
+                starts, lens, scale=acfg.scale, window=spec.window,
+                k_scale=new_cache["kv_scale"].k if kv_int8 else None,
+                v_scale=new_cache["kv_scale"].v if kv_int8 else None)
+            if layers._q8_active(acfg, p["attn"]["wo"]):
+                y = layers.q8_matmul(out, p["attn"]["wo"], contract_ndim=2)
+            else:
+                y = jnp.einsum("bshk,hkd->bsd", out,
+                               layers.wl(p["attn"]["wo"], out.dtype))
+            return x + y, new_cache
         k_all, v_all = _paged_gather(new_cache, page_table, q.dtype)
         j_abs = jnp.arange(w, dtype=jnp.int32)[None]            # (1, W)
         rel_w = j_abs - starts[:, None]                         # (B, W)

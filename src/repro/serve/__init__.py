@@ -2,7 +2,8 @@
 
 from repro.serve.engine import (Request, ServeConfig, ServeEngine,  # noqa: F401
                                 StepMetrics)
-from repro.serve.pages import PagePool, block_tokens  # noqa: F401
+from repro.serve.pages import (PagePool, block_tokens,  # noqa: F401
+                               fragmentation)
 from repro.serve.quality import (generation_agreement,  # noqa: F401
                                  run_workload, token_agreement)
 from repro.serve.spec import ngram_draft, speculative_accept  # noqa: F401

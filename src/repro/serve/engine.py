@@ -34,7 +34,7 @@ import numpy as np
 from repro.core import accounting
 from repro.models import transformer as tf_lib
 from repro.serve import spec as spec_lib
-from repro.serve.pages import ROOT, PagePool, block_tokens
+from repro.serve.pages import ROOT, PagePool, block_tokens, fragmentation
 from repro.serve.scheduler import Scheduler, SchedulerConfig
 
 PyTree = Any
@@ -80,6 +80,14 @@ class ServeConfig:
     # drafts greedily — k extra decode passes, the accept-all parity
     # harness, not an energy win (serve/spec.py).
     spec_drafter: str = "ngram"
+    # long-context tier (DESIGN.md §16):
+    # compact a live slot's private page suffix into a contiguous run when
+    # its table's fragmentation score (serve/pages.py:fragmentation)
+    # reaches this threshold; 0.0 = compaction off. One slot per tick.
+    compact_threshold: float = 0.0
+    # park reclamation: "lru" | "cost" (evict the cheapest-to-recompute
+    # cached block first, scored by costing.block_recompute_flops per byte)
+    evict_policy: str = "lru"
 
 
 @dataclasses.dataclass
@@ -125,6 +133,15 @@ class StepMetrics:
     draft_bytes: float = 0.0        # drafter DRAM traffic (incl. weights)
     verify_flops: float = 0.0
     verify_bytes: float = 0.0       # verify DRAM traffic (incl. weights)
+    # long-context tier (DESIGN.md §16): the cached-window gather term of
+    # this tick's prefill — the bytes the extend path actually moved to
+    # read KV behind the in-flight chunk (kernel path: page-granular
+    # ceil(start/page_size) pages per row; XLA fallback: the whole-table
+    # materialization _paged_gather really performs). Included in
+    # ``kv_bytes``; broken out because it is the fragmentation-sensitive
+    # channel the paged prefill kernel exists to bound.
+    prefill_gather_bytes: float = 0.0
+    compaction_moves: int = 0       # pages relocated by compaction this tick
 
     @property
     def bytes_moved(self) -> float:
@@ -142,6 +159,7 @@ class _AdmitInfo:
     prefix_hit_tokens: int = 0
     saved_bytes: float = 0.0
     saved_flops: float = 0.0
+    gather_bytes: float = 0.0   # cached-window gather share of kv_bytes
 
 
 @dataclasses.dataclass
@@ -252,7 +270,10 @@ class ServeEngine:
             n_pages = serve_cfg.num_pages
             if n_pages is None:
                 n_pages = b * self._blocks_per_slot
-            self.pool = PagePool(n_pages, ps)
+            # block_cost is attached below, once the cost-model scalars
+            # (matmul elems, attn dims, per-token KV bytes) exist
+            self.pool = PagePool(n_pages, ps,
+                                 evict_policy=serve_cfg.evict_policy)
             caches = tf_lib.init_paged_caches(self.cfg, n_pages, ps,
                                               serve_cfg.cache_dtype)
             page_table = jnp.full((b, self._blocks_per_slot),
@@ -318,8 +339,19 @@ class ServeEngine:
             # page-granular traffic model (DESIGN.md §14)
             self._kv_token_bytes = self.kv_cache_bytes / float(
                 (self.pool.num_pages + 1) * serve_cfg.page_size)
+            # cost-aware eviction score (DESIGN.md §16): recompute FLOPs
+            # per resident byte of one block at chain depth d — deeper
+            # blocks imply re-prefilling their whole prefix, so they are
+            # the last to go under "cost" policy
+            ps = serve_cfg.page_size
+            block_bytes = self._kv_token_bytes * ps
+            self.pool.block_cost = lambda d: costing.block_recompute_flops(
+                self._matmul_elems, self._n_attn, self._attn_dims,
+                d * ps, ps) / block_bytes
         self._build_tick()
         self._build_admit()
+        if serve_cfg.paged and serve_cfg.compact_threshold > 0.0:
+            self._build_compact()
 
     # -- compiled paths -------------------------------------------------------
 
@@ -715,6 +747,62 @@ class ServeEngine:
             flops=(2.0 * self._matmul_elems * toks_n
                    + 2.0 * self._n_attn * self._attn_dims * sq))
 
+    # -- page-table compaction (DESIGN.md §16) --------------------------------
+
+    def _build_compact(self):
+        """One jitted device call per compaction: copy the moved pages in
+        every layer's pool and rewrite the slot's page-table row, donated
+        like the tick. ``src``/``dst`` are padded to ``blocks_per_slot``
+        with sink->sink identity copies so a single executable serves
+        every move count."""
+        def compact(state: DeviceState, src, dst, slot, row):
+            self.compact_trace_count += 1   # python side effect: trace count
+            caches = tf_lib.move_pages(state.caches, src, dst)
+            pt = state.page_table.at[slot].set(row)
+            return dataclasses.replace(state, caches=caches, page_table=pt)
+        self._compact_exe = jax.jit(compact, donate_argnums=(0,))
+        self.compact_trace_count = 0
+
+    def _maybe_compact(self) -> int:
+        """Defragment at most ONE slot's private page suffix per tick
+        (bounds tick-time work). A slot qualifies when it is decoding (not
+        mid-prefill — its table is rewritten per chunk anyway), its table
+        fragmentation reaches the threshold, its movable suffix (refcount
+        1, unpublished — serve/pages.py:movable_suffix; shared prefix
+        blocks are pinned) is itself scattered, and a contiguous free run
+        exists. Returns pages moved. Because a slot's page list is fixed
+        at admission, a compacted slot stays compact for its lifetime."""
+        thr = self.scfg.compact_threshold
+        if thr <= 0.0 or not self.scfg.paged:
+            return 0
+        nb, sink = self._blocks_per_slot, self.pool.sink
+        for slot, req in enumerate(self.slot_req):
+            if req is None or slot in self._prefilling:
+                continue
+            pages = self._slot_pages[slot]
+            if len(pages) < 2 or fragmentation(pages) < thr:
+                continue
+            lo = self.pool.movable_suffix(pages)
+            movable = pages[lo:]
+            if len(movable) < 2 or fragmentation(movable) == 0.0:
+                continue
+            run = self.pool.alloc_run(len(movable))
+            if run is None:             # no contiguous free run: next tick
+                continue
+            src = np.full(nb, sink, np.int32)
+            dst = np.full(nb, sink, np.int32)
+            src[:len(movable)] = movable
+            dst[:len(movable)] = run
+            new_pages = pages[:lo] + run
+            row = new_pages + [sink] * (nb - len(new_pages))
+            self.state = self._compact_exe(
+                self.state, jnp.asarray(src), jnp.asarray(dst),
+                jnp.int32(slot), jnp.asarray(row[:nb], dtype=jnp.int32))
+            self.pool.release_all(movable)  # private + unkeyed -> free list
+            self._slot_pages[slot] = new_pages
+            return len(movable)
+        return 0
+
     # -- paged admission (DESIGN.md §14) --------------------------------------
 
     def _pages_needed(self, prompt_len: int, max_tokens: int) -> int:
@@ -886,12 +974,26 @@ class ServeEngine:
                     self._finish_slot(slot, finished)
             else:
                 w["next"] += clen
+        # cached-window gather bill (DESIGN.md §16) — what the extend path
+        # ACTUALLY moves to read KV behind the chunk, not the logical
+        # window. Kernel path: the page-table index_map clamps dead steps,
+        # so each row fetches exactly ceil(start / page_size) pages. XLA
+        # fallback: _paged_gather materializes the FULL table width for
+        # every slot row, per call — the fragmented-prefill under-billing
+        # this field exists to correct.
+        if self.cfg.decode_kernel:
+            gather_tokens = float(sum(-(-int(s) // ps) * ps
+                                      for s in starts[:len(work)]))
+        else:
+            gather_tokens = float(nslots * nb * ps)
+        gather_bytes = self._kv_token_bytes * gather_tokens
         return _AdmitInfo(
             admitted=admitted, prefill_tokens=computed, weight_passes=1,
             prefix_hit_tokens=hit_tokens,
-            # extend reads the cached window [0, start) once per chunk and
-            # writes the chunk's KV — page-granular, not whole-cache
-            kv_bytes=self._kv_token_bytes * (float(starts.sum()) + computed),
+            # extend reads the cached window behind each chunk (the gather
+            # bill above) and writes the chunk's KV — page-granular
+            kv_bytes=gather_bytes + self._kv_token_bytes * computed,
+            gather_bytes=gather_bytes,
             flops=(2.0 * self._matmul_elems * computed
                    + 2.0 * self._n_attn * self._attn_dims * attn_sq),
             saved_bytes=self._kv_token_bytes * hit_tokens,
@@ -905,6 +1007,7 @@ class ServeEngine:
         t0 = time.monotonic()
         finished: List[Request] = []
         adm = self._admit(finished)
+        moves = self._maybe_compact() if self.scfg.paged else 0
         # decoding slots only: mid-prefill paged slots occupy a slot but
         # don't produce decode tokens until their final chunk activates them
         active = [i for i, r in enumerate(self.slot_req)
@@ -991,6 +1094,9 @@ class ServeEngine:
             wb += self.weight_bytes * adm.weight_passes
         kvb += adm.kv_bytes
         fl += adm.flops
+        if moves:
+            # each relocated page is one pool read + one pool write
+            kvb += 2.0 * moves * self.scfg.page_size * self._kv_token_bytes
         m = StepMetrics(tokens=emitted, active_slots=na,
                         wall_s=time.monotonic() - t0,
                         prefill_tokens=adm.prefill_tokens,
@@ -1003,7 +1109,9 @@ class ServeEngine:
                         spec_draft_tokens=spec_k * na,
                         spec_accepted_tokens=accepted,
                         draft_flops=d_fl, draft_bytes=d_by,
-                        verify_flops=v_fl, verify_bytes=v_by)
+                        verify_flops=v_fl, verify_bytes=v_by,
+                        prefill_gather_bytes=adm.gather_bytes,
+                        compaction_moves=moves)
         self.last_metrics = m
         self.metrics_log.append(m)
         if self.accountant is not None:
@@ -1041,6 +1149,10 @@ class ServeEngine:
             out["prefix_hit_tokens"] = hit
             out["prefix_hit_rate"] = hit / total if total > 0 else 0.0
             out["saved_bytes"] = sum(m.saved_bytes for m in self.metrics_log)
+            out["prefill_gather_bytes"] = sum(m.prefill_gather_bytes
+                                              for m in self.metrics_log)
+            out["compaction_moves"] = sum(m.compaction_moves
+                                          for m in self.metrics_log)
             out["pool_pages"] = self.pool.num_pages
             out["pool_pages_live"] = self.pool.live
             out["pool_hit_rate"] = self.pool.stats.hit_rate

@@ -36,12 +36,24 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 # parent id of a prompt's first block in the prefix registry
 ROOT = -1
+
+
+def fragmentation(pages: Sequence[int]) -> float:
+    """Scatter score of one slot's page run: 1 minus the fraction of
+    adjacent table entries that are physically contiguous ascending.
+    0.0 = a perfect run (every gather is one long DMA), -> 1.0 = fully
+    scattered (every page is its own transfer). The engine compares this
+    against ``ServeConfig.compact_threshold`` to trigger compaction."""
+    if len(pages) < 2:
+        return 0.0
+    adj = sum(1 for a, b in zip(pages, pages[1:]) if b == a + 1)
+    return 1.0 - adj / (len(pages) - 1)
 
 BlockKey = Tuple[int, Tuple[int, ...]]          # (parent page, block tokens)
 
@@ -84,13 +96,30 @@ class PagePool:
       ``_page_key`` mirror each other;
     * shared (published) pages are immutable — the engine only writes to
       pages it holds privately (allocated this admission or for decode).
+
+    ``evict_policy`` selects how the park is reclaimed when the free list
+    runs dry: ``"lru"`` pops the least-recently-parked page; ``"cost"``
+    trims the parked prefix forest at its leaves, evicting the leaf that
+    is *cheapest to recompute* first (scored by ``block_cost(depth)``,
+    the engine's ``costing.block_recompute_flops`` closure over the
+    block's chain depth — DESIGN.md §16). Under "cost" a long document's
+    chain survives pressure that would LRU-evict its root (and thereby
+    cascade-unpublish the whole chain): short/shallow chains go first,
+    because regenerating a deep block means re-prefilling its entire
+    prefix.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, *,
+                 evict_policy: str = "lru",
+                 block_cost: Optional[Callable[[int], float]] = None):
         if num_pages < 1:
             raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        if evict_policy not in ("lru", "cost"):
+            raise ValueError(f"unknown evict_policy {evict_policy!r}")
         self.num_pages = num_pages
         self.page_size = page_size
+        self.evict_policy = evict_policy
+        self.block_cost = block_cost
         self.sink = num_pages          # reserved garbage row in the pool
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._ref: List[int] = [0] * num_pages
@@ -101,6 +130,9 @@ class PagePool:
         # uncertifiable — the page id may be recycled with new content —
         # so children cascade-unpublish (no stale-chain false hits)
         self._children: Dict[int, set] = {}
+        # page -> 0-based depth of its block in the prefix chain (set at
+        # publish; the cost policy's recompute score grows with depth)
+        self._page_depth: Dict[int, int] = {}
         self._lru: "OrderedDict[int, None]" = OrderedDict()
         self.stats = PoolStats()
 
@@ -129,13 +161,46 @@ class PagePool:
         for _ in range(n):
             if self._free:
                 p = self._free.pop()
-            else:                       # reclaim the least-recently-used
-                p, _ = self._lru.popitem(last=False)
-                self._unpublish(p)
-                self.stats.evicted_blocks += 1
+            else:
+                p = self._evict_one()
             self._ref[p] = 1
             pages.append(p)
         return pages
+
+    def _evict_one(self) -> int:
+        """Reclaim one parked page. ``lru``: least-recently-parked.
+        ``cost``: trim the prefix forest at its LEAVES, cheapest leaf
+        first. Candidates are parked pages with no published children —
+        evicting an interior block would cascade-unpublish every
+        descendant (their keys name its page id), destroying far more
+        recompute value than the block's own score; a leaf cascades
+        nothing. Among leaves the lowest ``block_cost(depth)`` goes first
+        (shallow blocks of short chains are cheap to regenerate; a deep
+        leaf implies its whole prefix must be re-prefilled), park order
+        breaks ties, and a parked page whose key was already
+        cascade-unpublished certifies nothing — it is worthless and
+        always goes first."""
+        if self.evict_policy == "cost" and self.block_cost is not None:
+            best = best_score = None
+            for p in self._lru:         # iteration order = park order
+                if self._page_key.get(p) is None:
+                    best = p
+                    break
+                if self._children.get(p):
+                    continue            # interior: eviction would cascade
+                score = self.block_cost(self._page_depth.get(p, 0))
+                if best_score is None or score < best_score:
+                    best, best_score = p, score
+            if best is None:            # defensive: all parked are interior
+                p, _ = self._lru.popitem(last=False)
+            else:
+                del self._lru[best]
+                p = best
+        else:
+            p, _ = self._lru.popitem(last=False)
+        self._unpublish(p)
+        self.stats.evicted_blocks += 1
+        return p
 
     def retain(self, page: int) -> None:
         if self._ref[page] == 0 and page in self._lru:
@@ -155,12 +220,56 @@ class PagePool:
         for p in pages:
             self.release(p)
 
+    # -- compaction (DESIGN.md §16) -------------------------------------------
+
+    def movable_suffix(self, pages: Sequence[int]) -> int:
+        """Index into ``pages`` (one slot's live page run) where the
+        *movable private suffix* begins. A page may be relocated only when
+        this slot holds its sole reference AND it is unpublished — a
+        published page's id is baked into registry keys (children name the
+        parent page id) and possibly other slots' tables, so moving it
+        would tear the certification chain. Everything from the returned
+        index on is refcount-1 and unkeyed; shared prefix blocks are never
+        moved."""
+        i = len(pages)
+        while i > 0:
+            p = pages[i - 1]
+            if self._ref[p] == 1 and self._page_key.get(p) is None:
+                i -= 1
+            else:
+                break
+        return i
+
+    def alloc_run(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` physically *contiguous* ascending pages from the
+        free list ONLY — compaction must never evict cached prefixes to
+        make room (that would trade gather bytes for recompute FLOPs, the
+        wrong direction). Returns None when no free run of length ``n``
+        exists; picks the lowest-addressed run otherwise (keeps the free
+        space itself defragmented)."""
+        if n <= 0:
+            return []
+        free = sorted(self._free)
+        run_start = 0
+        for i in range(1, len(free) + 1):
+            if i == len(free) or free[i] != free[i - 1] + 1:
+                if i - run_start >= n:
+                    run = free[run_start:run_start + n]
+                    taken = set(run)
+                    self._free = [p for p in self._free if p not in taken]
+                    for p in run:
+                        self._ref[p] = 1
+                    return run
+                run_start = i
+        return None
+
     # -- prefix cache ---------------------------------------------------------
 
     def _unpublish(self, page: int) -> None:
         stack = [page]
         while stack:
             p = stack.pop()
+            self._page_depth.pop(p, None)
             key = self._page_key.pop(p, None)
             if key is not None:
                 if self._key_to_page.get(key) == p:
@@ -188,6 +297,9 @@ class PagePool:
         self._key_to_page[key] = page
         if parent != ROOT:
             self._children.setdefault(parent, set()).add(page)
+            self._page_depth[page] = self._page_depth.get(parent, 0) + 1
+        else:
+            self._page_depth[page] = 0
         return page
 
     def lookup(self, blocks: Sequence[Tuple[int, ...]]) -> List[int]:

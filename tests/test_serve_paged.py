@@ -533,9 +533,14 @@ class TestPrefixAccounting:
         want_saved = (2.0 * elems * 12
                       + 2.0 * n_attn * attn_dims * 12 ** 2)
         assert m.saved_flops == pytest.approx(want_saved)
-        # admission KV traffic: read the 12 cached tokens + write 4 new
+        # admission KV traffic: the XLA extend path materializes the
+        # WHOLE page table per chunk (nslots * nb * ps tokens — §16 bills
+        # what actually moves; the kernel path bills page-granular
+        # windows), plus writing the 4 new tokens
+        gather = token_bytes * 1 * eng._blocks_per_slot * ps
+        assert m.prefill_gather_bytes == pytest.approx(gather)
         tick_read = token_bytes * (16 + 1)           # decode part of the tick
-        assert m.kv_bytes == pytest.approx(token_bytes * (12 + 4)
+        assert m.kv_bytes == pytest.approx(gather + token_bytes * 4
                                            + tick_read)
 
         # the accountant surfaces the saved DRAM joules + hit rate
