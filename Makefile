@@ -13,14 +13,17 @@ bench:
 # host-loop reference), BENCH_quant.json (bf16 vs int8 fast path),
 # BENCH_serve_paged.json (dense vs paged+prefix-cache on shared prefixes),
 # BENCH_serve_spec.json (plain paged vs speculative multi-token decode),
-# and BENCH_serve_longctx.json (paged flash-prefill kernel: fragmented vs
-# contiguous layouts vs the chunked whole-table-gather baseline)
+# BENCH_serve_longctx.json (paged flash-prefill kernel: fragmented vs
+# contiguous layouts vs the chunked whole-table-gather baseline), and
+# BENCH_serve_faults.json (chaos tier: one seeded fault arm per kind vs
+# the fault-free baseline, DESIGN.md §17)
 bench-serve:
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --quant int8
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --paged
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --paged --spec-k 4
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --paged --long-context
+	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --chaos
 
 # training fast path (DESIGN.md §13): fused TrainEngine tick vs the
 # host-loop autodiff-through-reference Trainer -> BENCH_train.json

@@ -25,6 +25,12 @@ Four modes on the SAME model and backend:
   modeled J/accepted-token — plus the stream-identity check against the
   dense greedy engine (rejection sampling must preserve it exactly).
   Emits ``BENCH_serve_spec.json``.
+* ``--chaos`` — the chaos tier (DESIGN.md §17): one seeded fault arm per
+  kind (plus a deadline-shed arm) against the fault-free baseline on the
+  same workload. Gates on the resilience invariant: every arm drains in
+  budget with zero crashes, every non-shed stream token-identical to the
+  baseline, and quarantine recovery billed as nonzero joules. Emits
+  ``BENCH_serve_faults.json``.
 * ``--paged --long-context`` — the long-context tier (DESIGN.md §16) on a
   fragmented-RAG workload (distinct long documents, chunked prefill):
   the paged flash-prefill kernel on a contiguous vs. a maximally
@@ -35,7 +41,7 @@ Four modes on the SAME model and backend:
   gather baseline. Emits ``BENCH_serve_longctx.json``.
 
     PYTHONPATH=src python benchmarks/serve_bench.py \
-        [--quant int8|--paged [--spec-k K|--long-context]]
+        [--quant int8|--paged [--spec-k K|--long-context]|--chaos] [--seed N]
 """
 
 from __future__ import annotations
@@ -57,6 +63,14 @@ OUT_SPEC_PATH = os.path.join(os.path.dirname(__file__), "..",
                              "BENCH_serve_spec.json")
 OUT_LONGCTX_PATH = os.path.join(os.path.dirname(__file__), "..",
                                 "BENCH_serve_longctx.json")
+OUT_FAULTS_PATH = os.path.join(os.path.dirname(__file__), "..",
+                               "BENCH_serve_faults.json")
+
+# ONE explicit seed feeds every stochastic input of the bench — workload
+# prompt draws AND the engines' sampling streams (ServeConfig.seed). Same
+# --seed, same tokens, byte-identical BENCH json; the chaos arms depend on
+# this to diff fault runs against the fault-free baseline.
+SEED = 0
 
 N_REQUESTS = 12
 MAX_TOKENS = 16
@@ -89,8 +103,8 @@ def _model():
     return cfg, params
 
 
-def _workload(eng):
-    rng = np.random.default_rng(0)
+def _workload(eng, seed=None):
+    rng = np.random.default_rng(SEED if seed is None else seed)
     for _ in range(N_REQUESTS):
         prompt = rng.integers(0, 100, size=int(rng.integers(4, 12)))
         eng.submit(prompt, max_tokens=MAX_TOKENS)
@@ -127,13 +141,14 @@ def bench() -> dict:
 
     def fused(acct):
         return ServeEngine(params, cfg,
-                           ServeConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN),
+                           ServeConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                                       seed=SEED),
                            accountant=acct)
 
     def reference(acct):
         return ReferenceEngine(params, cfg,
                                ServeConfig(max_slots=MAX_SLOTS,
-                                           max_len=MAX_LEN),
+                                           max_len=MAX_LEN, seed=SEED),
                                accountant=acct)
 
     res = {
@@ -170,7 +185,8 @@ def bench_quant() -> dict:
             arm_params, cache_dtype = params, jnp.float32
         eng = ServeEngine(arm_params, cfg,
                           ServeConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN,
-                                      cache_dtype=cache_dtype, quant=quant))
+                                      cache_dtype=cache_dtype, quant=quant,
+                                      seed=SEED))
         _workload(eng)
         eng.run_until_drained()              # warm: compile tick + buckets
         acct = accounting.CarbonAccountant(accounting.AccountantConfig(
@@ -193,7 +209,7 @@ def bench_quant() -> dict:
                 "kv_cache_bytes": eng.kv_cache_bytes,
                 "weight_bytes": eng.weight_bytes}
 
-    rng = np.random.default_rng(1)
+    rng = np.random.default_rng(SEED + 1)
     prompts = rng.integers(0, 100, size=(25, 8))
     agreement = token_agreement(params, cfg, prompts, n_tokens=24)
     res = {
@@ -221,7 +237,7 @@ def bench_quant() -> dict:
 def _shared_prefix_prompts(prefix_len=24, tail_len=6):
     """One shared system prompt + distinct per-request tails — the
     serving pattern where prefix caching pays (DESIGN.md §14)."""
-    rng = np.random.default_rng(7)
+    rng = np.random.default_rng(SEED + 7)
     sys_prompt = rng.integers(0, 100, size=prefix_len)
     return [np.concatenate([sys_prompt, rng.integers(0, 100, size=tail_len)])
             for _ in range(N_REQUESTS)]
@@ -237,9 +253,10 @@ def bench_paged(prefix_len=24, tail_len=6) -> dict:
 
     def arm(paged):
         scfg = (ServeConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN,
-                            paged=True, page_size=8)
+                            paged=True, page_size=8, seed=SEED)
                 if paged else
-                ServeConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN))
+                ServeConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                            seed=SEED))
         eng = ServeEngine(params, cfg, scfg)
         # warm: compile + prime the prefix cache (the steady state a
         # long-lived server serves from)
@@ -310,7 +327,7 @@ def bench_spec(spec_k=4, prefix_len=24, tail_len=6) -> dict:
 
     def arm(k):
         scfg = ServeConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN,
-                           paged=True, page_size=8, spec_k=k)
+                           paged=True, page_size=8, spec_k=k, seed=SEED)
         eng = ServeEngine(params, cfg, scfg)
         run_workload(eng, prompts, max_tokens=MAX_TOKENS)   # warm/compile
         acct = accounting.CarbonAccountant(accounting.AccountantConfig(
@@ -395,7 +412,7 @@ def bench_longctx() -> dict:
     from repro.serve import ServeConfig, ServeEngine, generation_agreement, \
         run_workload
     cfg, params = _model()
-    rng = np.random.default_rng(11)
+    rng = np.random.default_rng(SEED + 11)
     prompts = [rng.integers(0, 100, size=int(n))
                for n in rng.integers(100, 180, size=LC_REQUESTS)]
 
@@ -405,12 +422,12 @@ def bench_longctx() -> dict:
                            num_pages=LC_NUM_PAGES,
                            prefill_chunk=LC_CHUNK, prefix_cache=False,
                            decode_kernel=kernel,
-                           compact_threshold=compact)
+                           compact_threshold=compact, seed=SEED)
         eng = ServeEngine(params, cfg, scfg)
         run_workload(eng, prompts, max_tokens=LC_MAX_TOKENS)   # warm/compile
         # deterministic page layout for the measured pass: ascending run
         # (pool pops from the list tail) or seeded max-fragmentation
-        rs = np.random.default_rng(13)
+        rs = np.random.default_rng(SEED + 13)
         free = sorted(eng.pool._free)
         eng.pool._free = (list(rs.permutation(free)) if frag
                           else sorted(free, reverse=True))
@@ -485,6 +502,96 @@ def bench_longctx() -> dict:
     return res
 
 
+def bench_chaos() -> dict:
+    """Chaos tier (DESIGN.md §17): one arm per fault kind against the
+    fault-free baseline on the SAME seeded workload, plus a deadline-shed
+    arm. The gate is the resilience invariant itself:
+
+    * every arm drains within a bounded tick budget (no crash, no
+      admission livelock);
+    * every non-shed request's token stream is IDENTICAL to the
+      fault-free baseline — detection + quarantine re-decode must be
+      invisible in content, visible only in the energy bill;
+    * arms that quarantined bill recovery_j > 0 (the J/token cost of
+      resilience is measured, not hand-waved).
+    """
+    from repro.serve import (FAULT_KINDS, FaultPlan, ServeConfig,
+                             ServeEngine, generation_agreement, run_workload)
+    cfg, params = _model()
+    rng = np.random.default_rng(SEED + 3)
+    prompts = [rng.integers(0, 100, size=int(rng.integers(6, 14)))
+               for _ in range(N_REQUESTS)]
+
+    def arm(plan, deadline=None):
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_slots=MAX_SLOTS, max_len=MAX_LEN, paged=True, page_size=8,
+            seed=SEED, faults=plan))
+        if deadline is None:
+            gens = run_workload(eng, prompts, max_tokens=MAX_TOKENS,
+                                max_ticks=800)
+        else:
+            for p in prompts:
+                eng.submit(np.asarray(p, np.int32), max_tokens=MAX_TOKENS,
+                           deadline_ticks=deadline)
+            done = eng.run_until_drained(max_ticks=800)
+            gens = {r.uid: list(r.generated) for r in done}
+        return eng.summary(), gens
+
+    base_s, base_g = arm(None)
+    arms = {}
+    for kind in FAULT_KINDS:
+        plan = FaultPlan.single(kind, tick=3, seed=SEED + 17)
+        s, gens = arm(plan)
+        agree = generation_agreement(gens, base_g)
+        arms[kind] = {
+            "faults_injected": s["faults_injected"],
+            "quarantined": s["quarantined"],
+            "shed": s["shed"],
+            "recovery_tokens": s["recovery_tokens"],
+            "recovery_j": s["recovery_j"],
+            "recovery_j_per_token": s["recovery_j_per_token"],
+            "degraded_ticks": s["degraded_ticks"],
+            "readback_retries": s["readback_retries"],
+            "ticks": s["ticks"],
+            "streams_identical": bool(agree["identical"]),
+        }
+        assert s["faults_injected"] > 0, kind
+        assert agree["identical"], (kind, "stream diverged from baseline")
+        if s["quarantined"] > 0:
+            assert s["recovery_j"] > 0.0, kind
+    # deadline arm: a 1-tick deadline under a 12-deep queue on 4 slots
+    # MUST shed the overdue tail — and still complete every request
+    # (shed requests finish with whatever they have, never vanish)
+    dl_s, dl_g = arm(None, deadline=1)
+    assert len(dl_g) == N_REQUESTS
+    arms["deadline_shed"] = {"shed": dl_s["shed"],
+                             "shed_rate": dl_s["shed_rate"],
+                             "ticks": dl_s["ticks"],
+                             "completed": len(dl_g)}
+    assert dl_s["shed"] > 0
+    res = {
+        "workload": {"requests": N_REQUESTS, "max_tokens": MAX_TOKENS,
+                     "slots": MAX_SLOTS, "page_size": 8, "seed": SEED,
+                     "fault_tick": 3,
+                     "backend": jax.default_backend()},
+        "notes": ("one seeded fault per arm at tick 3 vs. the fault-free "
+                  "baseline on the same workload. streams_identical means "
+                  "every request's tokens match the baseline exactly — "
+                  "faults cost joules (recovery_j), never content. "
+                  "deadline_shed arms a 1-tick deadline to exercise the "
+                  "shedding rung."),
+        "baseline": {"ticks": base_s["ticks"],
+                     "decode_tokens": base_s["decode_tokens"]},
+        "arms": arms,
+        "zero_crashes": True,
+        "all_streams_identical": all(
+            a.get("streams_identical", True) for a in arms.values()),
+    }
+    with open(OUT_FAULTS_PATH, "w") as f:
+        json.dump(res, f, indent=2)
+    return res
+
+
 def run():
     """benchmarks/run.py hook: name,us_per_call,derived rows."""
     res = bench()
@@ -520,8 +627,27 @@ if __name__ == "__main__":
                          "contiguous layouts vs the chunked-gather "
                          "baseline, DESIGN.md §16) into "
                          "BENCH_serve_longctx.json")
+    ap.add_argument("--chaos", action="store_true",
+                    help="chaos tier (DESIGN.md §17): one seeded fault "
+                         "arm per kind vs the fault-free baseline, gating "
+                         "on stream identity + bounded drain, into "
+                         "BENCH_serve_faults.json")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="one seed for ALL stochastic bench inputs: "
+                         "workload prompt draws and engine sampling "
+                         "streams (same seed => identical runs)")
     args = ap.parse_args()
-    if args.paged and args.long_context:
+    SEED = args.seed
+    if args.chaos:
+        out = bench_chaos()
+        print(json.dumps(out, indent=2))
+        print(f"\nwrote {os.path.abspath(OUT_FAULTS_PATH)}")
+        n_q = sum(a.get("quarantined", 0) for a in out["arms"].values())
+        print(f"chaos: {len(out['arms'])} arms, zero crashes, streams "
+              f"identical: {out['all_streams_identical']}; "
+              f"{n_q} quarantines, deadline arm shed "
+              f"{out['arms']['deadline_shed']['shed']}")
+    elif args.paged and args.long_context:
         out = bench_longctx()
         print(json.dumps(out, indent=2))
         print(f"\nwrote {os.path.abspath(OUT_LONGCTX_PATH)}")

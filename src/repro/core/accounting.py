@@ -75,6 +75,17 @@ class CarbonAccountant:
         self._draft_bytes = 0.0
         self._verify_flops = 0.0
         self._verify_bytes = 0.0
+        # resilience ledger (DESIGN.md §17): the energy cost of *recovery*
+        # — re-prefilling quarantined slots' context after a fault — bills
+        # first-class next to prefill and gather traffic ("On the
+        # Sustainability of AI Inferences in the Edge", PAPERS.md), plus
+        # the degradation counters (shed requests never produced tokens
+        # but still consumed admission work)
+        self._recovery_tokens = 0.0
+        self._recovery_flops = 0.0
+        self._recovery_bytes = 0.0
+        self._quarantined = 0.0
+        self._shed = 0.0
         # training-phase ledgers (DESIGN.md §13): forward and backward bill
         # separately — the per-phase split the edge-training literature
         # (DeepEn2023, Sobhani et al.) calls for
@@ -135,6 +146,14 @@ class CarbonAccountant:
                 getattr(metrics, "verify_flops", 0.0))
             self._verify_bytes += float(
                 getattr(metrics, "verify_bytes", 0.0))
+            self._recovery_tokens += float(
+                getattr(metrics, "recovery_tokens", 0.0))
+            self._recovery_flops += float(
+                getattr(metrics, "recovery_flops", 0.0))
+            self._recovery_bytes += float(
+                getattr(metrics, "recovery_bytes", 0.0))
+            self._quarantined += float(getattr(metrics, "quarantined", 0.0))
+            self._shed += float(getattr(metrics, "shed", 0.0))
 
     def observe_train(self, metrics) -> None:
         """Bill one train-engine tick (train.TrainStepMetrics-shaped).
@@ -300,6 +319,20 @@ class CarbonAccountant:
             "prefill_gather_dram_j": energy.dram_energy_j(
                 self._prefill_gather_bytes),
             "compaction_moves": self._compaction_moves,
+            # resilience tier (DESIGN.md §17): what recovery — the
+            # re-prefill of quarantined slots' context — cost in modeled
+            # energy, and the degradation counters. Ratios degrade to
+            # 0.0 on fault-free runs (never NaN/raise).
+            "quarantined": self._quarantined,
+            "shed": self._shed,
+            "recovery_tokens": self._recovery_tokens,
+            "recovery_j": (energy.compute_energy_j(self._recovery_flops,
+                                                   self._spec)
+                           + energy.dram_energy_j(self._recovery_bytes)),
+            "recovery_j_per_token": (
+                (energy.compute_energy_j(self._recovery_flops, self._spec)
+                 + energy.dram_energy_j(self._recovery_bytes))
+                / self._tokens if self._tokens > 0 else 0.0),
             "modeled_dram_j": self.modeled_dram_j,
             "modeled_compute_j": self.modeled_compute_j,
             "modeled_j_per_token": (modeled_j / self._tokens

@@ -16,7 +16,38 @@ import numpy as np
 from repro.configs import base as cfgbase
 from repro.core import accounting
 from repro.models import transformer as tf_lib
-from repro.serve import (Scheduler, SchedulerConfig, ServeConfig, ServeEngine)
+from repro.serve import (FAULT_KINDS, FaultPlan, Scheduler, SchedulerConfig,
+                         ServeConfig, ServeEngine)
+
+
+def validate_args(ap: argparse.ArgumentParser,
+                  args: argparse.Namespace) -> None:
+    """Reject nonsensical flag combinations with actionable messages BEFORE
+    any device work — the engine would also raise, but deep in __init__
+    with a traceback instead of a usage line (DESIGN.md §17 satellite)."""
+    if args.spec_k < 0:
+        ap.error(f"--spec-k must be >= 0, got {args.spec_k}")
+    if args.page_size <= 0:
+        ap.error(f"--page-size must be > 0, got {args.page_size}")
+    if args.prefill_chunk < 0:
+        ap.error(f"--prefill-chunk must be >= 0, got {args.prefill_chunk}")
+    if (args.paged and args.prefill_chunk > 0
+            and args.prefill_chunk % args.page_size != 0):
+        ap.error(f"--prefill-chunk ({args.prefill_chunk}) must be a "
+                 f"multiple of --page-size ({args.page_size}) in paged "
+                 f"mode: chunk boundaries must land on page boundaries")
+    if not (0.0 <= args.compact_threshold <= 1.0):
+        ap.error(f"--compact-threshold must be in [0, 1], got "
+                 f"{args.compact_threshold}")
+    if args.num_pages is not None and args.num_pages <= 0:
+        ap.error(f"--num-pages must be > 0, got {args.num_pages}")
+    if args.spec_k > 0 and not args.paged:
+        ap.error("--spec-k requires --paged (speculative decode runs on "
+                 "the paged path only)")
+    if args.fault_kind is not None and args.fault_tick < 0:
+        ap.error(f"--fault-tick must be >= 0, got {args.fault_tick}")
+    if args.deadline_ticks is not None and args.deadline_ticks <= 0:
+        ap.error(f"--deadline-ticks must be > 0, got {args.deadline_ticks}")
 
 
 def main() -> None:
@@ -64,7 +95,19 @@ def main() -> None:
                          "recently-parked block; cost evicts the cheapest-"
                          "to-recompute block first (recompute FLOPs per "
                          "byte, DESIGN.md §16)")
+    ap.add_argument("--fault-kind", default=None, choices=FAULT_KINDS,
+                    help="chaos tier (DESIGN.md §17): inject one seeded "
+                         "fault of this kind and exercise the degradation "
+                         "ladder (default: no injection)")
+    ap.add_argument("--fault-tick", type=int, default=2,
+                    help="engine tick at which the fault fires")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the fault payload (reproducible chaos)")
+    ap.add_argument("--deadline-ticks", type=int, default=None,
+                    help="per-request deadline in ticks; overdue queued "
+                         "requests are shed, not served late")
     args = ap.parse_args()
+    validate_args(ap, args)
 
     if not args.smoke:
         raise SystemExit("full-scale serving needs a TPU fleet; use --smoke "
@@ -89,13 +132,18 @@ def main() -> None:
                                   spec_k=args.spec_k,
                                   spec_drafter=args.spec_drafter,
                                   compact_threshold=args.compact_threshold,
-                                  evict_policy=args.evict_policy),
+                                  evict_policy=args.evict_policy,
+                                  faults=(FaultPlan.single(
+                                      args.fault_kind, tick=args.fault_tick,
+                                      seed=args.fault_seed)
+                                      if args.fault_kind else None)),
                       accountant=acct,
                       scheduler=Scheduler(SchedulerConfig(policy=args.policy)))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=rng.integers(4, 12))
-        eng.submit(prompt, max_tokens=args.max_tokens)
+        eng.submit(prompt, max_tokens=args.max_tokens,
+                   deadline_ticks=args.deadline_ticks)
     done = eng.run_until_drained()
     for r in done:
         print(f"req {r.uid}: prompt_len={len(r.prompt)} -> {r.generated}")
@@ -119,6 +167,12 @@ def main() -> None:
         print(f"long-context: {rep['prefill_gather_bytes']:.3g} prefill "
               f"gather bytes = {rep['prefill_gather_dram_j']:.3e} J DRAM, "
               f"{rep['compaction_moves']:.0f} pages compacted")
+    if args.fault_kind is not None:
+        print(f"chaos ({args.fault_kind}@{args.fault_tick}): "
+              f"{s['faults_injected']} injected, {s['quarantined']} "
+              f"quarantined, {s['shed']} shed, recovery "
+              f"{s['recovery_j']:.3e} J ({s['recovery_tokens']} toks), "
+              f"{s['degraded_ticks']} degraded ticks")
     if args.spec_k > 0:
         print(f"speculative decode (k={args.spec_k}, "
               f"{args.spec_drafter}): {s['accept_rate']:.1%} accept rate, "

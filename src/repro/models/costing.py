@@ -111,6 +111,20 @@ def block_recompute_flops(matmul_elems: float, n_attn: int, attn_dims: int,
     return 2.0 * matmul_elems * n + 4.0 * n_attn * attn_dims * attn_keys
 
 
+def prefill_span_flops(matmul_elems: float, n_attn: int, attn_dims: int,
+                       start: float, n_tok: float) -> float:
+    """Modeled FLOPs of ONE prefill row's chunk ``[start, start + n_tok)``:
+    each token streams the matmul weights once, causal attention over the
+    span sums to the ``end^2 - start^2`` form the engine's aggregate
+    admission bill already uses — this is the same formula factored
+    per-row, so the chaos tier can bill a quarantined slot's re-prefill
+    (its *recovery* energy, DESIGN.md §17) with exactly the admission
+    path's arithmetic."""
+    end = float(start) + float(n_tok)
+    return (2.0 * matmul_elems * float(n_tok)
+            + 2.0 * n_attn * attn_dims * (end * end - float(start) ** 2))
+
+
 def spec_verify_flops(matmul_elems: float, n_attn: int, attn_dims: int,
                       ctx_sum: float, n_active: int, width: int) -> float:
     """Modeled FLOPs of one speculative verification pass (DESIGN.md §15):

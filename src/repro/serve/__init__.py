@@ -2,6 +2,8 @@
 
 from repro.serve.engine import (Request, ServeConfig, ServeEngine,  # noqa: F401
                                 StepMetrics)
+from repro.serve.faults import (FAULT_KINDS, FaultEvent,  # noqa: F401
+                                FaultInjector, FaultPlan, GuardrailConfig)
 from repro.serve.pages import (PagePool, block_tokens,  # noqa: F401
                                fragmentation)
 from repro.serve.quality import (generation_agreement,  # noqa: F401

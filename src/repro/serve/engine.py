@@ -31,11 +31,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import accounting
+from repro.core import accounting, energy
 from repro.models import transformer as tf_lib
 from repro.serve import spec as spec_lib
+from repro.serve.faults import (FaultInjector, FaultPlan, GuardrailConfig,
+                                corrupt_kv_page)
 from repro.serve.pages import ROOT, PagePool, block_tokens, fragmentation
 from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.train.ft import Ewma
 
 PyTree = Any
 
@@ -88,6 +91,14 @@ class ServeConfig:
     # park reclamation: "lru" | "cost" (evict the cheapest-to-recompute
     # cached block first, scored by costing.block_recompute_flops per byte)
     evict_policy: str = "lru"
+    # chaos tier (DESIGN.md §17): a seeded fault schedule to replay
+    # against this engine (None = no injection), and the guardrail knobs
+    # that arm detection/degradation rungs. All-default guard keeps the
+    # pre-chaos behavior exactly; the numerics sentinel is always on (it
+    # rides the existing packed readback for free).
+    faults: Optional[FaultPlan] = None
+    guard: GuardrailConfig = dataclasses.field(
+        default_factory=GuardrailConfig)
 
 
 @dataclasses.dataclass
@@ -98,6 +109,12 @@ class Request:
     temperature: Optional[float] = None   # None -> ServeConfig.temperature
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # per-request deadline (DESIGN.md §17): shed from the queue once
+    # ``deadline_ticks`` engine ticks have passed since ``submit_tick``
+    # without admission (None = wait forever). The engine stamps
+    # ``submit_tick``; it also feeds the scheduler's queue-aging term.
+    deadline_ticks: Optional[int] = None
+    submit_tick: int = -1
 
 
 @dataclasses.dataclass
@@ -142,6 +159,20 @@ class StepMetrics:
     # channel the paged prefill kernel exists to bound.
     prefill_gather_bytes: float = 0.0
     compaction_moves: int = 0       # pages relocated by compaction this tick
+    # resilience tier (DESIGN.md §17): what the chaos layer did to this
+    # tick and what recovery cost. ``recovery_*`` bill the re-prefill of
+    # quarantined slots' context — energy the fault-free run never spends,
+    # reported first-class ("On the Sustainability of AI Inferences in
+    # the Edge", PAPERS.md). ``degraded`` marks a tick served under any
+    # active ladder rung (reduced spec-k, fp fallback, compaction pause).
+    faults_injected: int = 0
+    quarantined: int = 0            # slots torn down by the sentinel
+    shed: int = 0                   # requests deadline-/retry-shed
+    recovery_tokens: int = 0        # prompt tokens re-prefilled for recovery
+    recovery_flops: float = 0.0
+    recovery_bytes: float = 0.0
+    degraded: int = 0               # 1 if any degradation rung was active
+    readback_retries: int = 0       # re-reads of a garbled/dropped readback
 
     @property
     def bytes_moved(self) -> float:
@@ -160,6 +191,11 @@ class _AdmitInfo:
     saved_bytes: float = 0.0
     saved_flops: float = 0.0
     gather_bytes: float = 0.0   # cached-window gather share of kv_bytes
+    # recovery share of the above (DESIGN.md §17): rows re-prefilling a
+    # quarantined slot's context bill their exact per-row cost here too
+    recovery_tokens: int = 0
+    recovery_flops: float = 0.0
+    recovery_bytes: float = 0.0
 
 
 @dataclasses.dataclass
@@ -244,19 +280,87 @@ class ServeEngine:
         if serve_cfg.spec_drafter not in spec_lib.DRAFTERS:
             raise ValueError(f"unknown drafter {serve_cfg.spec_drafter!r}; "
                              f"expected one of {spec_lib.DRAFTERS}")
+        if (serve_cfg.paged and serve_cfg.prefill_chunk
+                and serve_cfg.prefill_chunk % serve_cfg.page_size != 0):
+            raise ValueError(
+                f"prefill_chunk ({serve_cfg.prefill_chunk}) must be a "
+                f"multiple of page_size ({serve_cfg.page_size}): a chunk "
+                f"boundary inside a page would split block publication")
+        if not 0.0 <= serve_cfg.compact_threshold <= 1.0:
+            raise ValueError(f"compact_threshold must be in [0, 1], got "
+                             f"{serve_cfg.compact_threshold}")
+        self.scfg = serve_cfg
+        self.guard = serve_cfg.guard
+        self.accountant = accountant
+        self.scheduler = scheduler or Scheduler(SchedulerConfig())
+        self._base_key = jax.random.PRNGKey(serve_cfg.seed)
+        self._use_kernel = bool(use_kernel)
+        # the fp oracle pair (pre-quantization params + config): the
+        # quarantine re-decode path and the int8->fp fallback rung both
+        # rebuild from it (DESIGN.md §17)
+        self._oracle = (params, dataclasses.replace(
+            cfg, decode_kernel=self._use_kernel))
         if serve_cfg.quant == "int8":
             # quantized fast path: int8 weight tree + int8 KV cache; the
             # already-quantized case (caller ran quantize_lm) passes through
             cfg = dataclasses.replace(cfg, quant=tf_lib.INT8_QUANT)
             params = tf_lib.quantize_lm(params)
+        # host mirrors that survive a runtime rebuild
+        self._uid = 0
+        self._fit_checked: set = set()
+        # instrumentation (tests assert the tick stays fused: one trace,
+        # one host readback per tick; admission compiles once per length
+        # bucket). Cumulative across fp-fallback rebuilds.
+        self.tick_trace_count = 0
+        self.host_readbacks = 0
+        self.admit_trace_counts: Dict[int, int] = {}
+        self.compact_trace_count = 0
+        self.last_metrics: Optional[StepMetrics] = None
+        self.metrics_log: List[StepMetrics] = []
+        # chaos tier state (DESIGN.md §17)
+        self._injector = (FaultInjector(serve_cfg.faults)
+                          if serve_cfg.faults is not None else None)
+        self._tick_idx = 0
+        self._cur_spec_k = serve_cfg.spec_k
+        self._fell_back = False
+        self._recovery: Dict[int, Dict[str, Any]] = {}
+        self._recovering: set = set()
+        self._pending_shed: List[Request] = []
+        self._defer_counts: Dict[int, int] = {}
+        self._retry_after: Dict[int, int] = {}
+        self._spike_holds: List[Tuple[int, List[int]]] = []
+        self._tick_wall_ewma = Ewma(alpha=self.guard.ewma_alpha)
+        self._accept_ewma = Ewma(alpha=self.guard.ewma_alpha)
+        self._drift_ewma = Ewma(alpha=self.guard.ewma_alpha)
+        self._compact_pause_until = 0
+        self._drift_rr = 0
+        self._tick_shed = 0
+        self._tick_quarantined = 0
+        self._rb_retries_tick = 0
+        self.n_quarantined = 0
+        self.n_shed = 0
+        self.n_finished_ok = 0
+        self.spec_backoffs = 0
+        self.fp_fallbacks = 0
+        self.compaction_pauses = 0
+        self.audit_failures = 0
+        self.audit_log: List[str] = []
+        self.readback_retries_total = 0
+        self._init_runtime(params, cfg)
+
+    def _init_runtime(self, params: PyTree, cfg: tf_lib.LMConfig) -> None:
+        """(Re)build every device-resident and device-coupled structure:
+        pool, caches, slot state, cost-model scalars, compiled tick/admit
+        executables. Called once from ``__init__`` and again by the
+        int8->fp fallback rung (DESIGN.md §17), which swaps in the fp
+        oracle params after capturing all live slots as continuations —
+        queue, accounting, and instrumentation counters survive."""
+        serve_cfg = self.scfg
         self.params = params
-        self.cfg = dataclasses.replace(cfg, decode_kernel=bool(use_kernel))
-        self.scfg = serve_cfg
-        self.accountant = accountant
-        self.scheduler = scheduler or Scheduler(SchedulerConfig())
+        self.cfg = dataclasses.replace(cfg, decode_kernel=self._use_kernel)
+        cfg = self.cfg
         b, cap = serve_cfg.max_slots, serve_cfg.max_len
-        base_key = jax.random.PRNGKey(serve_cfg.seed)
-        self._base_key = base_key
+        base_key = self._base_key
         if serve_cfg.paged:
             # paged KV subsystem (DESIGN.md §14): a shared block pool
             # replaces the per-slot dense cache; serve/pages.py owns
@@ -304,28 +408,23 @@ class ServeEngine:
         # no per-slot device transfers needed)
         self.slot_req: List[Optional[Request]] = [None] * b
         self._host_gen = [0] * b
-        self._uid = 0
         # paged host mirrors: pages owned per slot (released at finish) and
         # in-flight chunked prefills {slot: {"req", "next", "plen", ...}}
         self._slot_pages: List[List[int]] = [[] for _ in range(b)]
         self._prefilling: Dict[int, Dict[str, Any]] = {}
-        # uids already screened by the never-fittable admission guard
-        self._fit_checked: set = set()
+        # any injector page holds referenced the previous pool
+        self._spike_holds = []
+        # cached all-zero poison vector: the fault-free tick passes it by
+        # reference (no per-tick host->device churn)
+        self._zero_poison = jnp.zeros(b, jnp.float32)
         # padded prefill needs causal masking to localize each row; SSM
         # states integrate over padding, so SSD archs admit equal-length
         # groups instead
         self._pad_ok = all(
             sp.kind == "attn"
             for sp in tuple(cfg.pattern) + tuple(cfg.tail))
-        # instrumentation (tests assert the tick stays fused: one trace,
-        # one host readback per tick; admission compiles once per length
-        # bucket)
-        self.tick_trace_count = 0
-        self.host_readbacks = 0
-        self.admit_trace_counts: Dict[int, int] = {}
+        # per-bucket admission executables bind this runtime's impl
         self._admit_fns: Dict[int, Any] = {}
-        self.last_metrics: Optional[StepMetrics] = None
-        self.metrics_log: List[StepMetrics] = []
         # modeled per-tick traffic/compute (DESIGN.md §12): dtype-aware
         # bytes from the actual resident arrays — this is where the int8
         # path's 2-4x byte reduction becomes measurable
@@ -362,11 +461,36 @@ class ServeEngine:
         return (1,)
 
     def _build_tick(self):
+        """Build the tick executable cache. One executable per spec-k in
+        use: the spec-k backoff rung (DESIGN.md §17) steps k down (4 -> 2
+        -> 1) when acceptance collapses, and each k is its own trace.
+        Every tick takes a ``poison`` vector ((B,) float32, all zeros in
+        healthy runs — a traced argument, so injection never retraces)
+        and folds the numerics sentinel into the packed readback: a slot
+        whose logits go non-finite commits NOTHING that tick (no token,
+        no advance, no cache-visible progress beyond an idempotent KV
+        write) and self-deactivates, so the host can quarantine it
+        without any rewind arithmetic. Plain tick readback: (2, B) int32
+        ``[done, bad]``; spec tick: (3, B) ``[done, emitted, bad]`` —
+        still ONE host readback per tick."""
+        self._tick_fns: Dict[int, Any] = {}
+        self._tick = self._tick_for(self._cur_spec_k)
+
+    def _tick_for(self, k: int):
+        fn = self._tick_fns.get(k)
+        if fn is None:
+            fn = jax.jit(self._make_tick_impl(k),
+                         donate_argnums=self._donate())
+            self._tick_fns[k] = fn
+        return fn
+
+    def _make_tick_impl(self, spec_k: int):
         cfg, scfg = self.cfg, self.scfg
         eos_id, max_len = scfg.eos_id, scfg.max_len
         paged = scfg.paged
 
-        def tick(params, st: DeviceState) -> Tuple[DeviceState, jnp.ndarray]:
+        def tick(params, st: DeviceState, poison
+                 ) -> Tuple[DeviceState, jnp.ndarray]:
             self.tick_trace_count += 1      # python side effect: trace count
             b = st.tok.shape[0]
             if paged:
@@ -378,35 +502,44 @@ class ServeEngine:
             else:
                 logits1, caches = tf_lib.decode_step(
                     params, cfg, st.tok[:, None], st.pos, st.caches)
-            logits = logits1[:, 0]                          # (B, V) fp32
+            logits = logits1[:, 0] + poison[:, None]        # (B, V) fp32
+            # numerics sentinel: a non-finite logit row means this slot's
+            # output can't be trusted — it makes NO progress this tick
+            # (the KV write for st.tok is value-clean and idempotent: the
+            # un-advanced pos means a healthy retry rewrites it) and
+            # deactivates itself for the host to quarantine
+            bad = st.active & ~jnp.all(jnp.isfinite(logits), axis=-1)
+            ok = st.active & ~bad
             tok_new, rng_new = _sample(logits, st.rng, st.temp)
-            tok_new = jnp.where(st.active, tok_new, st.tok)
+            tok_new = jnp.where(ok, tok_new, st.tok)
+            rng_new = jnp.where(ok[:, None], rng_new, st.rng)
             rows = jnp.arange(b)
             widx = jnp.clip(st.gen, 0, st.out_buf.shape[1] - 1)
             out_buf = st.out_buf.at[rows, widx].set(
-                jnp.where(st.active, tok_new, st.out_buf[rows, widx]))
-            gen_new = st.gen + st.active
-            pos_new = st.pos + st.active
+                jnp.where(ok, tok_new, st.out_buf[rows, widx]))
+            gen_new = st.gen + ok
+            pos_new = st.pos + ok
             hit_eos = ((tok_new == eos_id) if eos_id >= 0
                        else jnp.zeros_like(st.active))
-            done = st.active & (hit_eos | (gen_new >= st.budget)
-                                | (pos_new >= max_len - 1))
+            done = ok & (hit_eos | (gen_new >= st.budget)
+                         | (pos_new >= max_len - 1))
             new_st = DeviceState(
                 caches=caches, tok=tok_new, pos=pos_new, gen=gen_new,
-                budget=st.budget, active=st.active & ~done, temp=st.temp,
-                rng=rng_new, out_buf=out_buf, page_table=st.page_table,
-                hist=st.hist)
-            return new_st, done
+                budget=st.budget, active=st.active & ~done & ~bad,
+                temp=st.temp, rng=rng_new, out_buf=out_buf,
+                page_table=st.page_table, hist=st.hist)
+            packed = jnp.stack([done, bad]).astype(jnp.int32)
+            return new_st, packed
 
-        def spec_tick(params, st: DeviceState
+        def spec_tick(params, st: DeviceState, poison
                       ) -> Tuple[DeviceState, jnp.ndarray]:
             """Speculative tick (DESIGN.md §15): draft k, verify all k in
             one multi-query pass, commit the accepted prefix + one
-            correction/bonus token. Returns (state, (2, B) int32 packed
-            [done, emitted]) — still ONE host readback per tick."""
+            correction/bonus token. Returns (state, (3, B) int32 packed
+            [done, emitted, bad]) — still ONE host readback per tick."""
             self.tick_trace_count += 1
             b = st.tok.shape[0]
-            k = scfg.spec_k
+            k = spec_k
             active = st.active
             caches = st.caches
             if scfg.spec_drafter == "oracle":
@@ -430,8 +563,15 @@ class ServeEngine:
             logits, caches = tf_lib.paged_verify_step(
                 params, cfg, chunk, st.pos, st.page_table, caches,
                 active=active)                              # (B, K+1, V)
+            logits = logits + poison[:, None, None]
+            # numerics sentinel over the whole verify block: NaN anywhere
+            # in a slot's q-block (poison, or NaN KV attended through the
+            # page table) voids ALL of its lanes this tick
+            bad = active & ~jnp.all(jnp.isfinite(logits), axis=(1, 2))
+            ok = active & ~bad
             n_acc, fix_tok, rng_new = spec_lib.speculative_accept(
                 logits, drafts, st.rng, st.temp)
+            rng_new = jnp.where(ok[:, None], rng_new, st.rng)
             # emission clamps: never exceed the token budget or the context
             # cap — exactly where the plain tick would have stopped
             rem = jnp.minimum(st.budget - st.gen, max_len - 1 - st.pos)
@@ -447,7 +587,7 @@ class ServeEngine:
                                              k + 1), axis=1)
                 n_emit = jnp.minimum(n_emit, eos_lane + 1)
             lane = t_idx < n_emit[:, None]
-            valid = lane & active[:, None]
+            valid = lane & ok[:, None]
             rows2 = jnp.broadcast_to(jnp.arange(b)[:, None], (b, k + 1))
             cap = st.out_buf.shape[1]
             out_buf = st.out_buf.at[
@@ -457,26 +597,26 @@ class ServeEngine:
                 rows2, jnp.where(valid, st.pos[:, None] + 1 + t_idx,
                                  st.hist.shape[1])
             ].set(emitted, mode="drop")
-            n_step = jnp.where(active, n_emit, 0)
+            n_step = jnp.where(ok, n_emit, 0)
             last = jnp.take_along_axis(
                 emitted, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)[:, 0]
-            tok_new = jnp.where(active, last, st.tok)
+            tok_new = jnp.where(ok, last, st.tok)
             pos_new = st.pos + n_step
             gen_new = st.gen + n_step
             hit_eos = ((tok_new == eos_id) if eos_id >= 0
                        else jnp.zeros_like(active))
-            done = active & (hit_eos | (gen_new >= st.budget)
-                             | (pos_new >= max_len - 1))
+            done = ok & (hit_eos | (gen_new >= st.budget)
+                         | (pos_new >= max_len - 1))
             new_st = DeviceState(
                 caches=caches, tok=tok_new, pos=pos_new, gen=gen_new,
-                budget=st.budget, active=active & ~done, temp=st.temp,
-                rng=rng_new, out_buf=out_buf, page_table=st.page_table,
-                hist=hist)
-            packed = jnp.stack([done.astype(jnp.int32), n_step])
+                budget=st.budget, active=active & ~done & ~bad,
+                temp=st.temp, rng=rng_new, out_buf=out_buf,
+                page_table=st.page_table, hist=hist)
+            packed = jnp.stack([done.astype(jnp.int32), n_step,
+                                bad.astype(jnp.int32)])
             return new_st, packed
 
-        self._tick = jax.jit(spec_tick if scfg.spec_k > 0 else tick,
-                             donate_argnums=self._donate())
+        return spec_tick if spec_k > 0 else tick
 
     def _build_admit(self):
         """Admission executable body. Dense: pad-and-stack prefill + all-slot
@@ -620,11 +760,15 @@ class ServeEngine:
     # -- queue API ------------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_tokens: int = 16,
-               temperature: Optional[float] = None) -> int:
+               temperature: Optional[float] = None,
+               deadline_ticks: Optional[int] = None) -> int:
         prompt = np.asarray(prompt, np.int32)
         if prompt.size >= self.scfg.max_len:
             raise ValueError(f"prompt length {prompt.size} >= max_len "
                              f"{self.scfg.max_len}")
+        if deadline_ticks is not None and deadline_ticks <= 0:
+            raise ValueError(f"deadline_ticks must be > 0, got "
+                             f"{deadline_ticks}")
         if self.pool is not None:
             # a request whose worst-case page demand can never be met would
             # livelock admission (fits() false forever) — reject it here
@@ -637,7 +781,9 @@ class ServeEngine:
                     f"max_tokens")
         self._uid += 1
         self.scheduler.submit(Request(self._uid, prompt, max_tokens,
-                                      temperature))
+                                      temperature,
+                                      deadline_ticks=deadline_ticks,
+                                      submit_tick=self._tick_idx))
         return self._uid
 
     @property
@@ -652,13 +798,208 @@ class ServeEngine:
         self.host_readbacks += 1
         return np.asarray(x)
 
+    def _checked_readback(self, x, validate, tick: int) -> np.ndarray:
+        """Tick readback with transport-fault detection: the injector may
+        drop or garble the host copy, and a real edge deployment's DMA can
+        too. ``validate`` knows the packed layout's value domain; a failed
+        check re-reads the (unchanged, non-donated) device buffer up to
+        ``guard.readback_max_retries`` times before giving up loudly."""
+        attempt = 0
+        while True:
+            arr = self._readback(x)
+            if self._injector is not None:
+                arr = self._injector.filter_readback(arr, tick, attempt)
+            if arr is not None and validate(arr):
+                return arr
+            attempt += 1
+            if attempt > self.guard.readback_max_retries:
+                raise RuntimeError(
+                    f"tick {tick}: readback failed validation "
+                    f"{attempt} times")
+            self.readback_retries_total += 1
+            self._rb_retries_tick += 1
+
+    @staticmethod
+    def _validate_plain_packed(arr: np.ndarray) -> bool:
+        return (arr.ndim == 2 and arr.shape[0] == 2
+                and bool(np.isin(arr, (0, 1)).all()))
+
+    def _validate_spec_packed(self, arr: np.ndarray) -> bool:
+        if arr.ndim != 2 or arr.shape[0] != 3:
+            return False
+        flags_ok = bool(np.isin(arr[(0, 2), :], (0, 1)).all())
+        emit_ok = bool(((arr[1] >= 0)
+                        & (arr[1] <= self._cur_spec_k + 1)).all())
+        return flags_ok and emit_ok
+
+    # -- chaos tier: fault application + recovery (DESIGN.md §17) -------------
+
+    def _apply_host_faults(self, tick: int) -> None:
+        """Inject this tick's host-side fault events (device-side logit
+        poison rides the tick's poison argument instead). Runs before the
+        decode tick so the injected state is what the tick observes."""
+        inj = self._injector
+        # spike holds expire on schedule regardless of new events
+        keep = []
+        for expires, pages in self._spike_holds:
+            if tick >= expires and self.pool is not None:
+                self.pool.release_all(pages)
+            else:
+                keep.append((expires, pages))
+        self._spike_holds = keep
+        if inj is None:
+            return
+        stall = inj.stall_seconds(tick)
+        if stall > 0.0:
+            time.sleep(stall)
+        for ev in inj.events_for(tick):
+            if ev.kind == "pool_spike" and self.pool is not None:
+                n = min(int(ev.magnitude), self.pool.available)
+                if n > 0:
+                    held = self.pool.alloc(n)
+                    if held is not None:
+                        self._spike_holds.append(
+                            (tick + max(ev.duration, 1), held))
+                        inj.count("pool_spike")
+            elif ev.kind == "kv_bitflip" and self.scfg.paged:
+                self._inject_kv_bitflip(ev)
+
+    def _inject_kv_bitflip(self, ev) -> None:
+        """Corrupt one K page of a decoding slot — inside its attended
+        window, so the sentinel (not luck) must catch it. Restricted to
+        decoding slots: a mid-prefill slot's extend readback carries no
+        ``bad`` lane, and its poisoned logits would go unobserved."""
+        ps = self.scfg.page_size
+        victims = [i for i, r in enumerate(self.slot_req)
+                   if r is not None and i not in self._prefilling]
+        if ev.slot in victims:
+            victims = [ev.slot]
+        for slot in victims:
+            pages = self._slot_pages[slot]
+            req = self.slot_req[slot]
+            n_live = -(-(len(req.prompt) + self._host_gen[slot]) // ps)
+            lo = self.pool.movable_suffix(pages)
+            cand = [p for j, p in enumerate(pages)
+                    if lo <= j < n_live]
+            if not cand:
+                continue
+            self.state = dataclasses.replace(
+                self.state,
+                caches=corrupt_kv_page(self.state.caches, cand[0]))
+            self._injector.count("kv_bitflip")
+            return
+
+    def _scrub_slot_storage(self, slot: int) -> None:
+        """Zero the K/V storage a quarantined slot may have poisoned. A bad
+        tick writes its non-finite activations into the slot's PRIVATE
+        pages (every layer past the first NaN attention output projects
+        NaN K/V), and a NaN *V* entry leaks through masked attention —
+        softmax gives the masked position probability 0, but 0 * NaN is
+        NaN — so a freed-then-recycled page would poison its next owner.
+        Scrubbing on teardown restores the invariant the allocator relies
+        on: free storage is benign garbage (zeros), never NaN. Shared
+        prefix pages are immutable-clean by construction and are skipped;
+        this is a rare-path device call, not tick work."""
+        if self.pool is not None:
+            pages = self._slot_pages[slot]
+            lo = self.pool.movable_suffix(pages)
+            idx = pages[lo:]
+            if not idx:
+                return
+            sel = jnp.asarray(idx, jnp.int32)
+        else:
+            sel = jnp.asarray([slot], jnp.int32)
+        caches = {}
+        for name, entry in self.state.caches.items():
+            e2 = dict(entry)
+            for key in ("kv", "kv_scale"):
+                if key not in entry:
+                    continue
+                kv = entry[key]
+                # pattern pools stack the layer dim first; tails are flat.
+                # The dense layout (B where the paged pool has P) scrubs
+                # the slot's whole cache row with the same indexing.
+                ax = ((slice(None), sel) if name.startswith("pat")
+                      else (sel,))
+                e2[key] = dataclasses.replace(
+                    kv, k=kv.k.at[ax].set(0), v=kv.v.at[ax].set(0))
+            caches[name] = e2
+        self.state = dataclasses.replace(self.state, caches=caches)
+
+    def _capture_slot(self, slot: int) -> Request:
+        """Freeze a live slot into a continuation request carrying its
+        committed progress: prompt = original prompt + valid generated
+        tokens, budget = remaining tokens. The original prompt/budget park
+        in ``_recovery[uid]`` and are restored at finish, so the caller
+        sees one seamless stream. Re-prefilling the continuation IS the
+        fp32-oracle re-decode on fp engines (prefill == greedy decode
+        parity, DESIGN.md §14) — and its energy is billed as recovery."""
+        req = self.slot_req[slot]
+        g = self._host_gen[slot]
+        toks = ([int(t) for t in self._readback(self.state.out_buf[slot, :g])]
+                if g > 0 else [])
+        rec = self._recovery.setdefault(
+            req.uid, {"prompt": req.prompt, "max_tokens": req.max_tokens,
+                      "tokens": []})
+        rec["tokens"].extend(toks)
+        cont = Request(
+            req.uid,
+            np.concatenate([np.asarray(rec["prompt"], np.int32),
+                            np.asarray(rec["tokens"], np.int32)]),
+            max_tokens=max(rec["max_tokens"] - len(rec["tokens"]), 1),
+            temperature=req.temperature,
+            deadline_ticks=req.deadline_ticks,
+            submit_tick=self._tick_idx)
+        self._recovering.add(req.uid)
+        # teardown mirrors: the slot is free next tick (the device side
+        # already deactivated it, or the runtime is being rebuilt)
+        self.slot_req[slot] = None
+        self._host_gen[slot] = 0
+        self._prefilling.pop(slot, None)
+        self._scrub_slot_storage(slot)
+        if self.pool is not None and self._slot_pages[slot]:
+            # release WITHOUT publishing: pages of a faulted slot may hold
+            # corrupt KV; freeing them unkeyed means they are rewritten
+            # before any future lookup can hit them
+            self.pool.release_all(self._slot_pages[slot])
+            self._slot_pages[slot] = []
+        return cont
+
+    def _quarantine_slot(self, slot: int) -> None:
+        """Sentinel hit: tear the slot down and requeue its continuation
+        head-of-line. The slot made no progress on the bad tick, so the
+        continuation resumes exactly at the last committed token."""
+        cont = self._capture_slot(slot)
+        self.scheduler.requeue_front([cont])
+        self.n_quarantined += 1
+        self._tick_quarantined += 1
+
+    def _shed_request(self, req: Request, finished: List[Request]) -> None:
+        """Fail a request fast (deadline expiry / admission-retry
+        exhaustion): it completes with whatever tokens recovery already
+        banked — never silently vanishes."""
+        rec = self._recovery.pop(req.uid, None)
+        if rec is not None:
+            req.prompt = rec["prompt"]
+            req.max_tokens = rec["max_tokens"]
+            req.generated = list(rec["tokens"])
+        else:
+            req.generated = []
+        self._recovering.discard(req.uid)
+        self._defer_counts.pop(req.uid, None)
+        self._retry_after.pop(req.uid, None)
+        self._fit_checked.discard(req.uid)
+        req.done = True
+        finished.append(req)
+        self.n_shed += 1
+        self._tick_shed += 1
+
     def _finish_slot(self, slot: int, finished: List[Request]) -> None:
         req = self.slot_req[slot]
         n = self._host_gen[slot]
         toks = self._readback(self.state.out_buf[slot, :n])
         req.generated = [int(t) for t in toks]
         req.done = True
-        finished.append(req)
         self.slot_req[slot] = None
         self._host_gen[slot] = 0
         if self.pool is not None and self._slot_pages[slot]:
@@ -672,7 +1013,10 @@ class ServeEngine:
                 # last exactly-full block (grown during decode) was never
                 # reusable as a prefix. The cache holds positions
                 # [0, prompt + n - 1): the final generated token is the
-                # pending one whose K/V never landed.
+                # pending one whose K/V never landed. A recovering slot's
+                # "prompt" here is the continuation prompt (original +
+                # recovered tokens), which is exactly the stream content —
+                # publishing under it stays correct.
                 cached = np.concatenate(
                     [np.asarray(req.prompt, np.int64),
                      np.asarray(toks[:n - 1], np.int64)])
@@ -686,6 +1030,17 @@ class ServeEngine:
             # private pages free immediately
             self.pool.release_all(pages)
             self._slot_pages[slot] = []
+        # recovery merge LAST: restore the original prompt/budget and stitch
+        # the recovered tokens in front of this leg's output — the caller
+        # sees one uninterrupted stream
+        rec = self._recovery.pop(req.uid, None)
+        if rec is not None:
+            req.prompt = rec["prompt"]
+            req.max_tokens = rec["max_tokens"]
+            req.generated = list(rec["tokens"]) + req.generated
+            self._recovering.discard(req.uid)
+        finished.append(req)
+        self.n_finished_ok += 1
 
     # -- admission ------------------------------------------------------------
 
@@ -697,7 +1052,7 @@ class ServeEngine:
     def _admit_dense(self, finished: List[Request]) -> "_AdmitInfo":
         """Batched dense admission: ONE padded prefill + all-slot scatter."""
         free = [i for i, r in enumerate(self.slot_req) if r is None]
-        reqs = self.scheduler.select(len(free))
+        reqs = self.scheduler.select(len(free), now=self._tick_idx)
         if not reqs:
             return _AdmitInfo()
         if not self._pad_ok:
@@ -741,11 +1096,25 @@ class ServeEngine:
                 self._finish_slot(free[j], finished)
         toks_n = int(lens.sum())
         sq = int((lens.astype(np.int64) ** 2).sum())
+        # recovery billing: dense prefill is single-shot, so a recovering
+        # continuation bills its whole prompt here (start = 0)
+        rec_tok, rec_fl, rec_by = 0, 0.0, 0.0
+        for req in reqs:
+            if req.uid in self._recovering:
+                plen = len(req.prompt)
+                rec_tok += plen
+                rec_fl += costing.prefill_span_flops(
+                    self._matmul_elems, self._n_attn, self._attn_dims,
+                    0, plen)
+                rec_by += self.kv_cache_bytes / self.scfg.max_slots
+                self._recovering.discard(req.uid)
         return _AdmitInfo(
             admitted=len(reqs), prefill_tokens=toks_n, weight_passes=1,
             kv_bytes=self.kv_cache_bytes * len(reqs) / self.scfg.max_slots,
             flops=(2.0 * self._matmul_elems * toks_n
-                   + 2.0 * self._n_attn * self._attn_dims * sq))
+                   + 2.0 * self._n_attn * self._attn_dims * sq),
+            recovery_tokens=rec_tok, recovery_flops=rec_fl,
+            recovery_bytes=rec_by)
 
     # -- page-table compaction (DESIGN.md §16) --------------------------------
 
@@ -761,7 +1130,6 @@ class ServeEngine:
             pt = state.page_table.at[slot].set(row)
             return dataclasses.replace(state, caches=caches, page_table=pt)
         self._compact_exe = jax.jit(compact, donate_argnums=(0,))
-        self.compact_trace_count = 0
 
     def _maybe_compact(self) -> int:
         """Defragment at most ONE slot's private page suffix per tick
@@ -774,6 +1142,10 @@ class ServeEngine:
         at admission, a compacted slot stays compact for its lifetime."""
         thr = self.scfg.compact_threshold
         if thr <= 0.0 or not self.scfg.paged:
+            return 0
+        # latency-pressure rung (DESIGN.md §17): a tick-stall trigger
+        # pauses the (deferrable) defragmentation work for a window
+        if self._tick_idx < self._compact_pause_until:
             return 0
         nb, sink = self._blocks_per_slot, self.pool.sink
         for slot, req in enumerate(self.slot_req):
@@ -822,9 +1194,28 @@ class ServeEngine:
         admission: release the retained hit pages, roll back the lookup's
         stats booking (the retry re-runs lookup — without the unbook each
         deferral would double-count its hits/misses and inflate
-        ``PoolStats.hit_rate``), and requeue head-of-line."""
+        ``PoolStats.hit_rate``), and requeue head-of-line.
+
+        Backpressure rung (DESIGN.md §17): with ``guard.admit_max_retries``
+        set, each deferral of the same uid counts; past the cap the request
+        is shed (failed fast) instead of retried, and with
+        ``guard.admit_backoff`` set the retry is additionally delayed by an
+        exponentially growing tick window — a pool-exhaustion spike stops
+        burning a full select+lookup per tick on a request that cannot fit."""
         self.pool.release_all(hits)
         self.pool.unbook_lookup(n_hit0, n_blocks)
+        guard = self.guard
+        n = self._defer_counts.get(req.uid, 0) + 1
+        self._defer_counts[req.uid] = n
+        if guard.admit_max_retries > 0 and n > guard.admit_max_retries:
+            self._defer_counts.pop(req.uid, None)
+            self._retry_after.pop(req.uid, None)
+            self._pending_shed.append(req)
+            self.scheduler.requeue_front(rest)
+            return
+        if guard.admit_backoff > 0:
+            delay = min(guard.admit_backoff * 2 ** (n - 1), 32)
+            self._retry_after[req.uid] = self._tick_idx + delay
         self.scheduler.requeue_front([req] + rest)
 
     def _admit_paged(self, finished: List[Request]) -> "_AdmitInfo":
@@ -864,6 +1255,10 @@ class ServeEngine:
         budget_pages = [self.pool.available]
 
         def fits(req: Request) -> bool:
+            # backoff gate (DESIGN.md §17): a deferred request sits out its
+            # retry window before consuming any page budget
+            if self._retry_after.get(req.uid, 0) > self._tick_idx:
+                return False
             # conservative: ignores hits (submit() guarantees need can be
             # met by an empty pool, so deferral always terminates). A
             # non-fitting request is NOT looked up — deferral by this gate
@@ -874,7 +1269,8 @@ class ServeEngine:
             budget_pages[0] -= need
             return True
 
-        reqs = self.scheduler.select(len(free), fits=fits)
+        reqs = self.scheduler.select(len(free), fits=fits,
+                                     now=self._tick_idx)
         admitted = len(reqs)
         hit_tokens = 0
         hit_sq = 0.0
@@ -899,6 +1295,9 @@ class ServeEngine:
                 admitted = j
                 break
             pages = hits + fresh
+            # admission succeeded: clear any backpressure bookkeeping
+            self._defer_counts.pop(req.uid, None)
+            self._retry_after.pop(req.uid, None)
             self.slot_req[slot] = req
             self._slot_pages[slot] = pages
             self._prefilling[slot] = {
@@ -956,6 +1355,23 @@ class ServeEngine:
         # end^2 - start^2 (the start=0 case reduces to the dense bill)
         ends = (starts + lens).astype(np.int64)
         attn_sq = float((ends ** 2 - starts.astype(np.int64) ** 2).sum())
+        # recovery billing (DESIGN.md §17): rows re-prefilling a
+        # quarantined/fallback continuation bill their share of this call
+        # separately — the energy a fault-free run never spends. Same
+        # formulas as the aggregate bill below, factored per row.
+        rec_tok, rec_fl, rec_by = 0, 0.0, 0.0
+        for j, ((slot, w), clen) in enumerate(zip(work, call_lens)):
+            uid = w["req"].uid
+            if uid in self._recovering:
+                rec_tok += clen
+                rec_fl += costing.prefill_span_flops(
+                    self._matmul_elems, self._n_attn, self._attn_dims,
+                    int(starts[j]), clen)
+                row_gather = (-(-int(starts[j]) // ps) * ps
+                              if self.cfg.decode_kernel else nb * ps)
+                rec_by += self._kv_token_bytes * (row_gather + clen)
+                if final[j]:
+                    self._recovering.discard(uid)
         for j, ((slot, w), clen) in enumerate(zip(work, call_lens)):
             if final[j]:
                 del self._prefilling[slot]
@@ -998,15 +1414,150 @@ class ServeEngine:
                    + 2.0 * self._n_attn * self._attn_dims * attn_sq),
             saved_bytes=self._kv_token_bytes * hit_tokens,
             saved_flops=(2.0 * self._matmul_elems * hit_tokens
-                         + 2.0 * self._n_attn * self._attn_dims * hit_sq))
+                         + 2.0 * self._n_attn * self._attn_dims * hit_sq),
+            recovery_tokens=rec_tok, recovery_flops=rec_fl,
+            recovery_bytes=rec_by)
+
+    # -- degradation ladder rungs (DESIGN.md §17) -----------------------------
+
+    def _maybe_spec_backoff(self, accepted: int, n_ok: int) -> None:
+        """Acceptance-collapse rung: EWMA the per-tick draft acceptance
+        rate; when it sinks below the threshold, halve spec-k (its own
+        cached executable — no retrace of healthy k). Never re-escalates
+        within a run: flapping between executables would churn compiles."""
+        guard = self.guard
+        if guard.spec_backoff_threshold <= 0.0 or self._cur_spec_k <= 1:
+            return
+        if n_ok <= 0:
+            return
+        self._accept_ewma.update(accepted / float(self._cur_spec_k * n_ok))
+        if (self._accept_ewma.n >= guard.spec_backoff_window
+                and self._accept_ewma.value < guard.spec_backoff_threshold):
+            self._cur_spec_k = max(1, self._cur_spec_k // 2)
+            self._tick = self._tick_for(self._cur_spec_k)
+            self.spec_backoffs += 1
+            self._accept_ewma = Ewma(alpha=guard.ewma_alpha)
+
+    def _maybe_pause_compaction(self, wall_s: float) -> None:
+        """Latency-pressure rung: EWMA the tick wall time; a tick slower
+        than ``stall_factor`` x the smoothed baseline pauses compaction
+        (the one deferrable chunk of tick work) for a recovery window."""
+        guard = self.guard
+        prev = self._tick_wall_ewma.value
+        seen = self._tick_wall_ewma.n
+        self._tick_wall_ewma.update(wall_s)
+        if guard.stall_factor <= 0.0 or seen < 3 or prev is None:
+            return
+        if (wall_s > guard.stall_factor * prev
+                and self._tick_idx + 1 >= self._compact_pause_until):
+            self._compact_pause_until = (self._tick_idx + 1
+                                         + guard.compact_pause_ticks)
+            self.compaction_pauses += 1
+
+    def _drift_check(self) -> None:
+        """Quantization-drift rung: every ``drift_check_interval`` ticks,
+        replay ONE decoding greedy slot's next-token prediction through the
+        fp32 oracle (teacher-forced prefill of prompt + committed tokens
+        minus the last) and compare argmax to what the engine emitted —
+        the serve-time sibling of quality.token_agreement. Disagreement
+        EWMA above ``drift_threshold`` triggers the fp fallback."""
+        guard = self.guard
+        cands = [i for i, r in enumerate(self.slot_req)
+                 if r is not None and i not in self._prefilling
+                 and self._host_gen[i] >= 2
+                 and (r.temperature if r.temperature is not None
+                      else self.scfg.temperature) == 0.0]
+        if not cands:
+            return
+        slot = cands[self._drift_rr % len(cands)]
+        self._drift_rr += 1
+        req = self.slot_req[slot]
+        g = self._host_gen[slot]
+        toks = self._readback(self.state.out_buf[slot, :g])
+        o_params, o_cfg = self._oracle
+        seq = np.concatenate([np.asarray(req.prompt, np.int32),
+                              toks[:-1].astype(np.int32)])
+        lg, _ = tf_lib.prefill(o_params, o_cfg, jnp.asarray(seq[None]),
+                               cache_dtype=jnp.float32)
+        want = int(jnp.argmax(lg[0, -1]))
+        self._drift_ewma.update(0.0 if want == int(toks[-1]) else 1.0)
+        if (self._drift_ewma.n >= guard.drift_min_checks
+                and self._drift_ewma.value > guard.drift_threshold):
+            self._fallback_to_fp()
+
+    def _fallback_to_fp(self) -> None:
+        """int8 -> fp fallback: capture every live slot as a continuation,
+        requeue them head-of-line, and rebuild the whole runtime (pool,
+        caches, executables) from the fp oracle params. A heavy, one-way
+        rung — quantization drift means every future token is suspect."""
+        if self._fell_back:
+            return
+        conts: List[Request] = []
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            conts.append(self._capture_slot(slot))
+        self.scheduler.requeue_front(conts)
+        self.fp_fallbacks += 1
+        self._fell_back = True
+        self._drift_ewma = Ewma(alpha=self.guard.ewma_alpha)
+        self._init_runtime(*self._oracle)
+
+    def _run_audit(self) -> None:
+        """Page-pool integrity audit: the pool's own invariants plus the
+        engine-side ownership reconciliation (every page's refcount equals
+        its appearances across slot page lists and injector spike holds;
+        no page listed twice by one slot). Violations are recorded, never
+        raised — detection must not be the crash."""
+        violations = self.pool.audit()
+        owned: Dict[int, int] = {}
+        for slot, pages in enumerate(self._slot_pages):
+            if len(set(pages)) != len(pages):
+                violations.append(f"slot {slot} lists a page twice")
+            for p in pages:
+                owned[p] = owned.get(p, 0) + 1
+        for _, pages in self._spike_holds:
+            for p in pages:
+                owned[p] = owned.get(p, 0) + 1
+        for p, n in owned.items():
+            ref = self.pool.refcount(p)
+            if ref < n:
+                violations.append(
+                    f"page {p}: engine holds {n} refs, pool says {ref}")
+        if violations:
+            self.audit_failures += len(violations)
+            self.audit_log.extend(
+                f"tick {self._tick_idx}: {v}" for v in violations)
 
     # -- main tick ------------------------------------------------------------
 
     def step(self) -> List[Request]:
         """Admit + one fused decode tick. Returns finished requests."""
         t0 = time.monotonic()
+        tick = self._tick_idx
         finished: List[Request] = []
+        self._tick_shed = 0
+        self._tick_quarantined = 0
+        self._rb_retries_tick = 0
+        inj0 = (self._injector.faults_injected
+                if self._injector is not None else 0)
+        # deadline shedding (DESIGN.md §17): expire queued requests whose
+        # wait exceeded their deadline BEFORE spending admission work on
+        # them — they complete failed-fast, never silently vanish
+        for req in self.scheduler.drop(
+                lambda r: (r.deadline_ticks is not None
+                           and r.submit_tick >= 0
+                           and tick - r.submit_tick > r.deadline_ticks)):
+            self._shed_request(req, finished)
+        # host-side fault events land before admission so a pool spike
+        # pressures THIS tick's admission and a KV flip is what the decode
+        # tick observes
+        self._apply_host_faults(tick)
         adm = self._admit(finished)
+        # admission-retry exhaustion sheds, queued by _defer_admission
+        for req in self._pending_shed:
+            self._shed_request(req, finished)
+        self._pending_shed = []
         moves = self._maybe_compact() if self.scfg.paged else 0
         # decoding slots only: mid-prefill paged slots occupy a slot but
         # don't produce decode tokens until their final chunk activates them
@@ -1017,28 +1568,56 @@ class ServeEngine:
         # slot (page-granular KV read bill)
         ctx = sum(len(self.slot_req[i].prompt) + self._host_gen[i]
                   for i in active) if self.scfg.paged else 0
-        spec_k = self.scfg.spec_k
+        spec_k = self._cur_spec_k
         emitted = len(active)       # decode tokens this tick (plain: 1/slot)
         accepted = 0
+        n_bad = 0
         if active:
+            poison = self._zero_poison
+            if self._injector is not None:
+                pv = self._injector.logit_poison(tick, active,
+                                                 self.scfg.max_slots)
+                if pv is not None:
+                    poison = jnp.asarray(pv)
             if spec_k > 0:
-                self.state, packed = self._tick(self.params, self.state)
-                arr = self._readback(packed)   # the ONLY per-tick transfer
+                self.state, packed = self._tick(self.params, self.state,
+                                                poison)
+                # the ONLY hot-path transfer (validated: the injector may
+                # garble/drop it, and the device buffer survives a re-read)
+                arr = self._checked_readback(
+                    packed, self._validate_spec_packed, tick)
                 done_mask = arr[0].astype(bool)
                 n_emit = arr[1]
+                bad_mask = arr[2].astype(bool)
                 emitted = int(n_emit.sum())
                 accepted = int(np.maximum(n_emit - 1, 0).sum())
                 for i in active:
                     self._host_gen[i] += int(n_emit[i])
             else:
-                self.state, done = self._tick(self.params, self.state)
-                done_mask = self._readback(done)   # the ONLY transfer
+                self.state, packed = self._tick(self.params, self.state,
+                                                poison)
+                arr = self._checked_readback(
+                    packed, self._validate_plain_packed, tick)
+                done_mask = arr[0].astype(bool)
+                bad_mask = arr[1].astype(bool)
                 for i in active:
-                    self._host_gen[i] += 1
+                    if not bad_mask[i]:
+                        self._host_gen[i] += 1
+                emitted = int(sum(1 for i in active if not bad_mask[i]))
             for i in np.nonzero(done_mask)[0]:
                 if (self.slot_req[int(i)] is not None
                         and int(i) not in self._prefilling):
                     self._finish_slot(int(i), finished)
+            # sentinel-flagged slots made no progress and self-deactivated
+            # on device — quarantine them: teardown + head-of-line
+            # continuation. Unaffected slots' streams are untouched.
+            n_bad = int(sum(1 for i in active if bad_mask[i]))
+            for i in np.nonzero(bad_mask)[0]:
+                if (self.slot_req[int(i)] is not None
+                        and int(i) not in self._prefilling):
+                    self._quarantine_slot(int(i))
+            if spec_k > 0:
+                self._maybe_spec_backoff(accepted, len(active) - n_bad)
         # modeled traffic/compute of the tick (DESIGN.md §12/§14/§15):
         # every jitted call streams the full weight tree once; the dense
         # decode reads the whole resident KV payload, while the paged
@@ -1097,8 +1676,23 @@ class ServeEngine:
         if moves:
             # each relocated page is one pool read + one pool write
             kvb += 2.0 * moves * self.scfg.page_size * self._kv_token_bytes
+        # periodic detection rungs (rare paths; their readbacks/compute are
+        # off the hot tick and bounded by their intervals)
+        guard = self.guard
+        if (guard.drift_check_interval > 0 and not self._fell_back
+                and self.scfg.quant == "int8"
+                and tick % guard.drift_check_interval == 0):
+            self._drift_check()
+        if (guard.audit_interval > 0 and self.scfg.paged
+                and tick % guard.audit_interval == 0):
+            self._run_audit()
+        degraded = int(self._cur_spec_k != self.scfg.spec_k
+                       or self._fell_back
+                       or tick < self._compact_pause_until)
+        wall = time.monotonic() - t0
+        self._maybe_pause_compaction(wall)
         m = StepMetrics(tokens=emitted, active_slots=na,
-                        wall_s=time.monotonic() - t0,
+                        wall_s=wall,
                         prefill_tokens=adm.prefill_tokens,
                         admitted=adm.admitted,
                         queue_depth=len(self.scheduler),
@@ -1111,11 +1705,22 @@ class ServeEngine:
                         draft_flops=d_fl, draft_bytes=d_by,
                         verify_flops=v_fl, verify_bytes=v_by,
                         prefill_gather_bytes=adm.gather_bytes,
-                        compaction_moves=moves)
+                        compaction_moves=moves,
+                        faults_injected=(
+                            self._injector.faults_injected - inj0
+                            if self._injector is not None else 0),
+                        quarantined=self._tick_quarantined,
+                        shed=self._tick_shed,
+                        recovery_tokens=adm.recovery_tokens,
+                        recovery_flops=adm.recovery_flops,
+                        recovery_bytes=adm.recovery_bytes,
+                        degraded=degraded,
+                        readback_retries=self._rb_retries_tick)
         self.last_metrics = m
         self.metrics_log.append(m)
         if self.accountant is not None:
             self.accountant.observe_serve(m)
+        self._tick_idx += 1
         return finished
 
     def run_until_drained(self, max_ticks: int = 10000) -> List[Request]:
@@ -1167,6 +1772,34 @@ class ServeEngine:
             # (plain decode is exactly 1.0; upper bound spec_k + 1)
             out["accepted_tokens_per_tick"] = (
                 toks / slot_ticks if slot_ticks > 0 else 0.0)
+            out["spec_backoffs"] = self.spec_backoffs
+            out["spec_k_current"] = self._cur_spec_k
+        # resilience tier (DESIGN.md §17): every ratio 0.0-guards its
+        # denominator like the rest of this summary — chaos summaries are
+        # read by the bench gate on empty/fully-shed runs too
+        n_ticks = len(self.metrics_log)
+        done_total = self.n_shed + self.n_finished_ok
+        rec_tok = sum(m.recovery_tokens for m in self.metrics_log)
+        rec_fl = sum(m.recovery_flops for m in self.metrics_log)
+        rec_by = sum(m.recovery_bytes for m in self.metrics_log)
+        out["faults_injected"] = sum(m.faults_injected
+                                     for m in self.metrics_log)
+        out["quarantined"] = self.n_quarantined
+        out["quarantine_rate"] = (self.n_quarantined / n_ticks
+                                  if n_ticks > 0 else 0.0)
+        out["shed"] = self.n_shed
+        out["shed_rate"] = (self.n_shed / done_total
+                            if done_total > 0 else 0.0)
+        out["recovery_tokens"] = rec_tok
+        out["recovery_j"] = (energy.compute_energy_j(rec_fl)
+                             + energy.dram_energy_j(rec_by))
+        out["recovery_j_per_token"] = (out["recovery_j"] / toks
+                                       if toks > 0 else 0.0)
+        out["degraded_ticks"] = sum(m.degraded for m in self.metrics_log)
+        out["readback_retries"] = self.readback_retries_total
+        out["fp_fallbacks"] = self.fp_fallbacks
+        out["compaction_pauses"] = self.compaction_pauses
+        out["audit_failures"] = self.audit_failures
         return out
 
 

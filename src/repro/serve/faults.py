@@ -1,0 +1,280 @@
+"""Deterministic fault injection for the paged serve engine (DESIGN.md §17).
+
+An unattended edge deployment — the paper's setting — meets faults the lab
+never sees: a NaN logit from a marginal accelerator, a flipped bit in an
+int8 KV page, a pool briefly exhausted by a co-tenant, a straggling tick, a
+dropped readback. This module makes every one of those a *reproducible
+input*: a :class:`FaultPlan` is a seeded schedule of :class:`FaultEvent`\\ s
+threaded through ``ServeConfig.faults``, and the engine consults one
+:class:`FaultInjector` per run. Same seed, same plan, same tick-by-tick
+corruption — so each failure mode is a regression test, not an anecdote.
+
+The *detection and recovery* half (numerics sentinel, quarantine, the
+degradation ladder) lives in serve/engine.py; the knobs that arm it are
+:class:`GuardrailConfig` (``ServeConfig.guard``). Every default here keeps
+the pre-chaos behavior bit-for-bit: no plan means no injection, and an
+all-default guard config only adds the sentinel (which is free — it rides
+the existing packed readback).
+
+Fault classes and where they land:
+
+* ``nan_logits`` / ``inf_logits`` — a poison vector added to the victim
+  slot's decode (or verify) logits *inside* the jitted tick; caught by the
+  per-tick numerics sentinel, the slot makes no progress that tick and is
+  quarantined by the host.
+* ``kv_bitflip`` — host-side corruption of one of the victim slot's
+  *private* (refcount-1, unpublished) KV pages: NaN patterns in float
+  pools (sentinel catches the very next tick), XOR'd codes in int8 pools
+  (finite garbage — the numerics-drift rung's case). Shared prefix pages
+  are never touched: the blast radius is one slot by construction.
+* ``pool_spike`` — ``magnitude`` pages allocated out from under the
+  engine and held for ``duration`` ticks (a co-tenant grabbing memory);
+  exercises deferral, backpressure, and deadline shedding.
+* ``stall`` — the host sleeps ``STALL_BASE_S * magnitude`` seconds before
+  the tick (straggler simulation); the tick-latency EWMA (train/ft.py's
+  estimator) sees the spike and the compaction-pause rung reacts.
+* ``readback_garble`` / ``readback_drop`` — the tick's one packed host
+  readback arrives corrupted (out-of-range by construction) or not at
+  all on its first attempt; the engine validates ranges and re-reads.
+  In-range flips are undetectable without ECC — a documented limit, not
+  a silent one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+FAULT_KINDS = ("nan_logits", "inf_logits", "kv_bitflip", "pool_spike",
+               "stall", "readback_garble", "readback_drop")
+
+# host sleep per unit of a stall event's magnitude — big enough to spike a
+# tick-wall EWMA whose healthy ticks are milliseconds, small enough that a
+# chaos matrix of them stays a smoke test
+STALL_BASE_S = 0.02
+
+# the value a garbled readback element is overwritten with: far outside
+# every packed field's valid range ({0,1} flags, 0..k+1 emission counts),
+# so validation MUST reject it — the injected corruption is detectable by
+# construction (the in-range-flip case needs ECC and is out of scope)
+GARBLE_VALUE = 1 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault. ``slot == -1`` resolves to the first active
+    decoding slot at fire time (events outlive any particular admission
+    order); ``magnitude`` is pages for ``pool_spike``/``kv_bitflip`` and
+    the sleep multiplier for ``stall``; ``duration`` is hold ticks for
+    ``pool_spike``."""
+    tick: int
+    kind: str
+    slot: int = -1
+    magnitude: float = 1.0
+    duration: int = 1
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; expected "
+                             f"one of {FAULT_KINDS}")
+        if self.tick < 0:
+            raise ValueError(f"fault tick must be >= 0, got {self.tick}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, immutable fault schedule. ``events`` fire at exact ticks;
+    the seed additionally determines every in-event random choice (which
+    element of a readback to garble, which byte pattern to flip), so one
+    ``(seed, events)`` pair replays bit-identically."""
+    seed: int = 0
+    events: Tuple[FaultEvent, ...] = ()
+
+    @staticmethod
+    def single(kind: str, tick: int = 1, *, seed: int = 0,
+               slot: int = -1, magnitude: float = 1.0,
+               duration: int = 1) -> "FaultPlan":
+        return FaultPlan(seed=seed, events=(
+            FaultEvent(tick=tick, kind=kind, slot=slot,
+                       magnitude=magnitude, duration=duration),))
+
+    @staticmethod
+    def matrix(seed: int, n_ticks: int,
+               kinds: Sequence[str] = FAULT_KINDS,
+               events_per_kind: int = 1) -> "FaultPlan":
+        """One deterministic schedule covering every kind: fire ticks are
+        drawn from ``default_rng(seed)`` in ``[1, n_ticks)`` — tick 0 is
+        skipped so the first admission always lands cleanly."""
+        rng = np.random.default_rng(seed)
+        events = []
+        for kind in kinds:
+            for _ in range(events_per_kind):
+                t = int(rng.integers(1, max(n_ticks, 2)))
+                events.append(FaultEvent(tick=t, kind=kind))
+        return FaultPlan(seed=seed, events=tuple(events))
+
+    def for_tick(self, tick: int) -> List[FaultEvent]:
+        return [e for e in self.events if e.tick == tick]
+
+    @property
+    def max_tick(self) -> int:
+        return max((e.tick for e in self.events), default=-1)
+
+
+@dataclasses.dataclass
+class GuardrailConfig:
+    """Detection/degradation knobs (``ServeConfig.guard``). Defaults keep
+    the engine's pre-chaos behavior exactly: every rung is off until its
+    knob arms it. The numerics sentinel itself has no knob — it is free
+    (packed into the existing readback) and always on."""
+    # walk PagePool.audit() + the engine's ownership mirror every N ticks
+    # (0 = off). Violations are counted (summary: audit_failures), never
+    # raised — the auditor is a detector, not a crash vector.
+    audit_interval: int = 0
+    # paged admission deferrals per request before it is shed (0 =
+    # unlimited retries — the pre-chaos behavior)
+    admit_max_retries: int = 0
+    # exponential admission backoff: after its n-th deferral a request
+    # waits base * 2^(n-1) ticks (capped at 32) before it is considered
+    # again (0 = retry every tick)
+    admit_backoff: int = 0
+    # spec-k backoff: halve spec_k (floor 1) when the acceptance-rate EWMA
+    # sits below this threshold with at least ``spec_backoff_window``
+    # observed spec ticks of evidence (0.0 = off)
+    spec_backoff_threshold: float = 0.0
+    spec_backoff_window: int = 8
+    # int8 numerics-drift watch: every N ticks re-decode one live slot's
+    # last emitted token through the fp32 oracle path and update a
+    # disagreement EWMA; above ``drift_threshold`` the engine falls back
+    # to fp serving wholesale (0 = off)
+    drift_check_interval: int = 0
+    drift_threshold: float = 0.5
+    drift_min_checks: int = 3
+    # straggler rung: a tick whose wall time exceeds ``stall_factor`` x
+    # the tick-wall EWMA pauses compaction for ``compact_pause_ticks``
+    # ticks (0.0 = off)
+    stall_factor: float = 0.0
+    compact_pause_ticks: int = 4
+    # re-reads of a dropped/garbled packed readback before giving up
+    readback_max_retries: int = 2
+    # smoothing for every guardrail EWMA (train/ft.py Ewma convention:
+    # weight on history)
+    ewma_alpha: float = 0.9
+
+    def __post_init__(self):
+        for name in ("audit_interval", "admit_max_retries", "admit_backoff",
+                     "drift_check_interval", "compact_pause_ticks"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0")
+        if not (0.0 <= self.spec_backoff_threshold <= 1.0):
+            raise ValueError("spec_backoff_threshold must be in [0, 1]")
+        if not (0.0 <= self.drift_threshold <= 1.0):
+            raise ValueError("drift_threshold must be in [0, 1]")
+        if self.readback_max_retries < 1:
+            raise ValueError("readback_max_retries must be >= 1")
+
+
+def corrupt_kv_page(caches, page: int):
+    """Return a cache tree with physical ``page`` poisoned in every layer's
+    K pool: NaN for float storage (the numerics sentinel fires on the next
+    tick that attends the page), XOR'd codes for int8 storage (finite
+    garbage — only the drift rung can see it). V is left intact: one
+    corrupted projection is enough to taint the victim's logits, and
+    keeping the corruption minimal makes the blast-radius assertion
+    (unaffected slots bit-identical) the strongest version of itself.
+
+    Only the K codes are touched — int8 scale pools stay valid, so the
+    corrupted values remain in-range finite numbers, exactly the silent
+    class of fault a bit flip in DRAM produces."""
+    new = {}
+    for name, entry in caches.items():
+        e2 = dict(entry)
+        kv = entry["kv"]
+        # pattern pools carry the stacked layer dim first; tails are flat
+        idx = ((slice(None), page) if name.startswith("pat")
+               else (page,))
+        if jnp.issubdtype(kv.k.dtype, jnp.floating):
+            k2 = kv.k.at[idx].set(jnp.nan)
+        else:
+            k2 = kv.k.at[idx].set(kv.k[idx] ^ jnp.asarray(0x55, kv.k.dtype))
+        e2["kv"] = dataclasses.replace(kv, k=k2)
+        new[name] = e2
+    return new
+
+
+class FaultInjector:
+    """Per-run dispatcher for one :class:`FaultPlan`.
+
+    The injector owns the *randomness* and the *ledger* (``counts`` per
+    kind; a fault is counted when it is actually applied, so a
+    ``kv_bitflip`` scheduled while no slot is decoding counts zero). The
+    engine owns the mutations that need its internals (pool allocation for
+    spikes, cache surgery for bit flips) and calls back ``count()``."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._rng = np.random.default_rng(plan.seed)
+        self.counts: Dict[str, int] = {k: 0 for k in FAULT_KINDS}
+
+    @property
+    def faults_injected(self) -> int:
+        return sum(self.counts.values())
+
+    def count(self, kind: str, n: int = 1) -> None:
+        self.counts[kind] += n
+
+    def events_for(self, tick: int) -> List[FaultEvent]:
+        return self.plan.for_tick(tick)
+
+    # -- host-side faults -----------------------------------------------------
+
+    def stall_seconds(self, tick: int) -> float:
+        """Total straggler sleep scheduled for this tick (0.0 = none)."""
+        secs = 0.0
+        for e in self.events_for(tick):
+            if e.kind == "stall":
+                secs += STALL_BASE_S * float(e.magnitude)
+                self.count("stall")
+        return secs
+
+    def logit_poison(self, tick: int, active_slots: Sequence[int],
+                     n_slots: int) -> Optional[np.ndarray]:
+        """(B,) float32 poison vector for this tick's decode/verify logits
+        (``logits + poison[:, None]``): NaN or +inf at each victim slot,
+        0.0 elsewhere. None when no logit fault fires (the engine then
+        passes its cached zero vector — no per-tick host->device churn)."""
+        vec = None
+        for e in self.events_for(tick):
+            if e.kind not in ("nan_logits", "inf_logits") or not active_slots:
+                continue
+            victim = e.slot if e.slot in active_slots else active_slots[0]
+            if vec is None:
+                vec = np.zeros(n_slots, np.float32)
+            vec[victim] = np.nan if e.kind == "nan_logits" else np.inf
+            self.count(e.kind)
+        return vec
+
+    # -- readback faults ------------------------------------------------------
+
+    def filter_readback(self, arr: np.ndarray, tick: int,
+                        attempt: int = 0) -> Optional[np.ndarray]:
+        """Pass the tick's packed readback through this tick's readback
+        faults. Only the FIRST attempt is corrupted (the model is a torn
+        transfer, not a persistently bad link): a retry sees the true
+        array, so the engine's validate-and-retry loop always converges."""
+        if attempt > 0:
+            return arr
+        for e in self.events_for(tick):
+            if e.kind == "readback_drop":
+                self.count("readback_drop")
+                return None
+            if e.kind == "readback_garble":
+                bad = np.array(arr, copy=True)
+                flat = bad.reshape(-1)
+                flat[int(self._rng.integers(flat.size))] = GARBLE_VALUE
+                self.count("readback_garble")
+                return bad
+        return arr

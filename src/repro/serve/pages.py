@@ -330,6 +330,63 @@ class PagePool:
                 and self.stats.missed_blocks >= 0), \
             "unbook_lookup rolled back more than was booked"
 
+    # -- integrity audit (DESIGN.md §17) --------------------------------------
+
+    def audit(self) -> List[str]:
+        """Walk every pool invariant and return the violations (empty =
+        healthy). The chaos tier's integrity detector: the engine runs
+        this every ``guard.audit_interval`` ticks and surfaces failures
+        as a counter — a refcount drifting under fault churn is exactly
+        the silent-corruption class this exists to catch. Checks:
+
+        * partition — every page is in exactly one of free / parked (LRU)
+          / live (refcount > 0);
+        * refcounts are non-negative, free/parked pages hold refcount 0;
+        * free pages carry no published key (release parks keyed pages);
+        * the key registry mirrors are a bijection
+          (``_key_to_page[_page_key[p]] == p`` and back);
+        * every child edge matches its key's parent, and a child's chain
+          depth is its parent's + 1.
+        """
+        v: List[str] = []
+        free, parked = set(self._free), set(self._lru)
+        if len(free) != len(self._free):
+            v.append("free list holds duplicate pages")
+        for p in range(self.num_pages):
+            states = ((p in free) + (p in parked) + (self._ref[p] > 0))
+            if states != 1:
+                v.append(f"page {p} in {states} states "
+                         f"(free={p in free}, parked={p in parked}, "
+                         f"ref={self._ref[p]})")
+            if self._ref[p] < 0:
+                v.append(f"page {p} refcount {self._ref[p]} < 0")
+            if p in free and self._page_key.get(p) is not None:
+                v.append(f"free page {p} still published")
+        for p, key in self._page_key.items():
+            if key is None:
+                continue
+            if self._key_to_page.get(key) != p:
+                v.append(f"page {p} key {key} not mirrored in registry")
+            parent = key[0]
+            if parent != ROOT:
+                if p not in self._children.get(parent, ()):
+                    v.append(f"page {p} missing from parent {parent}'s "
+                             f"children")
+                want = self._page_depth.get(parent, 0) + 1
+                if self._page_depth.get(p) != want:
+                    v.append(f"page {p} depth {self._page_depth.get(p)} "
+                             f"!= parent depth + 1 ({want})")
+        for key, p in self._key_to_page.items():
+            if self._page_key.get(p) != key:
+                v.append(f"registry key {key} -> page {p} not mirrored")
+        for parent, kids in self._children.items():
+            for kid in kids:
+                k = self._page_key.get(kid)
+                if k is None or k[0] != parent:
+                    v.append(f"child edge {parent}->{kid} has no matching "
+                             f"key")
+        return v
+
     # -- introspection --------------------------------------------------------
 
     def refcount(self, page: int) -> int:

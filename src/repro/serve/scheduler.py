@@ -27,6 +27,13 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 @dataclasses.dataclass
 class SchedulerConfig:
     policy: str = "fifo"               # "fifo" | "longest_prompt"
+    # queue aging (DESIGN.md §17): under ``longest_prompt`` every
+    # ``age_boost_ticks`` ticks a request has waited count as one extra
+    # prompt token of priority, so short prompts cannot starve behind a
+    # steady stream of long ones. 0 = off (pure length order). The engine
+    # passes the current tick via ``select(..., now=)``; without it aging
+    # is inert.
+    age_boost_ticks: int = 0
 
 
 class Scheduler:
@@ -47,8 +54,8 @@ class Scheduler:
         return list(self._q)
 
     def select(self, n_free: int,
-               fits: Optional[Callable[["Request"], bool]] = None
-               ) -> List["Request"]:
+               fits: Optional[Callable[["Request"], bool]] = None,
+               now: Optional[int] = None) -> List["Request"]:
         """Pop up to ``n_free`` requests for admission, per policy.
 
         ``fits`` is the engine's capacity gate (the paged engine passes its
@@ -57,6 +64,10 @@ class Scheduler:
         non-fitting request — head-of-line order is the policy's contract —
         while ``longest_prompt`` skips non-fitting candidates (it already
         reorders, so admitting a shorter prompt that fits is in-policy).
+
+        ``now`` is the engine's tick counter; with
+        ``config.age_boost_ticks`` set it feeds the anti-starvation aging
+        term under ``longest_prompt``.
         """
         if n_free <= 0 or not self._q:
             return []
@@ -67,8 +78,19 @@ class Scheduler:
                     break
                 out.append(self._q.popleft())
             return out
+
+        def rank(r: "Request") -> float:
+            n = float(len(r.prompt))
+            boost_every = self.config.age_boost_ticks
+            if boost_every > 0 and now is not None:
+                submitted = getattr(r, "submit_tick", -1)
+                if submitted >= 0:
+                    n += (now - submitted) // boost_every
+            return -n
+
         # longest_prompt: stable pick of the n longest pending prompts
-        ranked = sorted(self._q, key=lambda r: -len(r.prompt))
+        # (aging-adjusted length when armed)
+        ranked = sorted(self._q, key=rank)
         picked: List["Request"] = []
         for r in ranked:
             if len(picked) >= n_free:

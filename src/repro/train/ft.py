@@ -24,6 +24,27 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
+class Ewma:
+    """Exponentially-weighted moving average with the heartbeat smoothing
+    convention (``alpha`` is the weight on history, first observation
+    seeds the average). Shared by the fleet straggler detector below and
+    the serve engine's tick-latency / accept-rate / numerics-drift
+    monitors (serve/faults.py, DESIGN.md §17) so every "is this run
+    degrading" question uses the same estimator."""
+    alpha: float = 0.9
+    value: Optional[float] = None
+    n: int = 0
+
+    def update(self, x: float) -> float:
+        self.n += 1
+        if self.value is None:
+            self.value = float(x)
+        else:
+            self.value = self.alpha * self.value + (1 - self.alpha) * float(x)
+        return self.value
+
+
+@dataclasses.dataclass
 class HostStatus:
     host_id: str
     step: int
@@ -41,16 +62,20 @@ class HeartbeatWriter:
         self.dir = directory
         self.host_id = host_id
         self.ewma = ewma
-        self._step_time: Optional[float] = None
+        self._ewma = Ewma(alpha=ewma)
         os.makedirs(directory, exist_ok=True)
+
+    @property
+    def _step_time(self) -> Optional[float]:
+        return self._ewma.value
+
+    @_step_time.setter
+    def _step_time(self, value: Optional[float]) -> None:
+        self._ewma.value = value
 
     def beat(self, step: int, step_time_s: float,
              now: Optional[float] = None) -> None:
-        if self._step_time is None:
-            self._step_time = step_time_s
-        else:
-            self._step_time = (self.ewma * self._step_time
-                               + (1 - self.ewma) * step_time_s)
+        self._ewma.update(step_time_s)
         payload = {"host_id": self.host_id, "step": step,
                    "step_time_ewma": self._step_time,
                    "last_beat": now if now is not None else time.time()}

@@ -1,0 +1,539 @@
+"""Chaos tier (DESIGN.md §17): deterministic fault injection, the
+detection rungs folded into the serve tick, and the graceful-degradation
+ladder.
+
+The load-bearing invariant, locked per fault kind: no injected fault may
+crash the process, deadlock admission, or alter the token stream of ANY
+request relative to the fault-free run — resilience costs joules
+(recovery_j), never content. Plus: seeded plans replay bit-identically,
+pool invariants hold across fault paths (hypothesis), summary ratios
+0.0-guard their denominators on degenerate runs, and flag/config
+validation fails fast with actionable messages.
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import transformer as tf_lib
+from repro.serve import (FAULT_KINDS, FaultEvent, FaultInjector, FaultPlan,
+                         GuardrailConfig, PagePool, Scheduler,
+                         SchedulerConfig, ServeConfig, ServeEngine,
+                         generation_agreement)
+from repro.serve.engine import Request
+from repro.serve.faults import GARBLE_VALUE, corrupt_kv_page
+from repro.serve.pages import ROOT
+
+
+def _cfg(vocab=61):
+    return tf_lib.LMConfig(name="t", d_model=48, n_heads=4, n_kv_heads=2,
+                           d_ff=96, vocab=vocab, pattern=(tf_lib.BlockSpec(),),
+                           repeats=2, remat="none", vocab_pad_multiple=1)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _cfg()
+    params = tf_lib.init_lm(jax.random.PRNGKey(0), cfg,
+                            dtype=jnp.float32).params
+    return cfg, params
+
+
+PROMPTS = [np.arange(15), np.arange(11) + 7, np.arange(8) + 30]
+
+
+def _run(model, plan=None, prompts=PROMPTS, max_tokens=8, guard=None,
+         deadline=None, **cfg_kw):
+    cfg, params = model
+    cfg_kw.setdefault("paged", True)
+    cfg_kw.setdefault("page_size", 4)
+    kw = dict(max_slots=2, max_len=64, faults=plan, **cfg_kw)
+    if guard is not None:
+        kw["guard"] = guard
+    eng = ServeEngine(params, cfg, ServeConfig(**kw))
+    for p in prompts:
+        eng.submit(p, max_tokens=max_tokens, deadline_ticks=deadline)
+    done = eng.run_until_drained(max_ticks=400)
+    return eng, {r.uid: list(r.generated) for r in done}
+
+
+# -----------------------------------------------------------------------------
+# Fault plan / injector determinism
+# -----------------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultEvent(tick=1, kind="cosmic_ray")
+
+    def test_negative_tick_rejected(self):
+        with pytest.raises(ValueError, match="tick"):
+            FaultEvent(tick=-1, kind="stall")
+
+    def test_matrix_is_seed_deterministic(self):
+        a = FaultPlan.matrix(seed=5, n_ticks=20)
+        b = FaultPlan.matrix(seed=5, n_ticks=20)
+        assert a == b
+        assert {e.kind for e in a.events} == set(FAULT_KINDS)
+        assert all(e.tick >= 1 for e in a.events)   # tick 0 admits cleanly
+        assert FaultPlan.matrix(seed=6, n_ticks=20) != a
+
+    def test_for_tick_and_max_tick(self):
+        plan = FaultPlan.single("stall", tick=3)
+        assert [e.kind for e in plan.for_tick(3)] == ["stall"]
+        assert plan.for_tick(2) == []
+        assert plan.max_tick == 3
+        assert FaultPlan().max_tick == -1
+
+    def test_injector_garble_choice_is_seeded(self):
+        arr = np.zeros((2, 8), np.int32)
+        picks = []
+        for _ in range(2):
+            inj = FaultInjector(FaultPlan.single("readback_garble", tick=0,
+                                                 seed=9))
+            out = inj.filter_readback(arr, tick=0, attempt=0)
+            picks.append(int(np.flatnonzero(out.reshape(-1)
+                                            == GARBLE_VALUE)[0]))
+        assert picks[0] == picks[1]
+        # retries see the true array: the torn-transfer model converges
+        inj = FaultInjector(FaultPlan.single("readback_drop", tick=0))
+        assert inj.filter_readback(arr, tick=0, attempt=0) is None
+        assert inj.filter_readback(arr, tick=0, attempt=1) is arr
+
+    def test_guardrail_validation(self):
+        with pytest.raises(ValueError, match="audit_interval"):
+            GuardrailConfig(audit_interval=-1)
+        with pytest.raises(ValueError, match="spec_backoff_threshold"):
+            GuardrailConfig(spec_backoff_threshold=1.5)
+        with pytest.raises(ValueError, match="readback_max_retries"):
+            GuardrailConfig(readback_max_retries=0)
+        with pytest.raises(ValueError, match="drift_threshold"):
+            GuardrailConfig(drift_threshold=-0.1)
+
+
+# -----------------------------------------------------------------------------
+# The chaos matrix: every fault kind, one invariant
+# -----------------------------------------------------------------------------
+
+class TestChaosMatrix:
+    def test_every_kind_drains_stream_identical(self, model):
+        """The tentpole invariant: each fault kind drains within budget
+        and every request's stream matches the fault-free baseline token
+        for token — detection + quarantine re-decode are invisible in
+        content. Also: the pool ends clean (audit + zero live pages) and
+        the cache tree ends NaN-free (quarantine teardown scrubs the
+        poisoned private pages before they are recycled)."""
+        _, base = _run(model)
+        for kind in FAULT_KINDS:
+            plan = FaultPlan.single(kind, tick=2, seed=11, slot=1)
+            eng, got = _run(model, plan)
+            s = eng.summary()
+            assert s["faults_injected"] >= 1, kind
+            assert got == base, kind
+            assert eng.pool.audit() == [] and eng.pool.live == 0, kind
+            for leaf in jax.tree.leaves(
+                    [e["kv"] for e in eng.state.caches.values()]):
+                if jnp.issubdtype(leaf.dtype, jnp.floating):
+                    assert bool(jnp.all(jnp.isfinite(leaf))), kind
+
+    def test_quarantine_bills_recovery_energy(self, model):
+        eng, got = _run(model, FaultPlan.single("nan_logits", tick=2))
+        s = eng.summary()
+        assert s["quarantined"] >= 1
+        assert s["recovery_tokens"] > 0
+        assert s["recovery_j"] > 0.0
+        assert s["recovery_j_per_token"] > 0.0
+        assert 0.0 < s["quarantine_rate"] <= 1.0
+
+    def test_same_plan_replays_identically(self, model):
+        runs = []
+        for _ in range(2):
+            eng, got = _run(model, FaultPlan.single("kv_bitflip", tick=2,
+                                                    seed=3))
+            runs.append((got, eng.summary()))
+        assert runs[0][0] == runs[1][0]
+        for key in ("faults_injected", "quarantined", "shed", "ticks",
+                    "recovery_tokens", "recovery_j"):
+            assert runs[0][1][key] == runs[1][1][key], key
+
+    def test_sampling_is_seed_reproducible(self, model):
+        """Satellite: one explicit seed (ServeConfig.seed) makes even
+        temperature-sampled serving replayable — the chaos diffing and the
+        bench's --seed ride on this."""
+        streams = []
+        for _ in range(2):
+            cfg, params = model
+            eng = ServeEngine(params, cfg, ServeConfig(
+                max_slots=2, max_len=64, paged=True, page_size=4, seed=123))
+            for p in PROMPTS:
+                eng.submit(p, max_tokens=6, temperature=0.8)
+            done = eng.run_until_drained(max_ticks=400)
+            streams.append({r.uid: list(r.generated) for r in done})
+        assert streams[0] == streams[1]
+
+    def test_audit_stays_clean_under_faults(self, model):
+        guard = GuardrailConfig(audit_interval=1)
+        eng, _ = _run(model, FaultPlan.single("kv_bitflip", tick=2),
+                      guard=guard)
+        assert eng.summary()["audit_failures"] == 0
+        assert eng.audit_log == []
+
+    def test_audit_detects_seeded_violation(self, model):
+        cfg, params = model
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_slots=2, max_len=64, paged=True, page_size=4,
+            guard=GuardrailConfig(audit_interval=1)))
+        eng.submit(PROMPTS[0], max_tokens=4)
+        eng.step()
+        # engine claims a page the pool thinks is free: the ownership
+        # reconciliation must see it (recorded, never raised)
+        free_page = eng.pool._free[0]
+        eng._slot_pages[0].append(free_page)
+        eng.step()
+        assert eng.audit_failures >= 1
+        eng._slot_pages[0].remove(free_page)
+
+
+# -----------------------------------------------------------------------------
+# Readback transport faults
+# -----------------------------------------------------------------------------
+
+class TestReadbackGuard:
+    @pytest.mark.parametrize("kind", ["readback_garble", "readback_drop"])
+    def test_retry_recovers(self, model, kind):
+        eng, got = _run(model, FaultPlan.single(kind, tick=2, seed=7))
+        _, base = _run(model)
+        s = eng.summary()
+        assert s["readback_retries"] >= 1
+        assert s["quarantined"] == 0        # transport != numerics
+        assert got == base
+
+    def test_retry_exhaustion_raises(self, model):
+        """A persistently bad link (unlike the default torn-transfer
+        model) must fail loudly after the retry budget, not spin."""
+        cfg, params = model
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_slots=2, max_len=64, paged=True, page_size=4,
+            faults=FaultPlan.single("readback_drop", tick=0),
+            guard=GuardrailConfig(readback_max_retries=2)))
+        eng._injector.filter_readback = lambda arr, tick, attempt=0: None
+        eng.submit(PROMPTS[0], max_tokens=4)
+        with pytest.raises(RuntimeError, match="readback"):
+            eng.run_until_drained(max_ticks=10)
+
+
+# -----------------------------------------------------------------------------
+# Deadlines, aging, backpressure
+# -----------------------------------------------------------------------------
+
+class TestDeadlinesAndBackpressure:
+    def test_deadline_sheds_overdue_queue(self, model):
+        prompts = [np.arange(6) + 3 * i for i in range(8)]
+        eng, got = _run(model, prompts=prompts, max_tokens=8, deadline=1)
+        s = eng.summary()
+        assert s["shed"] > 0
+        assert len(got) == len(prompts)     # shed requests still complete
+        assert 0.0 < s["shed_rate"] <= 1.0
+        # shed + finished partitions the workload exactly
+        assert eng.n_shed + eng.n_finished_ok == len(prompts)
+
+    def test_submit_rejects_bad_deadline(self, model):
+        cfg, params = model
+        eng = ServeEngine(params, cfg, ServeConfig(max_slots=2, max_len=64))
+        with pytest.raises(ValueError, match="deadline_ticks"):
+            eng.submit(np.arange(4), deadline_ticks=0)
+
+    def test_queue_aging_prevents_starvation(self):
+        sched = Scheduler(SchedulerConfig(policy="longest_prompt",
+                                          age_boost_ticks=1))
+        old_short = Request(1, np.arange(4), submit_tick=0)
+        new_long = Request(2, np.arange(10), submit_tick=100)
+        sched.submit(old_short)
+        sched.submit(new_long)
+        # un-aged, length wins; with 100 ticks of waiting banked, the
+        # short prompt outranks it (4 + 100 > 10)
+        assert [r.uid for r in Scheduler(SchedulerConfig(
+            policy="longest_prompt")).select(1)] == []
+        assert [r.uid for r in sched.select(1, now=100)] == [1]
+
+    def test_admission_retry_exhaustion_sheds(self, model):
+        cfg, params = model
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_slots=2, max_len=64, paged=True, page_size=4,
+            guard=GuardrailConfig(admit_max_retries=2, admit_backoff=1)))
+        req = Request(99, np.arange(6), max_tokens=4,
+                      submit_tick=0)
+        eng._defer_admission(req, [], 0, 0, [])
+        assert eng._defer_counts[99] == 1
+        # exponential backoff parks the retry in the future
+        assert eng._retry_after[99] > eng._tick_idx
+        eng.scheduler.drop(lambda r: True)
+        eng._defer_admission(req, [], 0, 0, [])
+        eng.scheduler.drop(lambda r: True)
+        eng._defer_admission(req, [], 0, 0, [])      # cap (2) exceeded
+        assert req in eng._pending_shed
+        assert 99 not in eng._defer_counts
+        eng.scheduler.drop(lambda r: True)
+        done = eng.step()
+        assert [r.uid for r in done] == [99] and done[0].done
+        assert eng.summary()["shed"] == 1
+
+
+# -----------------------------------------------------------------------------
+# Degradation ladder rungs
+# -----------------------------------------------------------------------------
+
+class TestDegradationLadder:
+    def test_spec_backoff_on_acceptance_collapse(self, model):
+        """Random prompts give the n-gram drafter near-zero acceptance;
+        with the rung armed the engine walks spec-k down to 1 — and the
+        stream stays identical to plain paged greedy (rejection sampling
+        holds at every k)."""
+        guard = GuardrailConfig(spec_backoff_threshold=0.9,
+                                spec_backoff_window=2)
+        eng, got = _run(model, spec_k=4, guard=guard, max_tokens=10)
+        _, base = _run(model, max_tokens=10)
+        s = eng.summary()
+        assert s["spec_backoffs"] >= 1
+        assert s["spec_k_current"] < 4
+        assert s["degraded_ticks"] >= 1
+        assert got == base
+
+    def test_spec_backoff_off_by_default(self, model):
+        eng, _ = _run(model, spec_k=4, max_tokens=10)
+        s = eng.summary()
+        assert s["spec_backoffs"] == 0 and s["spec_k_current"] == 4
+
+    def test_compaction_pause_rung(self, model):
+        cfg, params = model
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_slots=2, max_len=64, paged=True, page_size=4,
+            compact_threshold=0.3,
+            guard=GuardrailConfig(stall_factor=2.0, compact_pause_ticks=3)))
+        for w in (0.01, 0.01, 0.01, 0.01):
+            eng._maybe_pause_compaction(w)
+        assert eng.compaction_pauses == 0
+        eng._maybe_pause_compaction(0.05)    # > 2x the smoothed baseline
+        assert eng.compaction_pauses == 1
+        assert eng._compact_pause_until > eng._tick_idx
+        assert eng._maybe_compact() == 0     # paused: no moves attempted
+
+    def test_int8_drift_fallback_after_silent_corruption(self, model):
+        """The silent-fault case the drift rung exists for: an int8 KV
+        bit flip is finite garbage the numerics sentinel can NOT see; the
+        periodic oracle check catches the disagreement and falls back to
+        fp serving wholesale. Every request still completes."""
+        cfg, params = model
+        guard = GuardrailConfig(drift_check_interval=1, drift_min_checks=1,
+                                drift_threshold=0.0, ewma_alpha=0.5)
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_slots=2, max_len=64, paged=True, page_size=4, quant="int8",
+            faults=FaultPlan.single("kv_bitflip", tick=2, seed=3),
+            guard=guard))
+        for p in PROMPTS:
+            eng.submit(p, max_tokens=8)
+        done = eng.run_until_drained(max_ticks=400)
+        assert len(done) == len(PROMPTS)
+        assert all(len(r.generated) == 8 for r in done)
+        assert eng.fp_fallbacks == 1
+        assert eng.summary()["fp_fallbacks"] == 1
+        assert eng.summary()["degraded_ticks"] >= 1
+
+    def test_fp_fallback_requeues_live_slots(self, model):
+        cfg, params = model
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_slots=2, max_len=64, paged=True, page_size=4, quant="int8"))
+        for p in PROMPTS:
+            eng.submit(p, max_tokens=6)
+        for _ in range(3):
+            eng.step()
+        live = [r.uid for r in eng.slot_req if r is not None]
+        assert live
+        eng._fallback_to_fp()
+        assert all(r is None for r in eng.slot_req)
+        queued = [r.uid for r in eng.scheduler.pending]
+        assert set(live) <= set(queued)
+        done = eng.run_until_drained(max_ticks=400)
+        got = {r.uid: len(r.generated) for r in done}
+        assert got == {1: 6, 2: 6, 3: 6}
+        assert eng.fp_fallbacks == 1
+        eng._fallback_to_fp()                # one-way: second call no-ops
+        assert eng.fp_fallbacks == 1
+
+
+# -----------------------------------------------------------------------------
+# Cache surgery primitives
+# -----------------------------------------------------------------------------
+
+class TestCacheSurgery:
+    def test_corrupt_kv_page_float_nans_k_only(self, model):
+        cfg, params = model
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_slots=2, max_len=64, paged=True, page_size=4))
+        bad = corrupt_kv_page(eng.state.caches, 3)
+        for name, entry in bad.items():
+            kv = entry["kv"]
+            idx = ((slice(None), 3) if name.startswith("pat") else (3,))
+            assert bool(jnp.all(jnp.isnan(kv.k[idx])))
+            assert bool(jnp.all(jnp.isfinite(kv.v[idx])))
+
+    def test_corrupt_kv_page_int8_stays_finite(self, model):
+        cfg, params = model
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_slots=2, max_len=64, paged=True, page_size=4, quant="int8"))
+        before = {n: np.array(e["kv"].k) for n, e in eng.state.caches.items()}
+        bad = corrupt_kv_page(eng.state.caches, 3)
+        for name, entry in bad.items():
+            kv = entry["kv"]
+            idx = ((slice(None), 3) if name.startswith("pat") else (3,))
+            assert kv.k.dtype == jnp.int8
+            assert not np.array_equal(np.array(kv.k[idx]),
+                                      before[name][idx])
+            # scales untouched: the corruption dequantizes to in-range
+            # finite values — silent by construction
+            assert bool(jnp.all(jnp.isfinite(entry["kv_scale"].k)))
+
+    def test_scrub_zeroes_private_pages(self, model):
+        cfg, params = model
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_slots=2, max_len=64, paged=True, page_size=4))
+        eng.submit(PROMPTS[0], max_tokens=6)
+        eng.step()
+        pages = list(eng._slot_pages[0])
+        assert pages
+        eng.state = __import__("dataclasses").replace(
+            eng.state, caches=corrupt_kv_page(eng.state.caches, pages[-1]))
+        eng._scrub_slot_storage(0)
+        for name, entry in eng.state.caches.items():
+            kv = entry["kv"]
+            idx = ((slice(None), pages[-1]) if name.startswith("pat")
+                   else (pages[-1],))
+            assert bool(jnp.all(kv.k[idx] == 0))
+            assert bool(jnp.all(kv.v[idx] == 0))
+
+
+# -----------------------------------------------------------------------------
+# Summary ratio guards (satellite: zero-division regression lock)
+# -----------------------------------------------------------------------------
+
+class TestSummaryGuards:
+    @pytest.mark.parametrize("kw", [dict(), dict(paged=True, page_size=4),
+                                    dict(paged=True, page_size=4, spec_k=2)])
+    def test_empty_engine_summary_is_all_zeros(self, model, kw):
+        cfg, params = model
+        eng = ServeEngine(params, cfg, ServeConfig(max_slots=2, max_len=64,
+                                                   **kw))
+        s = eng.summary()
+        for key in ("shed_rate", "quarantine_rate", "recovery_j_per_token",
+                    "recovery_j", "faults_injected", "quarantined", "shed",
+                    "degraded_ticks", "readback_retries", "fp_fallbacks",
+                    "compaction_pauses", "audit_failures"):
+            assert s[key] == 0, key
+        assert s["decode_tokens_per_s"] == 0.0
+
+
+# -----------------------------------------------------------------------------
+# Config / flag validation (satellite)
+# -----------------------------------------------------------------------------
+
+class TestValidation:
+    def test_engine_rejects_negative_spec_k(self, model):
+        cfg, params = model
+        with pytest.raises(ValueError, match="spec_k"):
+            ServeEngine(params, cfg, ServeConfig(
+                max_slots=2, max_len=64, paged=True, spec_k=-1))
+
+    def test_engine_rejects_misaligned_prefill_chunk(self, model):
+        cfg, params = model
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            ServeEngine(params, cfg, ServeConfig(
+                max_slots=2, max_len=64, paged=True, page_size=4,
+                prefill_chunk=6))
+
+    def test_engine_rejects_out_of_range_compact_threshold(self, model):
+        cfg, params = model
+        with pytest.raises(ValueError, match="compact_threshold"):
+            ServeEngine(params, cfg, ServeConfig(
+                max_slots=2, max_len=64, paged=True, page_size=4,
+                compact_threshold=1.5))
+
+    def _ns(self, **over):
+        ns = argparse.Namespace(
+            spec_k=0, page_size=16, prefill_chunk=0, compact_threshold=0.0,
+            num_pages=None, paged=False, fault_kind=None, fault_tick=2,
+            deadline_ticks=None)
+        vars(ns).update(over)
+        return ns
+
+    @pytest.mark.parametrize("over", [
+        dict(spec_k=-1), dict(page_size=0),
+        dict(paged=True, prefill_chunk=6, page_size=4),
+        dict(compact_threshold=2.0), dict(num_pages=0),
+        dict(spec_k=2, paged=False), dict(deadline_ticks=0),
+        dict(fault_kind="stall", fault_tick=-1)])
+    def test_launcher_rejects_bad_flags(self, over):
+        from repro.launch.serve import validate_args
+        with pytest.raises(SystemExit):
+            validate_args(argparse.ArgumentParser(), self._ns(**over))
+
+    def test_launcher_accepts_good_flags(self):
+        from repro.launch.serve import validate_args
+        validate_args(argparse.ArgumentParser(),
+                      self._ns(paged=True, prefill_chunk=32, page_size=16,
+                               spec_k=2, fault_kind="nan_logits"))
+
+
+# -----------------------------------------------------------------------------
+# Pool invariants across fault paths (hypothesis)
+# -----------------------------------------------------------------------------
+
+class TestPoolInvariantsUnderFaults:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(4, 24), st.lists(st.integers(0, 5), min_size=1,
+                                        max_size=24),
+           st.integers(0, 2 ** 31 - 1))
+    def test_spike_hold_release_cycle_keeps_audit_clean(
+            self, num_pages, ops, seed):
+        """The pool_spike fault path is alloc-hold-release interleaved
+        with normal slot traffic and publishes. Whatever the interleaving,
+        the allocator's invariants hold: audit() is clean at every step
+        and all pages return to free once every owner lets go."""
+        pool = PagePool(num_pages, 4)
+        rs = np.random.default_rng(seed)
+        pool._free = list(rs.permutation(pool._free))
+        holds, slots, pubs = [], [], []
+        parent, depth = ROOT, 0
+        for op in ops:
+            if op == 0:                       # co-tenant spike
+                got = pool.alloc(int(rs.integers(1, 4)))
+                if got is not None:
+                    holds.append(got)
+            elif op == 1 and holds:           # spike expiry
+                pool.release_all(holds.pop())
+            elif op == 2:                     # slot admission
+                got = pool.alloc(int(rs.integers(1, 3)))
+                if got is not None:
+                    slots.append(got)
+            elif op == 3 and slots:           # quarantine teardown
+                pool.release_all(slots.pop())
+            elif op == 4:                     # healthy finish: publish
+                got = pool.alloc(1)
+                if got is not None:
+                    parent = pool.publish(got[0], parent, (depth,) * 4)
+                    depth += 1
+                    pubs.append(got)
+            elif op == 5:                     # over-ask must fail clean
+                before = pool.available
+                assert pool.alloc(num_pages + 1) is None
+                assert pool.available == before
+            assert pool.audit() == []
+        for owned in holds + slots + pubs:
+            pool.release_all(owned)
+        assert pool.audit() == []
+        # every owner let go: nothing live (published pages park in the
+        # LRU, which counts as allocatable)
+        assert pool.live == 0

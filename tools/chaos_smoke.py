@@ -1,0 +1,38 @@
+"""Quick chaos smoke: every fault kind must drain with streams identical
+to the fault-free baseline. Dev tool — the real gate is
+tests/test_serve_faults.py + benchmarks/serve_bench.py --chaos."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf_lib
+from repro.serve import ServeConfig, ServeEngine
+from repro.serve.faults import FAULT_KINDS, FaultPlan
+
+cfg = tf_lib.LMConfig(name="t", d_model=48, n_heads=4, n_kv_heads=2,
+                      d_ff=96, vocab=61, pattern=(tf_lib.BlockSpec(),),
+                      repeats=2, remat="none", vocab_pad_multiple=1)
+params = tf_lib.init_lm(jax.random.PRNGKey(0), cfg, dtype=jnp.float32).params
+PROMPTS = [np.arange(15), np.arange(11) + 7, np.arange(8) + 30]
+
+
+def run(plan=None):
+    eng = ServeEngine(params, cfg, ServeConfig(
+        max_slots=2, max_len=64, paged=True, page_size=4, faults=plan))
+    for p in PROMPTS:
+        eng.submit(p, max_tokens=8)
+    done = eng.run_until_drained(max_ticks=400)
+    return eng, {r.uid: list(r.generated) for r in done}
+
+
+_, base = run()
+print("baseline:", base)
+for kind in FAULT_KINDS:
+    plan = FaultPlan.single(kind, tick=2, seed=11, slot=1)
+    eng, got = run(plan)
+    s = eng.summary()
+    ident = got == base
+    print(f"{kind:16s} inj={s['faults_injected']} quar={s['quarantined']} "
+          f"shed={s['shed']} rec_j={s['recovery_j']:.3e} identical={ident}")
+    assert ident, (kind, got, base)
+print("ALL PASS")
