@@ -14,14 +14,16 @@ bench:
 # BENCH_serve_paged.json (dense vs paged+prefix-cache on shared prefixes),
 # BENCH_serve_spec.json (plain paged vs speculative multi-token decode),
 # BENCH_serve_longctx.json (paged flash-prefill kernel: fragmented vs
-# contiguous layouts vs the chunked whole-table-gather baseline), and
+# contiguous layouts vs the chunked whole-table-gather baseline),
 # BENCH_serve_faults.json (chaos tier: one seeded fault arm per kind vs
-# the fault-free baseline, DESIGN.md §17)
+# the fault-free baseline, DESIGN.md §17), and BENCH_serve_cow.json
+# (n-best COW forks vs the duplicate-KV baseline, DESIGN.md §18)
 bench-serve:
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --quant int8
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --paged
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --paged --spec-k 4
+	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --paged --nbest 4
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --paged --long-context
 	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --chaos
 

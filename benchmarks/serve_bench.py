@@ -65,6 +65,8 @@ OUT_LONGCTX_PATH = os.path.join(os.path.dirname(__file__), "..",
                                 "BENCH_serve_longctx.json")
 OUT_FAULTS_PATH = os.path.join(os.path.dirname(__file__), "..",
                                "BENCH_serve_faults.json")
+OUT_COW_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_serve_cow.json")
 
 # ONE explicit seed feeds every stochastic input of the bench — workload
 # prompt draws AND the engines' sampling streams (ServeConfig.seed). Same
@@ -502,6 +504,114 @@ def bench_longctx() -> dict:
     return res
 
 
+def bench_cow(nbest=MAX_SLOTS) -> dict:
+    """Copy-on-write n-best tier (DESIGN.md §18): fork each request into
+    ``nbest`` decode streams sharing prompt KV pages copy-on-write, against
+    the duplicate-KV baseline that submits the same prompt ``nbest`` times
+    as independent requests (prefix cache OFF in both arms, so the baseline
+    genuinely re-prefills and re-stores every copy — the COW channel is
+    isolated from the §14 prefix-cache win). The gate: every fork's stream
+    token-identical to its independent-decode twin (greedy forks share the
+    canonical rng path), KV bytes moved strictly below the baseline's, and
+    a clean ``PagePool.audit()`` at drain."""
+    from repro.core import accounting
+    from repro.serve import ServeConfig, ServeEngine
+    cfg, params = _model()
+    # prompts long relative to the decode budget: the COW win is the
+    # duplicate PROMPT KV the forks never write, bought at ~one boundary-
+    # page copy per fork — prompt length is the lever (DESIGN.md §18).
+    # nbest defaults to MAX_SLOTS so both arms admit in the same number
+    # of full slot waves: the XLA extend path bills a fixed full-table
+    # gather per admit CALL, and mismatched wave counts would smear that
+    # scheduling artifact into the COW comparison.
+    n_req = 6
+    rng = np.random.default_rng(SEED + 19)
+    prompts = [rng.integers(0, 100, size=int(rng.integers(28, 44)))
+               for _ in range(n_req)]
+
+    def measure(submit_fn, n_expected):
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_slots=MAX_SLOTS, max_len=MAX_LEN, paged=True, page_size=8,
+            prefix_cache=False, seed=SEED))
+        submit_fn(eng)
+        eng.run_until_drained()              # warm: compile tick + buckets
+        acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        eng.accountant = acct
+        eng.metrics_log = []
+        uids = submit_fn(eng)
+        done = eng.run_until_drained()
+        assert len(done) == n_expected
+        assert eng.pool.audit() == [], eng.pool.audit()
+        assert eng.pool.live == 0
+        by_uid = {r.uid: r for r in done}
+        s = eng.summary()
+        rep = acct.report()
+        kv_bytes = sum(m.kv_bytes for m in eng.metrics_log)
+        out = {"decode_tokens": s["decode_tokens"],
+               "prefill_tokens": s["prefill_tokens"],
+               "ticks": s["ticks"],
+               "kv_bytes": kv_bytes,
+               "bytes_moved": rep["bytes_moved"],
+               "j_per_token": rep["modeled_j_per_token"],
+               "j_per_token_wall": rep["j_per_token"],
+               "cow_bytes": rep["cow_bytes"],
+               "cow_copies": rep["cow_copies"],
+               "forks": rep["forks"],
+               "fork_saved_bytes": rep["fork_saved_bytes"],
+               "fork_saved_dram_j": rep["fork_saved_dram_j"]}
+        return out, [by_uid[u] for u in uids]
+
+    def submit_cow(eng):
+        return [eng.submit(p, max_tokens=MAX_TOKENS, n_best=nbest)
+                for p in prompts]
+
+    def submit_dup(eng):
+        return [eng.submit(p, max_tokens=MAX_TOKENS)
+                for p in prompts for _ in range(nbest)]
+
+    dup_m, dup_reqs = measure(submit_dup, n_req * nbest)
+    cow_m, cow_reqs = measure(submit_cow, n_req)
+    # per-fork agreement: fork j of request i vs. its independent twin
+    # (greedy — every independent copy of a prompt decodes identically)
+    agree = total = 0
+    ident = True
+    for i, r in enumerate(cow_reqs):
+        assert r.nbest is not None and len(r.nbest) == nbest
+        for j, stream in enumerate(r.nbest):
+            twin = list(dup_reqs[i * nbest + j].generated)
+            stream = list(stream)
+            ident &= stream == twin
+            total += max(len(stream), len(twin))
+            agree += sum(1 for x, y in zip(stream, twin) if x == y)
+    res = {
+        "workload": {"requests": n_req, "nbest": nbest,
+                     "max_tokens": MAX_TOKENS, "slots": MAX_SLOTS,
+                     "page_size": 8, "prefix_cache": False,
+                     "prompt_lens": [len(p) for p in prompts],
+                     "backend": jax.default_backend()},
+        "notes": ("n-best COW forks vs. the duplicate-KV baseline "
+                  "(same prompt submitted nbest times independently, "
+                  "prefix cache off in both arms). kv_bytes_ratio > 1 is "
+                  "the duplicate prompt-KV traffic the forks avoided by "
+                  "sharing pages; cow_bytes is what fork isolation cost "
+                  "in first-write page copies (DESIGN.md §18)."),
+        "duplicate": dup_m,
+        "cow": cow_m,
+        "per_fork_agreement": agree / total if total else 1.0,
+        "streams_identical": bool(ident),
+    }
+    res["kv_bytes_ratio"] = round(dup_m["kv_bytes"] / cow_m["kv_bytes"], 3)
+    res["j_per_token_ratio"] = round(
+        dup_m["j_per_token"] / cow_m["j_per_token"], 3)
+    assert ident, "a fork diverged from its independent-decode twin"
+    assert res["kv_bytes_ratio"] > 1.0, res["kv_bytes_ratio"]
+    assert cow_m["forks"] == n_req * (nbest - 1)
+    with open(OUT_COW_PATH, "w") as f:
+        json.dump(res, f, indent=2)
+    return res
+
+
 def bench_chaos() -> dict:
     """Chaos tier (DESIGN.md §17): one arm per fault kind against the
     fault-free baseline on the SAME seeded workload, plus a deadline-shed
@@ -627,6 +737,10 @@ if __name__ == "__main__":
                          "contiguous layouts vs the chunked-gather "
                          "baseline, DESIGN.md §16) into "
                          "BENCH_serve_longctx.json")
+    ap.add_argument("--nbest", type=int, default=0,
+                    help="with --paged: benchmark n-best COW forks "
+                         "(DESIGN.md §18) vs the duplicate-KV baseline "
+                         "into BENCH_serve_cow.json (0 = off)")
     ap.add_argument("--chaos", action="store_true",
                     help="chaos tier (DESIGN.md §17): one seeded fault "
                          "arm per kind vs the fault-free baseline, gating "
@@ -655,6 +769,16 @@ if __name__ == "__main__":
               f"{out['frag_vs_contig_ratio']}x; kernel vs chunked gather "
               f"{out['kernel_vs_gather_speedup']}x; streams identical: "
               f"{out['token_agreement_vs_gather']['identical']}")
+    elif args.paged and args.nbest > 1:
+        out = bench_cow(nbest=args.nbest)
+        print(json.dumps(out, indent=2))
+        print(f"\nwrote {os.path.abspath(OUT_COW_PATH)}")
+        print(f"kv bytes {out['kv_bytes_ratio']}x lower than duplicate-KV; "
+              f"modeled J/token {out['j_per_token_ratio']}x; "
+              f"{out['cow']['forks']:.0f} forks, "
+              f"{out['cow']['cow_copies']:.0f} COW copies; per-fork "
+              f"agreement {out['per_fork_agreement']:.2%} "
+              f"(identical: {out['streams_identical']})")
     elif args.paged and args.spec_k > 0:
         out = bench_spec(spec_k=args.spec_k)
         print(json.dumps(out, indent=2))

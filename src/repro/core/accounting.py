@@ -75,6 +75,15 @@ class CarbonAccountant:
         self._draft_bytes = 0.0
         self._verify_flops = 0.0
         self._verify_bytes = 0.0
+        # copy-on-write ledger (DESIGN.md §18): pages copied when a forked
+        # slot first writes into shared KV (the price of fork isolation)
+        # vs. the duplicate prompt KV bytes and prefill FLOPs the forks
+        # did NOT spend — the n-best sustainability claim, first-class
+        self._cow_bytes = 0.0
+        self._cow_copies = 0.0
+        self._forks = 0.0
+        self._fork_saved_bytes = 0.0
+        self._fork_saved_flops = 0.0
         # resilience ledger (DESIGN.md §17): the energy cost of *recovery*
         # — re-prefilling quarantined slots' context after a fault — bills
         # first-class next to prefill and gather traffic ("On the
@@ -146,6 +155,13 @@ class CarbonAccountant:
                 getattr(metrics, "verify_flops", 0.0))
             self._verify_bytes += float(
                 getattr(metrics, "verify_bytes", 0.0))
+            self._cow_bytes += float(getattr(metrics, "cow_bytes", 0.0))
+            self._cow_copies += float(getattr(metrics, "cow_copies", 0.0))
+            self._forks += float(getattr(metrics, "forks", 0.0))
+            self._fork_saved_bytes += float(
+                getattr(metrics, "fork_saved_bytes", 0.0))
+            self._fork_saved_flops += float(
+                getattr(metrics, "fork_saved_flops", 0.0))
             self._recovery_tokens += float(
                 getattr(metrics, "recovery_tokens", 0.0))
             self._recovery_flops += float(
@@ -319,6 +335,19 @@ class CarbonAccountant:
             "prefill_gather_dram_j": energy.dram_energy_j(
                 self._prefill_gather_bytes),
             "compaction_moves": self._compaction_moves,
+            # copy-on-write tier (DESIGN.md §18): what fork isolation cost
+            # (page copies, already inside bytes_moved) vs. the duplicate
+            # prompt KV writes and prefill compute the forks avoided by
+            # sharing pages. Zero on fork-free runs.
+            "cow_bytes": self._cow_bytes,
+            "cow_copies": self._cow_copies,
+            "cow_dram_j": energy.dram_energy_j(self._cow_bytes),
+            "forks": self._forks,
+            "fork_saved_bytes": self._fork_saved_bytes,
+            "fork_saved_dram_j": energy.dram_energy_j(
+                self._fork_saved_bytes),
+            "fork_saved_compute_j": energy.compute_energy_j(
+                self._fork_saved_flops, self._spec),
             # resilience tier (DESIGN.md §17): what recovery — the
             # re-prefill of quarantined slots' context — cost in modeled
             # energy, and the degradation counters. Ratios degrade to

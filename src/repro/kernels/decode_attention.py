@@ -42,6 +42,15 @@ T lanes and the GQA ``rep`` heads flatten into one MXU M dimension, and the
 causal mask becomes per-lane (lane t attends positions <= length - T + t).
 One K sweep scores every draft position — the per-tick weight/KV-traffic
 amortization the speculative path exists for.
+
+**Tree speculation rides the same entry point** (DESIGN.md §18): every
+per-row input (q-block, page-table row, length) is independent across the
+batch dimension, so the engine folds the M branches of a token tree into
+batch rows — row ``b * M + m`` carries branch m's drafts over branch m's
+*forked* table (shared committed pages + COW-private divergence pages) —
+and one ``pallas_call`` scores all B·M branches. No branch-aware kernel is
+needed precisely because the gather is the DMA: two branches reading the
+same committed page express sharing in their tables, not in extra copies.
 """
 
 from __future__ import annotations

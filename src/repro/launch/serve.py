@@ -48,6 +48,21 @@ def validate_args(ap: argparse.ArgumentParser,
         ap.error(f"--fault-tick must be >= 0, got {args.fault_tick}")
     if args.deadline_ticks is not None and args.deadline_ticks <= 0:
         ap.error(f"--deadline-ticks must be > 0, got {args.deadline_ticks}")
+    if args.nbest < 1:
+        ap.error(f"--nbest must be >= 1, got {args.nbest}")
+    if args.nbest > 1 and not args.paged:
+        ap.error("--nbest requires --paged (n-best sampling forks the "
+                 "paged KV cache, DESIGN.md §18)")
+    if args.nbest > args.slots:
+        ap.error(f"--nbest ({args.nbest}) cannot exceed --slots "
+                 f"({args.slots}): every fork decodes concurrently")
+    if args.spec_tree_m < 1:
+        ap.error(f"--spec-tree-m must be >= 1, got {args.spec_tree_m}")
+    if args.spec_tree_m > 1 and args.spec_k <= 0:
+        ap.error("--spec-tree-m > 1 requires --spec-k > 0 (tree "
+                 "speculation rides the speculative verify pass)")
+    if args.spec_tree_m > 1 and args.spec_drafter != "ngram":
+        ap.error("--spec-tree-m > 1 drafts with the ngram drafter only")
 
 
 def main() -> None:
@@ -84,6 +99,17 @@ def main() -> None:
                     help="ngram: prompt-lookup self-drafting (near-free); "
                          "oracle: the target model drafts itself (parity "
                          "harness)")
+    ap.add_argument("--spec-tree-m", type=int, default=1,
+                    help="tree speculation: verify this many independent "
+                         "draft branches per slot in the one multi-query "
+                         "pass and commit the longest-accepted branch "
+                         "(requires --spec-k, ngram drafter; DESIGN.md "
+                         "§18; 1 = linear)")
+    ap.add_argument("--nbest", type=int, default=1,
+                    help="fork each request into this many decode streams "
+                         "sharing prompt KV pages copy-on-write; stream 0 "
+                         "is the canonical greedy stream (paged mode, "
+                         "DESIGN.md §18; 1 = off)")
     ap.add_argument("--compact-threshold", type=float, default=0.0,
                     help="compact a slot's private page suffix into a "
                          "contiguous run when its page-table fragmentation "
@@ -131,6 +157,7 @@ def main() -> None:
                                   prefill_chunk=args.prefill_chunk,
                                   spec_k=args.spec_k,
                                   spec_drafter=args.spec_drafter,
+                                  spec_tree_m=args.spec_tree_m,
                                   compact_threshold=args.compact_threshold,
                                   evict_policy=args.evict_policy,
                                   faults=(FaultPlan.single(
@@ -143,10 +170,14 @@ def main() -> None:
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=rng.integers(4, 12))
         eng.submit(prompt, max_tokens=args.max_tokens,
-                   deadline_ticks=args.deadline_ticks)
+                   deadline_ticks=args.deadline_ticks,
+                   n_best=args.nbest)
     done = eng.run_until_drained()
     for r in done:
         print(f"req {r.uid}: prompt_len={len(r.prompt)} -> {r.generated}")
+        if r.nbest is not None:
+            for i, alt in enumerate(r.nbest[1:], start=1):
+                print(f"  nbest[{i}]: {alt}")
     s = eng.summary()
     rep = acct.report()
     print(f"serve: {s['ticks']} ticks, {s['decode_tokens']:.0f} decode toks "
@@ -167,6 +198,13 @@ def main() -> None:
         print(f"long-context: {rep['prefill_gather_bytes']:.3g} prefill "
               f"gather bytes = {rep['prefill_gather_dram_j']:.3e} J DRAM, "
               f"{rep['compaction_moves']:.0f} pages compacted")
+    if args.paged and (args.nbest > 1 or s["cow_copies"] > 0):
+        print(f"copy-on-write: {s['forks']:.0f} forks, "
+              f"{s['cow_copies']:.0f} page copies "
+              f"({rep.get('cow_bytes', 0.0):.3g} bytes = "
+              f"{rep.get('cow_dram_j', 0.0):.3e} J DRAM), saved "
+              f"{rep.get('fork_saved_bytes', 0.0):.3g} duplicate KV bytes "
+              f"= {rep.get('fork_saved_dram_j', 0.0):.3e} J DRAM")
     if args.fault_kind is not None:
         print(f"chaos ({args.fault_kind}@{args.fault_tick}): "
               f"{s['faults_injected']} injected, {s['quarantined']} "

@@ -707,6 +707,24 @@ def move_pages(caches: Dict[str, PyTree], src: jnp.ndarray,
     return {k: per_key(k, v) for k, v in caches.items()}
 
 
+def cow_pages(caches: Dict[str, PyTree], page_table: jnp.ndarray,
+              src: jnp.ndarray, dst: jnp.ndarray, slot_idx: jnp.ndarray,
+              blk_idx: jnp.ndarray, entry: jnp.ndarray
+              ) -> Tuple[Dict[str, PyTree], jnp.ndarray]:
+    """Copy-on-write divergence, device half (DESIGN.md §18): duplicate
+    pool pages ``src[i] -> dst[i]`` in every layer (``move_pages``) and
+    redirect the forked slots' table entries ``page_table[slot_idx[i],
+    blk_idx[i]] = entry[i]`` in the same call. All three index vectors are
+    (M,) and sink/OOB-padded — a sink->sink copy is the identity and an
+    out-of-bounds slot row drops — so one executable serves every event
+    count. Retain-only redirects (the last co-owner adopting a page
+    without a byte copy) pass ``src == dst == sink``; the engine bills
+    only real copies as COW bytes."""
+    caches = move_pages(caches, src, dst)
+    pt = page_table.at[slot_idx, blk_idx].set(entry, mode="drop")
+    return caches, pt
+
+
 def _paged_decode_attn(p, cfg: LMConfig, spec: BlockSpec, x, cache,
                        pos: jnp.ndarray, page_table: jnp.ndarray,
                        active: jnp.ndarray):

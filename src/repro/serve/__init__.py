@@ -8,6 +8,7 @@ from repro.serve.pages import (PagePool, block_tokens,  # noqa: F401
                                fragmentation)
 from repro.serve.quality import (generation_agreement,  # noqa: F401
                                  run_workload, token_agreement)
-from repro.serve.spec import ngram_draft, speculative_accept  # noqa: F401
+from repro.serve.spec import (ngram_draft, ngram_draft_tree,  # noqa: F401
+                              speculative_accept)
 from repro.serve.reference import ReferenceEngine  # noqa: F401
 from repro.serve.scheduler import Scheduler, SchedulerConfig  # noqa: F401

@@ -42,6 +42,10 @@ from repro.train.ft import Ewma
 
 PyTree = Any
 
+# sentinel stream for a fork cancelled at activation (parent finished on
+# its first token): resolved to a copy of stream 0 when the group closes
+_FORK_MIRROR = object()
+
 
 @dataclasses.dataclass
 class ServeConfig:
@@ -83,6 +87,16 @@ class ServeConfig:
     # drafts greedily — k extra decode passes, the accept-all parity
     # harness, not an energy win (serve/spec.py).
     spec_drafter: str = "ngram"
+    # tree speculation (DESIGN.md §18): draft spec_tree_m independent
+    # k-token branches per slot per tick over COW-forked page tables and
+    # verify ALL of them in the one multi-query pass (branches fold into
+    # batch rows); the longest-accepted branch commits, the rest release.
+    # 1 = linear speculation (the §15 behavior, bit-identical). Requires
+    # spec_k > 0. Branches beyond the first apply to greedy slots only —
+    # temperature slots keep the distribution-exact linear path on branch
+    # 0, because multi-branch rejection sampling would need a joint
+    # residual scheme to stay unbiased.
+    spec_tree_m: int = 1
     # long-context tier (DESIGN.md §16):
     # compact a live slot's private page suffix into a contiguous run when
     # its table's fragmentation score (serve/pages.py:fragmentation)
@@ -115,6 +129,17 @@ class Request:
     # ``submit_tick``; it also feeds the scheduler's queue-aging term.
     deadline_ticks: Optional[int] = None
     submit_tick: int = -1
+    # n-best sampling over COW forks (DESIGN.md §18): a submission with
+    # n_best > 1 admits ONE prefill and fans out to n_best slots sharing
+    # the prompt's committed pages; the parent request completes only when
+    # every fork's stream is in, with ``nbest`` holding all of them
+    # (``generated`` aliases stream 0). Fork-internal requests (children,
+    # continuations of forks) carry ``fork_group`` (the parent's uid) and
+    # their ``fork_idx``; they are never returned to the caller directly.
+    n_best: int = 1
+    nbest: Optional[List[List[int]]] = None
+    fork_group: Optional[int] = None
+    fork_idx: int = 0
 
 
 @dataclasses.dataclass
@@ -173,6 +198,17 @@ class StepMetrics:
     recovery_bytes: float = 0.0
     degraded: int = 0               # 1 if any degradation rung was active
     readback_retries: int = 0       # re-reads of a garbled/dropped readback
+    # copy-on-write tier (DESIGN.md §18): first-class channels for the
+    # fork economy. ``cow_bytes`` is real traffic (a shared page copied
+    # before a divergent write — read + write of one page, also included
+    # in ``kv_bytes``); ``fork_saved_*`` is the duplicate-KV bill a fork
+    # did NOT pay (the prompt KV bytes + prefill FLOPs an independent
+    # duplicate admission of the same stream would have spent).
+    cow_bytes: float = 0.0
+    cow_copies: int = 0
+    forks: int = 0                  # fork children activated this tick
+    fork_saved_bytes: float = 0.0
+    fork_saved_flops: float = 0.0
 
     @property
     def bytes_moved(self) -> float:
@@ -280,6 +316,16 @@ class ServeEngine:
         if serve_cfg.spec_drafter not in spec_lib.DRAFTERS:
             raise ValueError(f"unknown drafter {serve_cfg.spec_drafter!r}; "
                              f"expected one of {spec_lib.DRAFTERS}")
+        if serve_cfg.spec_tree_m < 1:
+            raise ValueError(f"spec_tree_m must be >= 1, got "
+                             f"{serve_cfg.spec_tree_m}")
+        if serve_cfg.spec_tree_m > 1 and serve_cfg.spec_k <= 0:
+            raise ValueError("tree speculation (spec_tree_m > 1) rides the "
+                             "speculative verify pass; set spec_k > 0")
+        if serve_cfg.spec_tree_m > 1 and serve_cfg.spec_drafter != "ngram":
+            raise ValueError("tree speculation drafts with the ngram "
+                             "drafter only (the oracle drafter is a linear "
+                             "parity harness)")
         if (serve_cfg.paged and serve_cfg.prefill_chunk
                 and serve_cfg.prefill_chunk % serve_cfg.page_size != 0):
             raise ValueError(
@@ -315,6 +361,13 @@ class ServeEngine:
         self.host_readbacks = 0
         self.admit_trace_counts: Dict[int, int] = {}
         self.compact_trace_count = 0
+        self.cow_trace_count = 0
+        self.fork_trace_count = 0
+        # n-best fork groups (DESIGN.md §18) survive runtime rebuilds: a
+        # group's members may be requeued as continuations by the fp
+        # fallback and finish on the rebuilt engine.
+        # group uid -> {"req": parent, "k": fan-out, "streams": {idx: toks}}
+        self._fork_groups: Dict[int, Dict[str, Any]] = {}
         self.last_metrics: Optional[StepMetrics] = None
         self.metrics_log: List[StepMetrics] = []
         # chaos tier state (DESIGN.md §17)
@@ -412,6 +465,22 @@ class ServeEngine:
         # in-flight chunked prefills {slot: {"req", "next", "plen", ...}}
         self._slot_pages: List[List[int]] = [[] for _ in range(b)]
         self._prefilling: Dict[int, Dict[str, Any]] = {}
+        # COW fork mirrors (DESIGN.md §18), slot-scoped so a runtime
+        # rebuild resets them: child slots reserved for a parent still
+        # mid-prefill (excluded from the active set until the fork), and
+        # parent slot -> its reserved children
+        self._fork_wait: Dict[int, int] = {}
+        self._fork_children: Dict[int, List[int]] = {}
+        # tree speculation: this tick's staged branch windows,
+        # slot -> (window_lo, window_hi, [branch pages or None] * (m-1))
+        self._tree_branches: Dict[int, Tuple[int, int, list]] = {}
+        # per-tick COW accumulators (reset in step(), billed via
+        # StepMetrics)
+        self._tick_cow_bytes = 0.0
+        self._tick_cow_copies = 0
+        self._tick_forks = 0
+        self._tick_fork_saved_bytes = 0.0
+        self._tick_fork_saved_flops = 0.0
         # any injector page holds referenced the previous pool
         self._spike_holds = []
         # cached all-zero poison vector: the fault-free tick passes it by
@@ -451,6 +520,9 @@ class ServeEngine:
         self._build_admit()
         if serve_cfg.paged and serve_cfg.compact_threshold > 0.0:
             self._build_compact()
+        if serve_cfg.paged:
+            self._build_cow()
+            self._build_fork()
 
     # -- compiled paths -------------------------------------------------------
 
@@ -616,6 +688,125 @@ class ServeEngine:
                                 bad.astype(jnp.int32)])
             return new_st, packed
 
+        m = scfg.spec_tree_m
+
+        def tree_tick(params, st: DeviceState, poison, btables, bvalid
+                      ) -> Tuple[DeviceState, jnp.ndarray]:
+            """Tree-speculative tick (DESIGN.md §18): draft ``m``
+            independent k-token branches per slot, fold them into batch
+            rows of ONE multi-query verify pass over COW-forked page
+            tables, and commit the branch that accepts the longest
+            prefix. Returns (state, (4, B) int32 packed
+            [done, emitted, bad, winner]) — still ONE host readback."""
+            self.tick_trace_count += 1
+            b = st.tok.shape[0]
+            k = spec_k
+            active = st.active
+            drafts = spec_lib.ngram_draft_tree(st.hist, st.pos, k, m)
+            # branch 0 rides the slot's own table and temperature; extra
+            # branches are valid only where the host staged pages AND the
+            # slot is greedy
+            valid = jnp.concatenate(
+                [jnp.ones((b, 1), bool),
+                 bvalid & (st.temp <= 0.0)[:, None]], axis=1)   # (B, M)
+            tables = jnp.concatenate(
+                [st.page_table[:, None], btables], axis=1)      # (B,M,NB)
+            chunk = jnp.concatenate(
+                [jnp.broadcast_to(st.tok[:, None, None], (b, m, 1)),
+                 drafts], axis=2)                               # (B,M,K+1)
+            act_f = (active[:, None] & valid).reshape(b * m)
+            # branches fold into batch rows: row b*M + j carries branch
+            # j's drafts over branch j's table — one weight stream scores
+            # the whole tree (kernels/decode_attention.py)
+            logits_f, caches = tf_lib.paged_verify_step(
+                params, cfg, chunk.reshape(b * m, k + 1),
+                jnp.broadcast_to(st.pos[:, None], (b, m)).reshape(b * m),
+                tables.reshape(b * m, -1), st.caches, active=act_f)
+            logits = (logits_f.reshape(b, m, k + 1, -1)
+                      + poison[:, None, None, None])
+            # sentinel: non-finite logits in ANY valid branch void the
+            # slot's tick — poison and committed-KV corruption hit every
+            # branch alike, and a partially-poisoned accept would be
+            # unauditable
+            fin = jnp.all(jnp.isfinite(logits), axis=(2, 3))    # (B, M)
+            bad = active & jnp.any(valid & ~fin, axis=1)
+            ok = active & ~bad
+            # per-branch accept; extra branches run greedy (temp 0), and
+            # branch 0 — the distribution-bearing lane — is the one whose
+            # key advance the slot keeps (greedy lanes consume none)
+            temp_f = jnp.concatenate(
+                [st.temp[:, None],
+                 jnp.zeros((b, m - 1), st.temp.dtype)], axis=1)
+            keys_f = jnp.broadcast_to(st.rng[:, None], (b, m, 2))
+            n_acc_f, fix_f, keys_new = spec_lib.speculative_accept(
+                logits.reshape(b * m, k + 1, -1),
+                drafts.reshape(b * m, k),
+                keys_f.reshape(b * m, 2), temp_f.reshape(b * m))
+            n_acc = n_acc_f.reshape(b, m)
+            fix = fix_f.reshape(b, m)
+            rng_new = keys_new.reshape(b, m, 2)[:, 0]
+            rng_new = jnp.where(ok[:, None], rng_new, st.rng)
+            rem = jnp.minimum(st.budget - st.gen, max_len - 1 - st.pos)
+            n_emit = jnp.clip(jnp.minimum(n_acc + 1, rem[:, None]),
+                              1, k + 1)                         # (B, M)
+            t3 = jnp.arange(k + 1, dtype=jnp.int32)[None, None]  # (1,1,K+1)
+            drafts_pad = jnp.concatenate(
+                [drafts, jnp.zeros((b, m, 1), jnp.int32)], axis=2)
+            emitted = jnp.where(t3 < n_acc[:, :, None], drafts_pad,
+                                fix[:, :, None])                # (B,M,K+1)
+            if eos_id >= 0:
+                eos_lane = jnp.min(jnp.where(emitted == eos_id, t3,
+                                             k + 1), axis=2)
+                n_emit = jnp.minimum(n_emit, eos_lane + 1)
+            # winner: the valid branch committing the most tokens; argmax
+            # takes the FIRST max, so ties fall to branch 0 (the linear
+            # stream — a tie-tick is bit-identical to spec_tick)
+            n_eff = jnp.where(valid, n_emit, 0)
+            w = jnp.argmax(n_eff, axis=1).astype(jnp.int32)     # (B,)
+            emitted_w = jnp.take_along_axis(
+                emitted, w[:, None, None], axis=1)[:, 0]        # (B, K+1)
+            n_emit_w = jnp.take_along_axis(n_emit, w[:, None],
+                                           axis=1)[:, 0]
+            table_w = jnp.take_along_axis(tables, w[:, None, None],
+                                          axis=1)[:, 0]         # (B, NB)
+            t_idx = jnp.arange(k + 1, dtype=jnp.int32)[None]    # (1, K+1)
+            lane = t_idx < n_emit_w[:, None]
+            vmask = lane & ok[:, None]
+            rows2 = jnp.broadcast_to(jnp.arange(b)[:, None], (b, k + 1))
+            cap = st.out_buf.shape[1]
+            out_buf = st.out_buf.at[
+                rows2, jnp.where(vmask, st.gen[:, None] + t_idx, cap)
+            ].set(emitted_w, mode="drop")
+            hist = st.hist.at[
+                rows2, jnp.where(vmask, st.pos[:, None] + 1 + t_idx,
+                                 st.hist.shape[1])
+            ].set(emitted_w, mode="drop")
+            n_step = jnp.where(ok, n_emit_w, 0)
+            last = jnp.take_along_axis(
+                emitted_w, jnp.maximum(n_emit_w - 1, 0)[:, None],
+                axis=1)[:, 0]
+            tok_new = jnp.where(ok, last, st.tok)
+            pos_new = st.pos + n_step
+            gen_new = st.gen + n_step
+            hit_eos = ((tok_new == eos_id) if eos_id >= 0
+                       else jnp.zeros_like(active))
+            done = ok & (hit_eos | (gen_new >= st.budget)
+                         | (pos_new >= max_len - 1))
+            # the winner's window pages become the slot's pages IN the
+            # tick; the host mirrors the swap from the packed winner row
+            page_table = jnp.where(ok[:, None], table_w, st.page_table)
+            new_st = DeviceState(
+                caches=caches, tok=tok_new, pos=pos_new, gen=gen_new,
+                budget=st.budget, active=active & ~done & ~bad,
+                temp=st.temp, rng=rng_new, out_buf=out_buf,
+                page_table=page_table, hist=hist)
+            packed = jnp.stack([done.astype(jnp.int32), n_step,
+                                bad.astype(jnp.int32),
+                                jnp.where(ok, w, 0)])
+            return new_st, packed
+
+        if spec_k > 0 and m > 1:
+            return tree_tick
         return spec_tick if spec_k > 0 else tick
 
     def _build_admit(self):
@@ -761,7 +952,8 @@ class ServeEngine:
 
     def submit(self, prompt: np.ndarray, max_tokens: int = 16,
                temperature: Optional[float] = None,
-               deadline_ticks: Optional[int] = None) -> int:
+               deadline_ticks: Optional[int] = None,
+               n_best: int = 1) -> int:
         prompt = np.asarray(prompt, np.int32)
         if prompt.size >= self.scfg.max_len:
             raise ValueError(f"prompt length {prompt.size} >= max_len "
@@ -769,21 +961,31 @@ class ServeEngine:
         if deadline_ticks is not None and deadline_ticks <= 0:
             raise ValueError(f"deadline_ticks must be > 0, got "
                              f"{deadline_ticks}")
+        if n_best < 1:
+            raise ValueError(f"n_best must be >= 1, got {n_best}")
+        if n_best > 1 and not self.scfg.paged:
+            raise ValueError("n-best sampling forks the paged KV cache "
+                             "(DESIGN.md §18); set paged=True")
+        if n_best > self.scfg.max_slots:
+            raise ValueError(f"n_best ({n_best}) exceeds max_slots "
+                             f"({self.scfg.max_slots}): every fork of one "
+                             f"group decodes concurrently")
         if self.pool is not None:
             # a request whose worst-case page demand can never be met would
             # livelock admission (fits() false forever) — reject it here
-            need = self._pages_needed(prompt.size, max_tokens)
+            need = self._pages_needed_group(prompt.size, max_tokens, n_best)
             if need > self.pool.num_pages:
                 raise ValueError(
                     f"request needs {need} pages (prompt {prompt.size} + "
-                    f"max_tokens {max_tokens}) but the pool has only "
-                    f"{self.pool.num_pages}; raise num_pages or lower "
-                    f"max_tokens")
+                    f"max_tokens {max_tokens} x n_best {n_best}) but the "
+                    f"pool has only {self.pool.num_pages}; raise num_pages "
+                    f"or lower max_tokens")
         self._uid += 1
         self.scheduler.submit(Request(self._uid, prompt, max_tokens,
                                       temperature,
                                       deadline_ticks=deadline_ticks,
-                                      submit_tick=self._tick_idx))
+                                      submit_tick=self._tick_idx,
+                                      n_best=n_best))
         return self._uid
 
     @property
@@ -831,6 +1033,16 @@ class ServeEngine:
         emit_ok = bool(((arr[1] >= 0)
                         & (arr[1] <= self._cur_spec_k + 1)).all())
         return flags_ok and emit_ok
+
+    def _validate_tree_packed(self, arr: np.ndarray) -> bool:
+        if arr.ndim != 2 or arr.shape[0] != 4:
+            return False
+        flags_ok = bool(np.isin(arr[(0, 2), :], (0, 1)).all())
+        emit_ok = bool(((arr[1] >= 0)
+                        & (arr[1] <= self._cur_spec_k + 1)).all())
+        win_ok = bool(((arr[3] >= 0)
+                       & (arr[3] < self.scfg.spec_tree_m)).all())
+        return flags_ok and emit_ok and win_ok
 
     # -- chaos tier: fault application + recovery (DESIGN.md §17) -------------
 
@@ -903,12 +1115,21 @@ class ServeEngine:
         if self.pool is not None:
             pages = self._slot_pages[slot]
             lo = self.pool.movable_suffix(pages)
-            idx = pages[lo:]
-            if not idx:
+            if not pages[lo:]:
                 return
-            sel = jnp.asarray(idx, jnp.int32)
+            self._scrub_pages(pages[lo:])
         else:
-            sel = jnp.asarray([slot], jnp.int32)
+            self._scrub_sel(jnp.asarray([slot], jnp.int32))
+
+    def _scrub_pages(self, pages: List[int]) -> None:
+        """Zero a set of pool pages about to be freed — same invariant as
+        ``_scrub_slot_storage`` (free storage is never NaN), reachable for
+        page lists that belong to no slot (a quarantined slot's ephemeral
+        tree-branch windows, DESIGN.md §18)."""
+        if pages:
+            self._scrub_sel(jnp.asarray(pages, jnp.int32))
+
+    def _scrub_sel(self, sel: jnp.ndarray) -> None:
         caches = {}
         for name, entry in self.state.caches.items():
             e2 = dict(entry)
@@ -949,13 +1170,32 @@ class ServeEngine:
             max_tokens=max(rec["max_tokens"] - len(rec["tokens"]), 1),
             temperature=req.temperature,
             deadline_ticks=req.deadline_ticks,
-            submit_tick=self._tick_idx)
+            submit_tick=self._tick_idx,
+            # a captured fork member stays a member (its finish banks into
+            # the group), but never re-forks (n_best stays 1)
+            fork_group=req.fork_group, fork_idx=req.fork_idx)
         self._recovering.add(req.uid)
         # teardown mirrors: the slot is free next tick (the device side
         # already deactivated it, or the runtime is being rebuilt)
         self.slot_req[slot] = None
         self._host_gen[slot] = 0
         self._prefilling.pop(slot, None)
+        self._fork_wait.pop(slot, None)
+        kids = self._fork_children.pop(slot, None)
+        if kids is not None:
+            # children reserved but never forked (parent captured
+            # mid-prefill, e.g. by the fp fallback): requeue them as
+            # independent admissions — their streams still bank into the
+            # group, only the sharing is lost
+            requeue = []
+            for kid in kids:
+                child = self.slot_req[kid]
+                self.slot_req[kid] = None
+                self._fork_wait.pop(kid, None)
+                if child is not None:
+                    child.submit_tick = self._tick_idx
+                    requeue.append(child)
+            self.scheduler.requeue_front(requeue)
         self._scrub_slot_storage(slot)
         if self.pool is not None and self._slot_pages[slot]:
             # release WITHOUT publishing: pages of a faulted slot may hold
@@ -990,7 +1230,17 @@ class ServeEngine:
         self._retry_after.pop(req.uid, None)
         self._fit_checked.discard(req.uid)
         req.done = True
-        finished.append(req)
+        if req.fork_group is not None:
+            # a shed fork member still reports: the group must close
+            self._record_fork_stream(req.fork_group, req.fork_idx,
+                                     req.generated, finished)
+        elif req.n_best > 1:
+            # shed before admission ever forked (no group exists): the
+            # caller still sees an n-best-shaped result
+            req.nbest = [list(req.generated) for _ in range(req.n_best)]
+            finished.append(req)
+        else:
+            finished.append(req)
         self.n_shed += 1
         self._tick_shed += 1
 
@@ -1039,7 +1289,14 @@ class ServeEngine:
             req.max_tokens = rec["max_tokens"]
             req.generated = list(rec["tokens"]) + req.generated
             self._recovering.discard(req.uid)
-        finished.append(req)
+        if req.fork_group is not None:
+            # fork-group member (DESIGN.md §18): the stream banks into the
+            # group; the caller receives the PARENT request once every
+            # fork has reported
+            self._record_fork_stream(req.fork_group, req.fork_idx,
+                                     req.generated, finished)
+        else:
+            finished.append(req)
         self.n_finished_ok += 1
 
     # -- admission ------------------------------------------------------------
@@ -1175,6 +1432,304 @@ class ServeEngine:
             return len(movable)
         return 0
 
+    # -- copy-on-write forks (DESIGN.md §18) ----------------------------------
+
+    def _build_cow(self):
+        """One jitted device call per COW/boundary-copy batch: copy the
+        listed pages in every layer's pool and redirect the owning slots'
+        page-table entries, donated like the tick. Events are padded to a
+        pow2 bucket with sink->sink identity copies (OOB slot ids drop the
+        table write), so a handful of executables serves every batch
+        size."""
+        def cow(state: DeviceState, src, dst, slot_idx, blk_idx, entry):
+            self.cow_trace_count += 1   # python side effect: trace count
+            caches, pt = tf_lib.cow_pages(
+                state.caches, state.page_table, src, dst, slot_idx,
+                blk_idx, entry)
+            return dataclasses.replace(state, caches=caches, page_table=pt)
+        self._cow_exe = jax.jit(cow, donate_argnums=(0,))
+
+    def _cow_call(self, events: List[Tuple[int, int, int, int, int]]
+                  ) -> None:
+        """Apply a batch of ``(src, dst, slot, blk, entry)`` page events in
+        ONE device call. ``src == dst == sink`` rows update only the table
+        (a retain-only redirect); OOB slot rows copy only the page (an
+        ephemeral branch window that lives outside any slot's table)."""
+        n = _bucket_len(len(events))
+        sink = self.pool.sink
+        nslots = self.scfg.max_slots
+        src = np.full(n, sink, np.int32)
+        dst = np.full(n, sink, np.int32)
+        sl = np.full(n, nslots + 1, np.int32)
+        bl = np.zeros(n, np.int32)
+        en = np.full(n, sink, np.int32)
+        for j, (s, d, slot, blk, entry) in enumerate(events):
+            src[j], dst[j], sl[j], bl[j], en[j] = s, d, slot, blk, entry
+        self.state = self._cow_exe(
+            self.state, jnp.asarray(src), jnp.asarray(dst),
+            jnp.asarray(sl), jnp.asarray(bl), jnp.asarray(en))
+
+    def _build_fork(self):
+        """One jitted device call per fork group activation: broadcast the
+        parent's slot row (pending token, position, budget, output ring,
+        drafter history) to every child slot, install each child's own
+        page table and PRNG key. No cache bytes move — the children READ
+        the shared prompt pages through their tables; that is the whole
+        point. ``dsts`` is padded to max_slots with OOB ids (dropped)."""
+        def fork(state: DeviceState, src, dsts, tables, rngs):
+            self.fork_trace_count += 1  # python side effect: trace count
+            f = dsts.shape[0]
+            def row(x):
+                return x.at[dsts].set(
+                    jnp.broadcast_to(x[src], (f,) + x.shape[1:]),
+                    mode="drop")
+            return DeviceState(
+                caches=state.caches,
+                tok=row(state.tok), pos=row(state.pos),
+                gen=row(state.gen), budget=row(state.budget),
+                active=row(state.active), temp=row(state.temp),
+                rng=state.rng.at[dsts].set(rngs, mode="drop"),
+                out_buf=row(state.out_buf),
+                page_table=state.page_table.at[dsts].set(tables,
+                                                         mode="drop"),
+                hist=row(state.hist))
+        self._fork_exe = jax.jit(fork, donate_argnums=(0,))
+
+    def _fork_slots(self, parent_slot: int, kids: List[int]) -> None:
+        """Activate a fork group (DESIGN.md §18): retain the parent's
+        committed prompt pages into each child's table (no bytes move),
+        give each child a private decode tail, and copy the parent's slot
+        row to every child in ONE jitted call. A child whose tail
+        allocation loses a pool race is requeued as an independent
+        admission — its stream still banks into the group, only the
+        sharing is lost."""
+        scfg = self.scfg
+        ps = scfg.page_size
+        nslots, nb = scfg.max_slots, self._blocks_per_slot
+        parent = self.slot_req[parent_slot]
+        plen = len(parent.prompt)
+        pages = self._slot_pages[parent_slot]
+        # blocks holding committed prompt KV (the last may be partial —
+        # shared under COW, diverging writers copy it at the barrier)
+        n_shared = -(-plen // ps)
+        tail = len(pages) - n_shared
+        dsts, tables, rngs, requeue = [], [], [], []
+        for kid in kids:
+            child = self.slot_req[kid]
+            self._fork_wait.pop(kid, None)
+            shared = self.pool.fork(pages[:n_shared])
+            fresh = self.pool.alloc(tail)
+            if fresh is None:
+                self.pool.release_all(shared)
+                self.slot_req[kid] = None
+                child.submit_tick = self._tick_idx
+                requeue.append(child)
+                continue
+            kid_pages = shared + fresh
+            self._slot_pages[kid] = kid_pages
+            self._host_gen[kid] = 1
+            row = kid_pages + [self.pool.sink] * (nb - len(kid_pages))
+            dsts.append(kid)
+            tables.append(row[:nb])
+            rngs.append(np.asarray(
+                jax.random.fold_in(self._base_key, child.uid)))
+            # the duplicate-KV bill this fork did NOT pay: an independent
+            # admission of the same stream would re-prefill the prompt
+            self._tick_forks += 1
+            self._tick_fork_saved_bytes += self._kv_token_bytes * plen
+            self._tick_fork_saved_flops += costing.prefill_span_flops(
+                self._matmul_elems, self._n_attn, self._attn_dims,
+                0, plen)
+        if requeue:
+            self.scheduler.requeue_front(requeue)
+        if not dsts:
+            return
+        d = np.full(nslots, nslots + 1, np.int32)
+        t = np.full((nslots, nb), self.pool.sink, np.int32)
+        r = np.zeros((nslots, 2), np.uint32)
+        d[:len(dsts)] = dsts
+        t[:len(dsts)] = tables
+        r[:len(dsts)] = rngs
+        self.state = self._fork_exe(
+            self.state, jnp.int32(parent_slot), jnp.asarray(d),
+            jnp.asarray(t), jnp.asarray(r))
+
+    def _cancel_fork(self, parent_slot: int, kids: List[int]) -> None:
+        """The parent finished AT activation (budget 1 / EOS on its first
+        token): every fork would replay the identical one-token stream, so
+        the reserved child slots free and the group banks mirror streams
+        resolved against stream 0 when the parent's finish records it."""
+        gid = self.slot_req[parent_slot].fork_group
+        g = self._fork_groups.get(gid)
+        for kid in kids:
+            child = self.slot_req[kid]
+            self.slot_req[kid] = None
+            self._fork_wait.pop(kid, None)
+            if g is not None and child is not None:
+                g["streams"][child.fork_idx] = _FORK_MIRROR
+
+    def _record_fork_stream(self, gid: int, idx: int, toks: List[int],
+                            finished: List[Request]) -> None:
+        """Bank one fork's finished stream into its group; once every fork
+        has reported, the PARENT request completes with ``nbest`` holding
+        all streams in fork order (``generated`` aliases stream 0)."""
+        g = self._fork_groups.get(gid)
+        if g is None:       # defensive: a stray continuation after a shed
+            return
+        g["streams"][idx] = toks
+        s = g["streams"]
+        if len(s) < g["k"]:
+            return
+        base = s.get(0, [])
+        streams = [list(base) if s.get(i, []) is _FORK_MIRROR
+                   else list(s.get(i, [])) for i in range(g["k"])]
+        parent = g["req"]
+        parent.nbest = streams
+        parent.generated = streams[0]
+        parent.done = True
+        del self._fork_groups[gid]
+        finished.append(parent)
+
+    def _cow_barrier(self, active: List[int]) -> List[int]:
+        """Pre-tick write barrier (DESIGN.md §18): every page the coming
+        tick may write — the blocks covering positions
+        ``[pos, pos + spec_k]`` per decoding slot — must be PRIVATE to its
+        slot. A shared (forked) or published page copies first
+        (``PagePool.cow_write``), billed as COW traffic; pages without
+        committed content redirect table-only. A pool-exhausted copy
+        quarantines its slot (with its device lane force-deactivated so
+        the tick cannot touch the shared page) rather than corrupt its
+        siblings' streams. Returns the surviving active list."""
+        ps = self.scfg.page_size
+        k = self._cur_spec_k
+        events: List[Tuple[int, int, int, int, int]] = []
+        drop: List[int] = []
+        for slot in active:
+            req = self.slot_req[slot]
+            pages = self._slot_pages[slot]
+            pos = len(req.prompt) + self._host_gen[slot] - 1
+            wlo = pos // ps
+            whi = min((pos + k) // ps, len(pages) - 1)
+            for blk in range(wlo, whi + 1):
+                p = pages[blk]
+                if self.pool.writable(p):
+                    continue
+                res = self.pool.cow_write(p)
+                if res is None:
+                    drop.append(slot)
+                    break
+                new, copied = res
+                pages[blk] = new
+                if copied:
+                    self._tick_cow_copies += 1
+                    self._tick_cow_bytes += (2.0 * ps
+                                             * self._kv_token_bytes)
+                # committed content below pos copies; later blocks hold
+                # nothing yet, so only the table entry moves
+                has_content = blk * ps < pos
+                events.append((p if has_content else self.pool.sink,
+                               new if has_content else self.pool.sink,
+                               slot, blk, new))
+        for slot in drop:
+            # deactivate the device lane BEFORE teardown: without this the
+            # tick would still write the page its siblings share
+            self.state = dataclasses.replace(
+                self.state,
+                active=self.state.active.at[slot].set(False))
+            self._quarantine_slot(slot)
+        if drop:
+            events = [e for e in events if e[2] not in drop]
+            active = [s for s in active if s not in drop]
+        if events:
+            self._cow_call(events)
+        return active
+
+    def _prepare_tree(self, active: List[int]
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Stage this tick's ephemeral branch windows (DESIGN.md §18): for
+        each greedy decoding slot, each of the ``spec_tree_m - 1`` extra
+        branches gets private copies of the write-window blocks in a
+        forked table row. Only the boundary block holds committed KV (the
+        COW barrier just privatized it), so at most one page copies per
+        branch — billed as COW traffic. A pool race drops that branch lane
+        (``bvalid`` False) and the slot's tick degrades to the linear
+        branch-0 path. Returns the device ``(btables, bvalid)`` tick
+        arguments; the staged pages park in ``_tree_branches`` for
+        ``_commit_tree``."""
+        scfg = self.scfg
+        m, k, ps = scfg.spec_tree_m, self._cur_spec_k, scfg.page_size
+        nslots, nb = scfg.max_slots, self._blocks_per_slot
+        sink = self.pool.sink
+        btables = np.full((nslots, m - 1, nb), sink, np.int32)
+        bvalid = np.zeros((nslots, m - 1), bool)
+        self._tree_branches = {}
+        events: List[Tuple[int, int, int, int, int]] = []
+        for slot in active:
+            req = self.slot_req[slot]
+            temp = (scfg.temperature if req.temperature is None
+                    else req.temperature)
+            if temp > 0.0:
+                # temperature slots keep the distribution-exact linear
+                # path on branch 0 (multi-branch rejection sampling would
+                # need a joint residual scheme to stay unbiased)
+                continue
+            pages = self._slot_pages[slot]
+            pos = len(req.prompt) + self._host_gen[slot] - 1
+            wlo = pos // ps
+            whi = min((pos + k) // ps, len(pages) - 1)
+            width = whi - wlo + 1
+            row = pages + [sink] * (nb - len(pages))
+            branches: List[Optional[List[int]]] = []
+            for i in range(m - 1):
+                bp = self.pool.alloc(width)
+                branches.append(bp)
+                if bp is None:
+                    continue
+                brow = list(row[:nb])
+                brow[wlo:whi + 1] = bp
+                btables[slot, i] = brow
+                bvalid[slot, i] = True
+                if pos - wlo * ps > 0:
+                    # the boundary block holds committed KV the branch
+                    # must attend through its own table: copy it (OOB
+                    # slot id — no table row owns branch pages)
+                    events.append((pages[wlo], bp[0], nslots + 1, 0,
+                                   sink))
+                    self._tick_cow_copies += 1
+                    self._tick_cow_bytes += (2.0 * ps
+                                             * self._kv_token_bytes)
+            self._tree_branches[slot] = (wlo, whi, branches)
+        if events:
+            self._cow_call(events)
+        return jnp.asarray(btables), jnp.asarray(bvalid)
+
+    def _commit_tree(self, bad_mask: np.ndarray, winners: np.ndarray
+                     ) -> None:
+        """Resolve this tick's staged branches from the packed winner row:
+        the winning branch's window pages are adopted into the slot's page
+        list (the device table already switched inside the tick), the
+        replaced window pages (private + unpublished, per the barrier)
+        free immediately, and every losing branch releases. A
+        sentinel-flagged slot adopts nothing; its branch pages are
+        scrubbed before release (the bad verify pass wrote non-finite KV
+        into them, and free storage must never be NaN)."""
+        for slot, (wlo, whi, branches) in self._tree_branches.items():
+            w = int(winners[slot])
+            bad = bool(bad_mask[slot])
+            for i, bp in enumerate(branches):
+                if bp is None:
+                    continue
+                if not bad and w == i + 1:
+                    pages = self._slot_pages[slot]
+                    old = pages[wlo:whi + 1]
+                    pages[wlo:whi + 1] = bp
+                    self.pool.release_all(old)
+                else:
+                    if bad:
+                        self._scrub_pages(bp)
+                    self.pool.release_all(bp)
+        self._tree_branches = {}
+
     # -- paged admission (DESIGN.md §14) --------------------------------------
 
     def _pages_needed(self, prompt_len: int, max_tokens: int) -> int:
@@ -1187,6 +1742,36 @@ class ServeEngine:
         ctx = min(prompt_len + max_tokens + self.scfg.spec_k,
                   self.scfg.max_len)
         return -(-ctx // self.scfg.page_size)
+
+    def _tree_extra(self) -> int:
+        """Per-slot *transient* page demand of tree speculation (DESIGN.md
+        §18): each of the ``spec_tree_m - 1`` extra branches claims a
+        private copy of the write window for one tick — at most
+        ``(ps - 1 + k) // ps + 1`` pages, the worst alignment of a
+        k+1-token span. Booked by the admission gate (so steady-state
+        ticks can stage their branches) but never attached to a slot;
+        a pool race at staging time degrades that slot's tick to the
+        linear branch-0 path instead of failing."""
+        scfg = self.scfg
+        if scfg.spec_tree_m <= 1:
+            return 0
+        ps = scfg.page_size
+        return (scfg.spec_tree_m - 1) * ((ps - 1 + scfg.spec_k) // ps + 1)
+
+    def _pages_needed_group(self, prompt_len: int, max_tokens: int,
+                            n_best: int) -> int:
+        """Worst-case page demand of an ``n_best``-way fork group: the
+        parent's full demand plus, per child, a private decode tail (the
+        blocks past the shared committed prompt) and one COW copy of the
+        partial boundary block. ``prompt_len // ps`` is exactly the shared
+        FULL blocks — the partial boundary block is shared at fork time but
+        each diverging writer (except the last, which owns it outright)
+        pays one copy, so it counts against every child. Tree mode adds
+        each decoding slot's transient branch windows on top."""
+        need = self._pages_needed(prompt_len, max_tokens)
+        shared_full = prompt_len // self.scfg.page_size
+        return (need + (n_best - 1) * (need - shared_full)
+                + n_best * self._tree_extra())
 
     def _defer_admission(self, req: Request, hits: List[int], n_hit0: int,
                          n_blocks: int, rest: List[Request]) -> None:
@@ -1243,16 +1828,20 @@ class ServeEngine:
             if r.uid in self._fit_checked:
                 return False
             self._fit_checked.add(r.uid)
-            return (self._pages_needed(len(r.prompt), r.max_tokens)
+            return (self._pages_needed_group(len(r.prompt), r.max_tokens,
+                                             r.n_best)
                     > self.pool.num_pages)
 
         for req in self.scheduler.drop(never_fits):
             self._fit_checked.discard(req.uid)
             req.done = True
             req.generated = []
+            if req.n_best > 1:
+                req.nbest = [[] for _ in range(req.n_best)]
             finished.append(req)
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         budget_pages = [self.pool.available]
+        budget_slots = [len(free)]
 
         def fits(req: Request) -> bool:
             # backoff gate (DESIGN.md §17): a deferred request sits out its
@@ -1262,11 +1851,16 @@ class ServeEngine:
             # conservative: ignores hits (submit() guarantees need can be
             # met by an empty pool, so deferral always terminates). A
             # non-fitting request is NOT looked up — deferral by this gate
-            # books no prefix stats to roll back.
-            need = self._pages_needed(len(req.prompt), req.max_tokens)
-            if need > budget_pages[0]:
+            # books no prefix stats to roll back. An n-best request books
+            # its WHOLE fork group here — n_best slots and the group's
+            # worst-case pages — so the fork at activation can only fail
+            # under a later cross-tick pool race (DESIGN.md §18).
+            need = self._pages_needed_group(len(req.prompt),
+                                            req.max_tokens, req.n_best)
+            if need > budget_pages[0] or req.n_best > budget_slots[0]:
                 return False
             budget_pages[0] -= need
+            budget_slots[0] -= req.n_best
             return True
 
         reqs = self.scheduler.select(len(free), fits=fits,
@@ -1274,9 +1868,12 @@ class ServeEngine:
         admitted = len(reqs)
         hit_tokens = 0
         hit_sq = 0.0
+        # slots assign from a pool, not positionally: an n-best parent
+        # consumes its own slot PLUS one reserved slot per child
+        slot_pool = list(free)
         for j, req in enumerate(reqs):
             self._fit_checked.discard(req.uid)
-            slot = free[j]
+            slot = slot_pool[0]
             plen = len(req.prompt)
             blocks = (block_tokens(req.prompt, ps)
                       if scfg.prefix_cache else [])
@@ -1298,11 +1895,31 @@ class ServeEngine:
             # admission succeeded: clear any backpressure bookkeeping
             self._defer_counts.pop(req.uid, None)
             self._retry_after.pop(req.uid, None)
+            slot_pool.pop(0)
             self.slot_req[slot] = req
             self._slot_pages[slot] = pages
             self._prefilling[slot] = {
                 "req": req, "plen": plen, "next": shared,
                 "blocks": blocks, "pages": pages}
+            if req.n_best > 1:
+                # mint + reserve the fork children NOW (one per extra
+                # stream): they hold slots — excluded from decode via
+                # _fork_wait — until the parent's final chunk activates
+                # and _fork_slots fans the committed pages out
+                req.fork_group = req.uid
+                self._fork_groups[req.uid] = {
+                    "req": req, "k": req.n_best, "streams": {}}
+                req.fork_idx = 0
+                kids = [slot_pool.pop(0) for _ in range(req.n_best - 1)]
+                self._fork_children[slot] = kids
+                for i, kid in enumerate(kids):
+                    self._uid += 1
+                    child = Request(
+                        self._uid, req.prompt, req.max_tokens,
+                        req.temperature, fork_group=req.uid,
+                        fork_idx=i + 1, submit_tick=self._tick_idx)
+                    self.slot_req[kid] = child
+                    self._fork_wait[kid] = slot
             hit_tokens += shared
             hit_sq += float(shared) ** 2
         # one extend call advances every in-flight prefill by one chunk
@@ -1386,8 +2003,15 @@ class ServeEngine:
                     for bi, block in enumerate(w["blocks"]):
                         parent = self.pool.publish(w["pages"][bi], parent,
                                                    block)
+                kids = self._fork_children.pop(slot, None)
                 if done_mask[j]:
+                    if kids is not None:
+                        self._cancel_fork(slot, kids)
                     self._finish_slot(slot, finished)
+                elif kids is not None:
+                    # the parent's prompt KV is committed and its first
+                    # token sampled: fan the group out (DESIGN.md §18)
+                    self._fork_slots(slot, kids)
             else:
                 w["next"] += clen
         # cached-window gather bill (DESIGN.md §16) — what the extend path
@@ -1539,6 +2163,11 @@ class ServeEngine:
         self._tick_shed = 0
         self._tick_quarantined = 0
         self._rb_retries_tick = 0
+        self._tick_cow_bytes = 0.0
+        self._tick_cow_copies = 0
+        self._tick_forks = 0
+        self._tick_fork_saved_bytes = 0.0
+        self._tick_fork_saved_flops = 0.0
         inj0 = (self._injector.faults_injected
                 if self._injector is not None else 0)
         # deadline shedding (DESIGN.md §17): expire queued requests whose
@@ -1559,10 +2188,16 @@ class ServeEngine:
             self._shed_request(req, finished)
         self._pending_shed = []
         moves = self._maybe_compact() if self.scfg.paged else 0
-        # decoding slots only: mid-prefill paged slots occupy a slot but
-        # don't produce decode tokens until their final chunk activates them
+        # decoding slots only: mid-prefill paged slots and fork-reserved
+        # child slots occupy a slot but don't produce decode tokens until
+        # their final chunk / their parent's activation releases them
         active = [i for i, r in enumerate(self.slot_req)
-                  if r is not None and i not in self._prefilling]
+                  if r is not None and i not in self._prefilling
+                  and i not in self._fork_wait]
+        if self.scfg.paged and active:
+            # COW write barrier (DESIGN.md §18): every page this tick
+            # writes must be private to its slot BEFORE the tick runs
+            active = self._cow_barrier(active)
         # live context per decoding slot: the tick attends lengths pos+1 =
         # prompt + generated-so-far — captured before finishes clear the
         # slot (page-granular KV read bill)
@@ -1579,7 +2214,24 @@ class ServeEngine:
                                                  self.scfg.max_slots)
                 if pv is not None:
                     poison = jnp.asarray(pv)
-            if spec_k > 0:
+            if spec_k > 0 and self.scfg.spec_tree_m > 1:
+                # tree speculation (DESIGN.md §18): stage per-branch
+                # forked windows, run the folded verify, then resolve the
+                # winner's page adoption on the host
+                btables, bvalid = self._prepare_tree(active)
+                self.state, packed = self._tick(self.params, self.state,
+                                                poison, btables, bvalid)
+                arr = self._checked_readback(
+                    packed, self._validate_tree_packed, tick)
+                done_mask = arr[0].astype(bool)
+                n_emit = arr[1]
+                bad_mask = arr[2].astype(bool)
+                self._commit_tree(bad_mask, arr[3])
+                emitted = int(n_emit.sum())
+                accepted = int(np.maximum(n_emit - 1, 0).sum())
+                for i in active:
+                    self._host_gen[i] += int(n_emit[i])
+            elif spec_k > 0:
                 self.state, packed = self._tick(self.params, self.state,
                                                 poison)
                 # the ONLY hot-path transfer (validated: the injector may
@@ -1635,12 +2287,17 @@ class ServeEngine:
             if spec_k > 0:
                 width = spec_k + 1
                 oracle = self.scfg.spec_drafter == "oracle"
+                # tree mode folds m branch rows per slot into the one
+                # verify pass: m x the row compute and KV traffic, still
+                # ONE weight stream — the fold's whole economy
+                m_eff = self.scfg.spec_tree_m
                 v_fl = costing.spec_verify_flops(
                     self._matmul_elems, self._n_attn, self._attn_dims,
-                    ctx, na, width)
+                    ctx * m_eff, na * m_eff, width)
                 # verify: one weight stream; KV = live context read once
                 # plus the chunk's write+readback (page-granular)
-                v_kv = self._kv_token_bytes * (ctx + 2.0 * width * na)
+                v_kv = self._kv_token_bytes * (ctx
+                                               + 2.0 * width * na) * m_eff
                 v_by = self.weight_bytes + v_kv
                 if oracle:
                     d_fl = costing.spec_oracle_draft_flops(
@@ -1651,7 +2308,9 @@ class ServeEngine:
                     d_wb = spec_k * self.weight_bytes
                 else:
                     # n-gram drafter: one int32 history scan per slot
-                    d_kv = 4.0 * self.scfg.max_len * na
+                    # (tree mode emits m branches from the same scan —
+                    # bill the extra gather lanes, still no weights)
+                    d_kv = 4.0 * self.scfg.max_len * na * m_eff
                     d_wb = 0.0
                 d_by = d_wb + d_kv
                 wb += self.weight_bytes + d_wb
@@ -1676,6 +2335,10 @@ class ServeEngine:
         if moves:
             # each relocated page is one pool read + one pool write
             kvb += 2.0 * moves * self.scfg.page_size * self._kv_token_bytes
+        # COW copies (barrier + tree boundary copies) are real page
+        # traffic: already accumulated per event, billed into kv_bytes AND
+        # broken out first-class (DESIGN.md §18)
+        kvb += self._tick_cow_bytes
         # periodic detection rungs (rare paths; their readbacks/compute are
         # off the hot tick and bounded by their intervals)
         guard = self.guard
@@ -1715,7 +2378,12 @@ class ServeEngine:
                         recovery_flops=adm.recovery_flops,
                         recovery_bytes=adm.recovery_bytes,
                         degraded=degraded,
-                        readback_retries=self._rb_retries_tick)
+                        readback_retries=self._rb_retries_tick,
+                        cow_bytes=self._tick_cow_bytes,
+                        cow_copies=self._tick_cow_copies,
+                        forks=self._tick_forks,
+                        fork_saved_bytes=self._tick_fork_saved_bytes,
+                        fork_saved_flops=self._tick_fork_saved_flops)
         self.last_metrics = m
         self.metrics_log.append(m)
         if self.accountant is not None:
@@ -1761,6 +2429,19 @@ class ServeEngine:
             out["pool_pages"] = self.pool.num_pages
             out["pool_pages_live"] = self.pool.live
             out["pool_hit_rate"] = self.pool.stats.hit_rate
+            out["pool_alloc_run_failures"] = \
+                self.pool.stats.alloc_run_failures
+            # COW fork economy (DESIGN.md §18): copies are paid traffic,
+            # fork_saved_* the duplicate-KV bill the forks did NOT pay
+            out["cow_bytes"] = sum(m.cow_bytes for m in self.metrics_log)
+            out["cow_copies"] = sum(m.cow_copies for m in self.metrics_log)
+            out["forks"] = sum(m.forks for m in self.metrics_log)
+            out["fork_saved_bytes"] = sum(m.fork_saved_bytes
+                                          for m in self.metrics_log)
+            out["fork_saved_flops"] = sum(m.fork_saved_flops
+                                          for m in self.metrics_log)
+            out["pool_forked_pages"] = self.pool.stats.forked_pages
+            out["pool_cow_copies"] = self.pool.stats.cow_copies
         if self.scfg.spec_k > 0:
             drafted = sum(m.spec_draft_tokens for m in self.metrics_log)
             accepted = sum(m.spec_accepted_tokens for m in self.metrics_log)

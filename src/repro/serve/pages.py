@@ -19,9 +19,18 @@ is the host half of the fix (DESIGN.md §14):
   could serve another request's KV pages. A later admission whose prompt
   starts with the same blocks *retains* those pages instead of recomputing
   and re-storing their K/V: the page-table copy replaces the prefill.
-  Shared pages are frozen (only ever read) — a slot's own writes go
-  exclusively to pages it allocated privately, so no copy-on-write
-  machinery is needed.
+* **Copy-on-write forks** (DESIGN.md §18) — ``fork()`` clones a slot's
+  committed page run by *retaining* the shared pages instead of copying
+  their bytes, so k n-best streams (or the branches of a speculation
+  tree) share one physical prefix. A page is ``writable()`` only while
+  its holder is the sole referent AND it is unpublished — the same
+  predicate as ``movable_suffix`` — and the first write to a shared page
+  goes through ``cow_write()``: allocate a private page, copy the shared
+  one's bytes (billed by the engine as COW bytes), release the shared
+  reference. The *last* co-owner to diverge finds itself sole referent
+  again and writes in place, so a k-way fork costs at most k - 1 page
+  copies, all on the partial boundary page — full committed blocks are
+  never copied, which is the entire point.
 * **Eviction** — pages whose refcount drops to zero but that are published
   in the prefix cache park in an LRU; ``alloc`` reclaims from it only when
   the free list runs dry, so cached prefixes survive as long as capacity
@@ -75,6 +84,13 @@ class PoolStats:
     missed_blocks: int = 0      # full blocks that were not cached
     evicted_blocks: int = 0
     alloc_failures: int = 0
+    # contiguous-run allocation failures (compaction starvation): booked by
+    # ``alloc_run`` returning None, the satellite ``alloc`` always booked
+    alloc_run_failures: int = 0
+    # COW channels (DESIGN.md §18): pages copied on first write to a shared
+    # page, and pages whose bytes a fork *retained* instead of duplicating
+    cow_copies: int = 0
+    forked_pages: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -203,8 +219,18 @@ class PagePool:
         return p
 
     def retain(self, page: int) -> None:
-        if self._ref[page] == 0 and page in self._lru:
-            del self._lru[page]
+        if self._ref[page] == 0:
+            if page in self._lru:
+                del self._lru[page]
+            else:
+                # a free-listed page is allocatable: silently refcounting it
+                # would let ``alloc`` hand the same physical page to another
+                # slot (double-allocation — two writers, one page). COW
+                # forks retain aggressively, so this is a raise, not a
+                # debug assert.
+                raise RuntimeError(
+                    f"retain() on free-listed page {page}: only live or "
+                    f"parked (published) pages may gain references")
         self._ref[page] += 1
 
     def release(self, page: int) -> None:
@@ -220,6 +246,45 @@ class PagePool:
         for p in pages:
             self.release(p)
 
+    # -- copy-on-write forks (DESIGN.md §18) ----------------------------------
+
+    def writable(self, page: int) -> bool:
+        """True iff the (sole) holder may write ``page`` in place: refcount
+        exactly 1 and no published key — the ``movable_suffix`` predicate.
+        A shared or published page is frozen; writes must go through
+        ``cow_write``."""
+        return self._ref[page] == 1 and self._page_key.get(page) is None
+
+    def fork(self, pages: Sequence[int]) -> List[int]:
+        """Clone a slot's committed page run for a fork: retain every page
+        (the child holds one reference each, exactly like a prefix-cache
+        hit) and return the same physical ids. No bytes move — divergence
+        is paid lazily, page by page, via ``cow_write`` when a fork first
+        writes into a shared page. Callers release the returned run
+        through ``release_all`` like any owned pages."""
+        for p in pages:
+            self.retain(p)
+        self.stats.forked_pages += len(pages)
+        return list(pages)
+
+    def cow_write(self, page: int) -> Optional[Tuple[int, bool]]:
+        """Make ``page`` writable for its caller (one current referent).
+        Sole-referent unpublished pages are returned as-is (in-place write,
+        no copy). Otherwise allocate a private replacement, drop the
+        caller's reference on the shared page, and return
+        ``(new_page, True)`` — the *caller* owns the device-side byte copy
+        old -> new and the COW-bytes bill. Returns None when the pool
+        cannot supply the replacement page (the caller degrades
+        gracefully; never corrupts the shared page)."""
+        if self.writable(page):
+            return page, False
+        fresh = self.alloc(1)
+        if fresh is None:
+            return None
+        self.release(page)
+        self.stats.cow_copies += 1
+        return fresh[0], True
+
     # -- compaction (DESIGN.md §16) -------------------------------------------
 
     def movable_suffix(self, pages: Sequence[int]) -> int:
@@ -232,12 +297,8 @@ class PagePool:
         index on is refcount-1 and unkeyed; shared prefix blocks are never
         moved."""
         i = len(pages)
-        while i > 0:
-            p = pages[i - 1]
-            if self._ref[p] == 1 and self._page_key.get(p) is None:
-                i -= 1
-            else:
-                break
+        while i > 0 and self.writable(pages[i - 1]):
+            i -= 1
         return i
 
     def alloc_run(self, n: int) -> Optional[List[int]]:
@@ -261,6 +322,9 @@ class PagePool:
                         self._ref[p] = 1
                     return run
                 run_start = i
+        # book the starvation: without this counter a fragmented free list
+        # silently stalls compaction forever (summary() shows nothing)
+        self.stats.alloc_run_failures += 1
         return None
 
     # -- prefix cache ---------------------------------------------------------
@@ -275,7 +339,14 @@ class PagePool:
                 if self._key_to_page.get(key) == p:
                     del self._key_to_page[key]
                 if key[0] != ROOT:
-                    self._children.get(key[0], set()).discard(p)
+                    sibs = self._children.get(key[0])
+                    if sibs is not None:
+                        sibs.discard(p)
+                        if not sibs:
+                            # prune the emptied set: stale entries would
+                            # grow the dict without bound over a long
+                            # churny serve, and audit() walks every entry
+                            del self._children[key[0]]
             # descendants' prefixes are no longer certifiable through p
             stack.extend(self._children.pop(p, ()))
 
@@ -346,7 +417,11 @@ class PagePool:
         * the key registry mirrors are a bijection
           (``_key_to_page[_page_key[p]] == p`` and back);
         * every child edge matches its key's parent, and a child's chain
-          depth is its parent's + 1.
+          depth is its parent's + 1;
+        * no orphaned bookkeeping: ``_children`` holds no empty sets and
+          no entries for unpublished parents, and ``_page_depth`` covers
+          published pages only (stale entries would accumulate without
+          bound and could mis-score cost eviction for a recycled page id).
         """
         v: List[str] = []
         free, parked = set(self._free), set(self._lru)
@@ -380,11 +455,19 @@ class PagePool:
             if self._page_key.get(p) != key:
                 v.append(f"registry key {key} -> page {p} not mirrored")
         for parent, kids in self._children.items():
+            if not kids:
+                v.append(f"empty _children set for page {parent} not "
+                         f"pruned")
+            if self._page_key.get(parent) is None:
+                v.append(f"_children entry for unpublished page {parent}")
             for kid in kids:
                 k = self._page_key.get(kid)
                 if k is None or k[0] != parent:
                     v.append(f"child edge {parent}->{kid} has no matching "
                              f"key")
+        for p in self._page_depth:
+            if self._page_key.get(p) is None:
+                v.append(f"_page_depth entry for unpublished page {p}")
         return v
 
     # -- introspection --------------------------------------------------------

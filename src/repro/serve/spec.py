@@ -77,6 +77,40 @@ def ngram_draft(hist: jnp.ndarray, pos: jnp.ndarray, k: int) -> jnp.ndarray:
     return jnp.take_along_axis(hist, idx, axis=1).astype(jnp.int32)
 
 
+def ngram_draft_tree(hist: jnp.ndarray, pos: jnp.ndarray, k: int, m: int
+                     ) -> jnp.ndarray:
+    """Tree drafter (DESIGN.md §18): ``m`` independent ``k``-token branches
+    per slot from the ``m`` most recent occurrences of the trailing bigram.
+
+    Branch 0 is *exactly* ``ngram_draft`` (the most recent match), so tree
+    speculation degenerates to the linear drafter at ``m == 1`` and branch
+    0's stream is the linear stream bit-for-bit. Later branches take the
+    next-most-recent matches — a repetitive history usually continues like
+    one of its recent occurrences, but not always the most recent one, and
+    verifying several candidate continuations in one multi-query pass costs
+    no extra weight traffic. Slots with fewer than ``m`` matches pad the
+    tail branches by repeating the pending token (cheap, rejected lanes).
+    Returns (B, M, K) int32; inactive rows produce garbage the engine
+    masks off.
+    """
+    b, length = hist.shape
+    rows = jnp.arange(b)
+    pend = hist[rows, pos]
+    prev = hist[rows, jnp.maximum(pos - 1, 0)]
+    p_idx = jnp.arange(length - 1, dtype=jnp.int32)
+    match = ((hist[:, :-1] == prev[:, None])
+             & (hist[:, 1:] == pend[:, None])
+             & (p_idx[None] <= (pos - 2)[:, None]))
+    # m most recent match positions, descending (-1 pads short match lists)
+    ranked = -jnp.sort(jnp.where(match, -p_idx[None], 1), axis=1)[:, :m]
+    starts = jnp.where(ranked >= 0, ranked + 2, pos[:, None])   # (B, M)
+    idx = jnp.minimum(
+        starts[:, :, None] + jnp.arange(k, dtype=jnp.int32)[None, None],
+        pos[:, None, None])                                     # (B, M, K)
+    return jnp.take_along_axis(hist[:, None].repeat(m, axis=1), idx,
+                               axis=2).astype(jnp.int32)
+
+
 def speculative_accept(logits: jnp.ndarray, drafts: jnp.ndarray,
                        keys: jnp.ndarray, temp: jnp.ndarray
                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:

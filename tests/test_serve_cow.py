@@ -1,0 +1,485 @@
+"""Copy-on-write paged KV: fork semantics, n-best sampling, tree
+speculation (DESIGN.md §18).
+
+Covers the pool-level COW protocol (fork/writable/cow_write, the
+retain-on-free guard, alloc_run failure booking, _unpublish pruning and
+the audit orphan checks), engine-level n-best parity against independent
+decode (fp32 and int8, greedy), tree-speculation stream identity, fork
+behavior under the chaos tier, and a hypothesis property suite over
+fork -> write -> release interleavings.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.models import transformer as tf_lib
+from repro.serve import (FaultPlan, PagePool, ServeConfig, ServeEngine,
+                         generation_agreement, run_workload)
+from repro.serve.pages import ROOT
+
+
+def _cfg(vocab=61):
+    return tf_lib.LMConfig(name="t", d_model=48, n_heads=4, n_kv_heads=2,
+                           d_ff=96, vocab=vocab, pattern=(tf_lib.BlockSpec(),),
+                           repeats=2, remat="none", vocab_pad_multiple=1)
+
+
+def _params(cfg, seed=0):
+    return tf_lib.init_lm(jax.random.PRNGKey(seed), cfg,
+                          dtype=jnp.float32).params
+
+
+def _paged(params, cfg, **kw):
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 64)
+    return ServeEngine(params, cfg, ServeConfig(paged=True, **kw))
+
+
+# -----------------------------------------------------------------------------
+# Pool-level COW protocol
+# -----------------------------------------------------------------------------
+
+class TestPoolCow:
+    def test_fork_retains_and_freezes(self):
+        pool = PagePool(6, page_size=4)
+        run = pool.alloc(3)
+        forked = pool.fork(run)
+        assert forked == run                      # same physical ids
+        assert all(pool.refcount(p) == 2 for p in run)
+        assert pool.stats.forked_pages == 3
+        # shared pages are frozen: no in-place writes, no compaction moves
+        assert not any(pool.writable(p) for p in run)
+        assert pool.movable_suffix(run) == len(run)
+        pool.release_all(forked)
+        assert all(pool.refcount(p) == 1 for p in run)
+        assert all(pool.writable(p) for p in run)
+        pool.release_all(run)
+        assert pool.live == 0 and pool.audit() == []
+
+    def test_cow_write_in_place_when_sole_owner(self):
+        pool = PagePool(4, page_size=4)
+        (p,) = pool.alloc(1)
+        assert pool.cow_write(p) == (p, False)
+        assert pool.stats.cow_copies == 0
+
+    def test_cow_write_copies_shared_page(self):
+        pool = PagePool(4, page_size=4)
+        (p,) = pool.alloc(1)
+        pool.fork([p])
+        got = pool.cow_write(p)
+        assert got is not None
+        new, copied = got
+        assert copied and new != p
+        # the writer moved its reference to the private replacement; the
+        # other holder keeps the original, now sole and writable again
+        assert pool.refcount(p) == 1 and pool.refcount(new) == 1
+        assert pool.writable(new)
+        assert pool.stats.cow_copies == 1
+        pool.release(p)
+        pool.release(new)
+        assert pool.live == 0 and pool.audit() == []
+
+    def test_cow_write_copies_published_page(self):
+        # a published page is frozen even at refcount 1: its bytes back a
+        # registry key other admissions may hit
+        pool = PagePool(4, page_size=4)
+        (p,) = pool.alloc(1)
+        pool.publish(p, ROOT, (1, 2, 3, 4))
+        assert not pool.writable(p)
+        new, copied = pool.cow_write(p)
+        assert copied and new != p
+        # the published original parks (evictable, still certifiable)
+        assert pool.refcount(p) == 0 and p in pool.cached_pages()
+        pool.release(new)
+        assert pool.audit() == []
+
+    def test_cow_write_exhausted_pool_returns_none(self):
+        pool = PagePool(2, page_size=4)
+        run = pool.alloc(2)
+        pool.fork(run)
+        before = pool.stats.cow_copies
+        assert pool.cow_write(run[0]) is None
+        # the shared page is untouched: both holders still reference it
+        assert pool.refcount(run[0]) == 2
+        assert pool.stats.cow_copies == before
+        assert pool.audit() == []
+
+    def test_retain_on_free_listed_page_raises(self):
+        # S3: silently refcounting a free page would let alloc() hand the
+        # same physical page to a second writer
+        pool = PagePool(4, page_size=4)
+        (p,) = pool.alloc(1)
+        pool.release(p)                           # unpublished -> free list
+        with pytest.raises(RuntimeError, match="free-listed"):
+            pool.retain(p)
+        assert pool.refcount(p) == 0 and pool.audit() == []
+
+    def test_retain_parked_page_unparks(self):
+        pool = PagePool(4, page_size=4)
+        (p,) = pool.alloc(1)
+        pool.publish(p, ROOT, (9, 9, 9, 9))
+        pool.release(p)                           # published -> LRU park
+        pool.retain(p)                            # cache-hit path: legal
+        assert pool.refcount(p) == 1
+        pool.release(p)
+        assert pool.audit() == []
+
+    def test_fork_free_page_raises_and_books_nothing(self):
+        pool = PagePool(4, page_size=4)
+        (p,) = pool.alloc(1)
+        pool.release(p)
+        with pytest.raises(RuntimeError):
+            pool.fork([p])
+        assert pool.stats.forked_pages == 0
+
+
+class TestAllocRun:
+    def test_alloc_run_failure_books_counter_and_nothing_else(self):
+        # S1 regression: a failed contiguous-run request must book the
+        # starvation counter and leave the pool byte-identical — no pages
+        # taken, no refcounts bumped, no alloc_failures cross-booking
+        pool = PagePool(8, page_size=4)
+        held = [pool.alloc(1)[0] for _ in range(8)]
+        for p in held[::2]:
+            pool.release(p)                       # free list = every other
+        free_before = sorted(pool._free)
+        assert pool.alloc_run(2) is None
+        assert pool.stats.alloc_run_failures == 1
+        assert pool.stats.alloc_failures == 0
+        assert sorted(pool._free) == free_before
+        assert pool.audit() == []
+
+    def test_alloc_run_success_books_no_failure(self):
+        pool = PagePool(8, page_size=4)
+        run = pool.alloc_run(3)
+        assert run == [0, 1, 2]
+        assert pool.stats.alloc_run_failures == 0
+        pool.release_all(run)
+
+
+class TestUnpublishPrune:
+    def _chain(self, pool, blocks):
+        pages, parent = [], ROOT
+        for b in blocks:
+            (p,) = pool.alloc(1)
+            parent = pool.publish(p, parent, b)
+            pages.append(p)
+        return pages
+
+    def test_unpublish_prunes_emptied_children_set(self):
+        # S2: unpublishing a parent's last child must delete the emptied
+        # set, not leave a zero-length entry for audit() to walk forever
+        pool = PagePool(4, page_size=2)
+        a, b = self._chain(pool, [(1, 2), (3, 4)])
+        pool._unpublish(b)
+        assert a not in pool._children
+        assert pool.audit() == []
+        pool.release_all([a, b])
+
+    def test_cascade_unpublish_prunes_interior_entries(self):
+        pool = PagePool(6, page_size=2)
+        a, b, c = self._chain(pool, [(1, 2), (3, 4), (5, 6)])
+        pool._unpublish(a)                        # cascades through b, c
+        assert pool._children == {}
+        assert pool._page_depth == {}
+        assert pool.audit() == []
+        pool.release_all([a, b, c])
+
+    def test_audit_flags_orphaned_children_entries(self):
+        # the S2 audit teeth: injected orphans are reported, not ignored
+        pool = PagePool(4, page_size=2)
+        (a,) = self._chain(pool, [(1, 2)])
+        pool._children[a] = set()
+        assert any("not pruned" in s for s in pool.audit())
+        pool._children[a] = {3}
+        assert any("no matching key" in s for s in pool.audit())
+        del pool._children[a]
+        pool._children[2] = {3}
+        assert any("unpublished page" in s for s in pool.audit())
+
+    def test_audit_flags_stale_depth_entry(self):
+        pool = PagePool(4, page_size=2)
+        pool._page_depth[1] = 0
+        assert any("_page_depth" in s for s in pool.audit())
+
+
+# -----------------------------------------------------------------------------
+# Engine: n-best forks
+# -----------------------------------------------------------------------------
+
+PROMPTS = [np.arange(10) + 3, np.arange(7) + 20, np.arange(13) + 1]
+
+
+def _nbest_run(params, cfg, n_best, prompts=PROMPTS, temperature=0.0, **kw):
+    eng = _paged(params, cfg, temperature=temperature, **kw)
+    uids = [eng.submit(p, max_tokens=8, n_best=n_best) for p in prompts]
+    done = {r.uid: r for r in eng.run_until_drained()}
+    assert eng.pool.audit() == []
+    assert eng.pool.live == 0
+    return eng, [done[u] for u in uids]
+
+
+class TestNBestParity:
+    def test_greedy_forks_match_independent_decode_fp32(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        eng, reqs = _nbest_run(params, cfg, n_best=3)
+        # independent baseline: the same prompts decoded without forking
+        base = _paged(params, cfg)
+        gens = run_workload(base, PROMPTS, max_tokens=8)
+        base_by_prompt = list(gens.values())
+        for r, want in zip(reqs, base_by_prompt):
+            assert r.nbest is not None and len(r.nbest) == 3
+            assert list(r.generated) == list(r.nbest[0])
+            for stream in r.nbest:
+                assert list(stream) == list(want)
+        s = eng.summary()
+        assert s["forks"] == 2 * len(PROMPTS)
+        # prompts of 10/7/13 tokens on 4-token pages all have a partial
+        # boundary block -> each fork barrier pays k-1 copies
+        assert s["cow_copies"] >= 2 * len(PROMPTS)
+        assert s["fork_saved_bytes"] > 0
+
+    def test_greedy_forks_match_independent_decode_int8(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        eng, reqs = _nbest_run(params, cfg, n_best=3, quant="int8")
+        base = _paged(params, cfg, quant="int8")
+        gens = run_workload(base, PROMPTS, max_tokens=8)
+        for r, want in zip(reqs, gens.values()):
+            for stream in r.nbest:
+                assert list(stream) == list(want)
+
+    def test_nbest_two_with_page_aligned_prompt(self):
+        # page-aligned prompt: no partial boundary block, so the fork
+        # shares every committed page and the barrier pays zero copies
+        cfg = _cfg()
+        params = _params(cfg)
+        prompts = [np.arange(8) + 5]
+        eng, reqs = _nbest_run(params, cfg, n_best=2, prompts=prompts)
+        base = _paged(params, cfg)
+        gens = run_workload(base, prompts, max_tokens=8)
+        (want,) = gens.values()
+        for stream in reqs[0].nbest:
+            assert list(stream) == list(want)
+
+    def test_temperature_forks_drain_clean(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        eng, reqs = _nbest_run(params, cfg, n_best=3, temperature=0.9)
+        for r in reqs:
+            assert len(r.nbest) == 3
+            assert list(r.generated) == list(r.nbest[0])
+            assert all(len(s) > 0 for s in r.nbest)
+
+    def test_nbest_validation(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = _paged(params, cfg)
+        with pytest.raises(ValueError, match="n_best"):
+            eng.submit(np.arange(4), n_best=0)
+        with pytest.raises(ValueError):
+            eng.submit(np.arange(4), n_best=5)    # > max_slots
+        dense = ServeEngine(params, cfg, ServeConfig(max_slots=2, max_len=64))
+        with pytest.raises(ValueError):
+            dense.submit(np.arange(4), n_best=2)
+
+    def test_cow_accounting_channels(self):
+        from repro.core import accounting
+        cfg = _cfg()
+        params = _params(cfg)
+        acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        eng = _paged(params, cfg)
+        eng.accountant = acct
+        eng.submit(np.arange(10) + 3, max_tokens=8, n_best=3)
+        eng.run_until_drained()
+        rep = acct.report()
+        assert rep["forks"] == 2
+        assert rep["cow_copies"] >= 2
+        assert rep["cow_bytes"] > 0 and rep["cow_dram_j"] > 0
+        assert rep["fork_saved_bytes"] > 0
+        assert rep["fork_saved_dram_j"] > 0
+        # COW copy traffic rides inside the grand total too
+        assert rep["bytes_moved"] >= rep["cow_bytes"]
+        s = eng.summary()
+        assert s["cow_bytes"] == rep["cow_bytes"]
+        assert s["pool_cow_copies"] >= 2
+        assert s["pool_forked_pages"] > 0
+
+    def test_forks_under_chaos_keep_streams_and_pool_clean(self):
+        # PR 7 chaos tier x PR 8 forks: a seeded fault mid-decode must
+        # leave every fork stream identical to the fault-free run and the
+        # pool partition-clean at drain
+        cfg = _cfg()
+        params = _params(cfg)
+        _, clean = _nbest_run(params, cfg, n_best=3)
+        for kind in ("kv_bitflip", "nan_logits"):
+            eng = _paged(params, cfg,
+                         faults=FaultPlan.single(kind, tick=3, seed=11))
+            uids = [eng.submit(p, max_tokens=8, n_best=3) for p in PROMPTS]
+            done = {r.uid: r for r in eng.run_until_drained(max_ticks=400)}
+            assert eng.pool.audit() == [], kind
+            assert eng.pool.live == 0, kind
+            got = [done[u] for u in uids]
+            for r, want in zip(got, clean):
+                assert [list(x) for x in r.nbest] == \
+                    [list(x) for x in want.nbest], kind
+
+
+# -----------------------------------------------------------------------------
+# Engine: tree speculation
+# -----------------------------------------------------------------------------
+
+class TestTreeSpec:
+    # repetitive prompts: the ngram drafter finds matches, trees branch
+    REP = [np.tile([5, 9, 5, 9, 5], 4), np.tile([3, 4, 4, 3], 5),
+           np.arange(11) + 2]
+
+    def test_tree_stream_identical_to_plain_and_linear(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        plain = _paged(params, cfg, max_slots=2)
+        g_plain = run_workload(plain, self.REP, max_tokens=10)
+        linear = _paged(params, cfg, max_slots=2, spec_k=3)
+        g_lin = run_workload(linear, self.REP, max_tokens=10)
+        tree = _paged(params, cfg, max_slots=2, spec_k=3, spec_tree_m=3)
+        g_tree = run_workload(tree, self.REP, max_tokens=10)
+        assert generation_agreement(g_lin, g_plain)["identical"] == 1.0
+        assert generation_agreement(g_tree, g_plain)["identical"] == 1.0
+        assert tree.pool.audit() == []
+        assert tree.pool.live == 0
+        s = tree.summary()
+        # the tree path went through the multi-branch verify
+        assert s["accepted_tokens_per_tick"] >= 1.0
+
+    def test_tree_at_least_linear_acceptance(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        linear = _paged(params, cfg, max_slots=2, spec_k=3)
+        run_workload(linear, self.REP, max_tokens=10)
+        tree = _paged(params, cfg, max_slots=2, spec_k=3, spec_tree_m=3)
+        run_workload(tree, self.REP, max_tokens=10)
+        # winner-by-argmax with branch-0 tie-break can only extend the
+        # accepted prefix, never shrink it
+        assert (tree.summary()["accepted_tokens_per_tick"]
+                >= linear.summary()["accepted_tokens_per_tick"])
+
+    def test_tree_config_validation(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        with pytest.raises(ValueError, match="spec_tree_m"):
+            _paged(params, cfg, spec_tree_m=0)
+        with pytest.raises(ValueError, match="spec_k"):
+            _paged(params, cfg, spec_tree_m=2)
+        with pytest.raises(ValueError, match="ngram"):
+            _paged(params, cfg, spec_k=2, spec_tree_m=2,
+                   spec_drafter="oracle")
+
+    def test_tree_drafter_branch0_is_linear_drafter(self):
+        from repro.serve import ngram_draft, ngram_draft_tree
+        hist = jnp.asarray(np.random.default_rng(0).integers(
+            0, 7, size=(3, 32)), jnp.int32)
+        pos = jnp.asarray([12, 20, 31], jnp.int32)
+        lin = ngram_draft(hist, pos, 4)
+        tree = ngram_draft_tree(hist, pos, 4, 3)
+        assert tree.shape == (3, 3, 4)
+        np.testing.assert_array_equal(np.asarray(tree[:, 0]),
+                                      np.asarray(lin))
+
+
+# -----------------------------------------------------------------------------
+# S4: property suite over fork -> write -> release interleavings
+# -----------------------------------------------------------------------------
+
+N_PAGES = 8
+
+
+def _apply_ops(ops):
+    """Drive a PagePool through an op tape, mirroring ownership host-side.
+
+    ``owners`` maps an owner id to its list of held pages (a fork models
+    one sibling's view of a shared run). Every op re-checks the audit
+    invariants; the tape ends with a full teardown that must return the
+    pool to pristine."""
+    pool = PagePool(N_PAGES, page_size=4)
+    owners = {}
+    next_owner = 0
+    writes = {}                  # page -> owner that last cow-wrote it
+    for kind, a, b in ops:
+        if kind == "alloc":
+            run = pool.alloc(1 + a % 3)
+            if run is not None:
+                owners[next_owner] = run
+                next_owner += 1
+        elif kind == "fork" and owners:
+            src = sorted(owners)[a % len(owners)]
+            owners[next_owner] = pool.fork(owners[src])
+            next_owner += 1
+        elif kind == "cow" and owners:
+            oid = sorted(owners)[a % len(owners)]
+            run = owners[oid]
+            idx = b % len(run)
+            got = pool.cow_write(run[idx])
+            if got is not None:
+                page, copied = got
+                run[idx] = page
+                if copied:
+                    # a COW copy must be private: no sibling may hold it
+                    for other, orun in owners.items():
+                        if other != oid:
+                            assert page not in orun
+                writes[page] = oid
+        elif kind == "release" and owners:
+            # quarantine teardown of one fork: drop every page it holds
+            oid = sorted(owners)[a % len(owners)]
+            pool.release_all(owners.pop(oid))
+        assert pool.audit() == [], (kind, a, b)
+        # partition: every page in exactly one of free / parked / live
+        n_live = sum(1 for p in range(N_PAGES) if pool.refcount(p) > 0)
+        assert n_live + pool.available == N_PAGES
+        # surviving forks stay intact: every held page has a refcount
+        for run in owners.values():
+            assert all(pool.refcount(p) >= 1 for p in run)
+    for run in owners.values():
+        pool.release_all(run)
+    assert pool.live == 0
+    assert pool.audit() == []
+
+
+@given(st.lists(st.tuples(
+    st.sampled_from(["alloc", "fork", "cow", "release"]),
+    st.integers(min_value=0, max_value=7),
+    st.integers(min_value=0, max_value=7)), max_size=40))
+@settings(max_examples=60, deadline=None)
+def test_fork_write_release_interleavings(ops):
+    _apply_ops(ops)
+
+
+@given(st.integers(min_value=2, max_value=4),
+       st.integers(min_value=1, max_value=3))
+@settings(max_examples=20, deadline=None)
+def test_k_way_fork_divergence_isolated(k, n_pages):
+    """All k siblings cow-write the same shared run: every sibling ends on
+    private pages, pairwise disjoint, with exactly k-1 copies per page
+    (the last holder writes in place)."""
+    pool = PagePool(n_pages * (k + 1), page_size=4)
+    base = pool.alloc(n_pages)
+    runs = [base] + [pool.fork(base) for _ in range(k - 1)]
+    for run in runs:
+        for i, p in enumerate(run):
+            got = pool.cow_write(p)
+            assert got is not None
+            run[i] = got[0]
+    assert pool.stats.cow_copies == (k - 1) * n_pages
+    flat = [p for run in runs for p in run]
+    assert len(set(flat)) == len(flat)            # pairwise disjoint
+    assert all(pool.writable(p) for p in flat)
+    for run in runs:
+        pool.release_all(run)
+    assert pool.live == 0 and pool.audit() == []

@@ -465,7 +465,8 @@ class TestValidation:
         ns = argparse.Namespace(
             spec_k=0, page_size=16, prefill_chunk=0, compact_threshold=0.0,
             num_pages=None, paged=False, fault_kind=None, fault_tick=2,
-            deadline_ticks=None)
+            deadline_ticks=None, slots=4, nbest=1, spec_tree_m=1,
+            spec_drafter="ngram")
         vars(ns).update(over)
         return ns
 
@@ -474,7 +475,11 @@ class TestValidation:
         dict(paged=True, prefill_chunk=6, page_size=4),
         dict(compact_threshold=2.0), dict(num_pages=0),
         dict(spec_k=2, paged=False), dict(deadline_ticks=0),
-        dict(fault_kind="stall", fault_tick=-1)])
+        dict(fault_kind="stall", fault_tick=-1),
+        dict(nbest=0), dict(nbest=2, paged=False),
+        dict(nbest=8, slots=4, paged=True),
+        dict(spec_tree_m=0), dict(spec_tree_m=2, spec_k=0, paged=True),
+        dict(spec_tree_m=2, spec_k=2, paged=True, spec_drafter="oracle")])
     def test_launcher_rejects_bad_flags(self, over):
         from repro.launch.serve import validate_args
         with pytest.raises(SystemExit):
