@@ -1,9 +1,34 @@
-"""Shared timing helper: name,us_per_call,derived CSV rows."""
+"""Shared bench helpers: timing CSV rows + crash-safe JSON emission."""
 
+import json
+import os
+import tempfile
 import time
-from typing import Callable, List, Tuple
+from typing import Any, Callable, List, Tuple
 
 Row = Tuple[str, float, str]
+
+
+def atomic_write_json(path: str, payload: Any, *, indent: int = 2) -> None:
+    """Write ``payload`` as JSON via tmp-file + fsync + os.replace: a kill
+    at ANY instant leaves either the previous complete file or the new
+    complete file, never a torn half-write (DESIGN.md §19 — the same
+    contract the engine's snapshots honor; CI gates parse these files)."""
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(prefix=os.path.basename(path) + ".tmp.",
+                               dir=d)
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=indent)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def timed(name: str, fn: Callable, *, reps: int = 5, derived: str = "") -> Row:

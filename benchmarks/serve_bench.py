@@ -26,11 +26,16 @@ Four modes on the SAME model and backend:
   dense greedy engine (rejection sampling must preserve it exactly).
   Emits ``BENCH_serve_spec.json``.
 * ``--chaos`` — the chaos tier (DESIGN.md §17): one seeded fault arm per
-  kind (plus a deadline-shed arm) against the fault-free baseline on the
-  same workload. Gates on the resilience invariant: every arm drains in
-  budget with zero crashes, every non-shed stream token-identical to the
-  baseline, and quarantine recovery billed as nonzero joules. Emits
-  ``BENCH_serve_faults.json``.
+  transient kind (plus a deadline-shed arm) against the fault-free
+  baseline on the same workload. Gates on the resilience invariant: every
+  arm drains in budget with zero crashes, every non-shed stream
+  token-identical to the baseline, and quarantine recovery billed as
+  nonzero joules. Emits ``BENCH_serve_faults.json``.
+* ``--chaos --fault-kind process_kill`` — the durability tier
+  (DESIGN.md §19): kill the checkpointed engine mid-workload, restart a
+  fresh engine from the latest snapshot + journal replay, and gate on
+  every stream being identical to the fault-free baseline with
+  ``restore_j > 0``. Emits ``BENCH_serve_restore.json``.
 * ``--paged --long-context`` — the long-context tier (DESIGN.md §16) on a
   fragmented-RAG workload (distinct long documents, chunked prefill):
   the paged flash-prefill kernel on a contiguous vs. a maximally
@@ -49,10 +54,16 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+try:
+    from benchmarks.bench_util import atomic_write_json
+except ImportError:          # run as `python benchmarks/serve_bench.py`
+    from bench_util import atomic_write_json
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 OUT_QUANT_PATH = os.path.join(os.path.dirname(__file__), "..",
@@ -67,6 +78,8 @@ OUT_FAULTS_PATH = os.path.join(os.path.dirname(__file__), "..",
                                "BENCH_serve_faults.json")
 OUT_COW_PATH = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_serve_cow.json")
+OUT_RESTORE_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_serve_restore.json")
 
 # ONE explicit seed feeds every stochastic input of the bench — workload
 # prompt draws AND the engines' sampling streams (ServeConfig.seed). Same
@@ -164,8 +177,7 @@ def bench() -> dict:
         / res["reference"]["decode_tokens_per_s"], 2)
     res["j_per_token_ratio"] = round(
         res["reference"]["j_per_token"] / res["fused"]["j_per_token"], 2)
-    with open(OUT_PATH, "w") as f:
-        json.dump(res, f, indent=2)
+    atomic_write_json(OUT_PATH, res)
     return res
 
 
@@ -231,8 +243,7 @@ def bench_quant() -> dict:
         res["bf16"]["weight_bytes"] / res["int8"]["weight_bytes"], 2)
     res["j_per_token_ratio"] = round(
         res["bf16"]["j_per_token"] / res["int8"]["j_per_token"], 2)
-    with open(OUT_QUANT_PATH, "w") as f:
-        json.dump(res, f, indent=2)
+    atomic_write_json(OUT_QUANT_PATH, res)
     return res
 
 
@@ -310,8 +321,7 @@ def bench_paged(prefix_len=24, tail_len=6) -> dict:
     res["speedup"] = round(dense_m["j_per_token"] / paged_m["j_per_token"], 3)
     res["wall_speedup"] = round(dense_m["j_per_token_wall"]
                                 / paged_m["j_per_token_wall"], 2)
-    with open(OUT_PAGED_PATH, "w") as f:
-        json.dump(res, f, indent=2)
+    atomic_write_json(OUT_PAGED_PATH, res)
     return res
 
 
@@ -384,8 +394,7 @@ def bench_spec(spec_k=4, prefix_len=24, tail_len=6) -> dict:
     res["speedup"] = round(
         paged_m["j_per_token"] / spec_m["j_per_accepted_token"], 3)
     res["tick_ratio"] = round(paged_m["ticks"] / max(spec_m["ticks"], 1), 2)
-    with open(OUT_SPEC_PATH, "w") as f:
-        json.dump(res, f, indent=2)
+    atomic_write_json(OUT_SPEC_PATH, res)
     return res
 
 
@@ -499,8 +508,7 @@ def bench_longctx() -> dict:
         "token_agreement_frag_vs_contig": agree_cf,
         "token_agreement_vs_gather": agree_kb,
     }
-    with open(OUT_LONGCTX_PATH, "w") as f:
-        json.dump(res, f, indent=2)
+    atomic_write_json(OUT_LONGCTX_PATH, res)
     return res
 
 
@@ -607,8 +615,7 @@ def bench_cow(nbest=MAX_SLOTS) -> dict:
     assert ident, "a fork diverged from its independent-decode twin"
     assert res["kv_bytes_ratio"] > 1.0, res["kv_bytes_ratio"]
     assert cow_m["forks"] == n_req * (nbest - 1)
-    with open(OUT_COW_PATH, "w") as f:
-        json.dump(res, f, indent=2)
+    atomic_write_json(OUT_COW_PATH, res)
     return res
 
 
@@ -625,7 +632,7 @@ def bench_chaos() -> dict:
     * arms that quarantined bill recovery_j > 0 (the J/token cost of
       resilience is measured, not hand-waved).
     """
-    from repro.serve import (FAULT_KINDS, FaultPlan, ServeConfig,
+    from repro.serve import (TRANSIENT_FAULT_KINDS, FaultPlan, ServeConfig,
                              ServeEngine, generation_agreement, run_workload)
     cfg, params = _model()
     rng = np.random.default_rng(SEED + 3)
@@ -649,7 +656,10 @@ def bench_chaos() -> dict:
 
     base_s, base_g = arm(None)
     arms = {}
-    for kind in FAULT_KINDS:
+    # process_kill is the one kind no in-tick rung recovers from — its arm
+    # is the kill-and-restart bench (--fault-kind process_kill,
+    # DESIGN.md §19), which needs a checkpointed engine to restore into
+    for kind in TRANSIENT_FAULT_KINDS:
         plan = FaultPlan.single(kind, tick=3, seed=SEED + 17)
         s, gens = arm(plan)
         agree = generation_agreement(gens, base_g)
@@ -697,8 +707,110 @@ def bench_chaos() -> dict:
         "all_streams_identical": all(
             a.get("streams_identical", True) for a in arms.values()),
     }
-    with open(OUT_FAULTS_PATH, "w") as f:
-        json.dump(res, f, indent=2)
+    atomic_write_json(OUT_FAULTS_PATH, res)
+    return res
+
+
+def bench_restore(kill_tick=8, interval=3) -> dict:
+    """Durability tier (DESIGN.md §19): kill the engine mid-workload with a
+    seeded ``process_kill`` fault, restart a fresh engine from disk
+    (snapshot + journal replay), and gate on the restart invariant:
+
+    * every request's token stream — finished before the kill, recovered
+      from the journal, or completed after restart — is IDENTICAL to the
+      fault-free baseline's;
+    * the restart replayed at least one journaled tick and billed its
+      recompute as ``restore_j > 0`` (warm restart has a measured energy
+      price, next to the snapshot/journal write bill it trades against).
+    """
+    from repro.core import accounting
+    from repro.serve import (FaultPlan, ProcessKilled, ServeConfig,
+                             ServeEngine, generation_agreement, run_workload)
+    cfg, params = _model()
+    rng = np.random.default_rng(SEED + 23)
+    prompts = [rng.integers(0, 100, size=int(rng.integers(6, 14)))
+               for _ in range(N_REQUESTS)]
+
+    def _acct():
+        return accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+
+    # fault-free baseline: same seed + config minus faults/checkpointing —
+    # neither alters a pre-kill token, so streams must match exactly
+    base = ServeEngine(params, cfg, ServeConfig(
+        max_slots=MAX_SLOTS, max_len=MAX_LEN, paged=True, page_size=8,
+        seed=SEED))
+    base_g = run_workload(base, prompts, max_tokens=MAX_TOKENS,
+                          max_ticks=800)
+    base_s = base.summary()
+
+    ckpt_dir = tempfile.mkdtemp(prefix="bench_restore.")
+    plan = FaultPlan.single("process_kill", tick=kill_tick, seed=SEED + 29)
+    scfg = ServeConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN, paged=True,
+                       page_size=8, seed=SEED, faults=plan,
+                       checkpoint_dir=ckpt_dir,
+                       checkpoint_interval=interval)
+    eng = ServeEngine(params, cfg, scfg, accountant=_acct())
+    for p in prompts:
+        eng.submit(np.asarray(p, np.int32), max_tokens=MAX_TOKENS)
+    killed = False
+    try:
+        eng.run_until_drained(max_ticks=800)
+    except ProcessKilled:
+        killed = True
+    assert killed, f"process_kill at tick {kill_tick} never fired"
+
+    # the dead engine's object is abandoned — restart purely from disk
+    acct2 = _acct()
+    eng2 = ServeEngine(params, cfg, scfg, accountant=acct2)
+    recovered = eng2.restore()
+    done2 = eng2.run_until_drained(max_ticks=800)
+    by_uid = {r.uid: r for r in recovered}    # at-least-once: dedupe
+    by_uid.update({r.uid: r for r in done2})
+    gens2 = {uid: list(r.generated) for uid, r in by_uid.items()}
+    agree = generation_agreement(gens2, base_g)
+    s2 = eng2.summary()
+    rep2 = acct2.report()
+    res = {
+        "workload": {"requests": N_REQUESTS, "max_tokens": MAX_TOKENS,
+                     "slots": MAX_SLOTS, "page_size": 8, "seed": SEED,
+                     "kill_tick": kill_tick,
+                     "checkpoint_interval": interval,
+                     "backend": jax.default_backend()},
+        "notes": ("kill-and-restart arm: a seeded process_kill fault "
+                  "aborts the engine mid-workload; a fresh engine "
+                  "restores from the latest snapshot and deterministically "
+                  "replays the journal tail (DESIGN.md §19). "
+                  "streams_identical means every request's tokens match "
+                  "the fault-free baseline exactly; restore_j is the "
+                  "modeled energy of the replayed recompute, "
+                  "durability_write_j the snapshot+journal write bill it "
+                  "trades against."),
+        "baseline": {"ticks": base_s["ticks"],
+                     "decode_tokens": base_s["decode_tokens"]},
+        "restore": {"ticks": s2["ticks"],
+                    "decode_tokens": s2["decode_tokens"],
+                    "snapshots_taken": s2["snapshots_taken"],
+                    "snapshot_bytes": s2["snapshot_bytes"],
+                    "journal_bytes": s2["journal_bytes"],
+                    "replayed_ticks": s2["replayed_ticks"],
+                    "restore_j": s2["restore_j"],
+                    "restore_j_per_token": s2["restore_j_per_token"],
+                    "durability_write_j": s2["durability_write_j"],
+                    "accountant_restore_j": rep2["restore_j"],
+                    "accountant_replayed_ticks": rep2["replayed_ticks"]},
+        "killed": killed,
+        "recovered_requests": len(by_uid),
+        "streams_identical": bool(agree["identical"]),
+        "agreement": agree["agreement"],
+    }
+    assert res["streams_identical"], "a stream diverged after restart"
+    assert res["recovered_requests"] == N_REQUESTS
+    assert s2["snapshots_taken"] > 0
+    assert s2["replayed_ticks"] >= 1
+    assert s2["restore_j"] > 0.0
+    assert s2["journal_bytes"] > 0.0
+    atomic_write_json(OUT_RESTORE_PATH, res)
     return res
 
 
@@ -746,13 +858,31 @@ if __name__ == "__main__":
                          "arm per kind vs the fault-free baseline, gating "
                          "on stream identity + bounded drain, into "
                          "BENCH_serve_faults.json")
+    ap.add_argument("--fault-kind", default=None,
+                    choices=("process_kill",),
+                    help="with --chaos: run ONE dedicated fault arm "
+                         "instead of the transient matrix. process_kill "
+                         "is the kill-and-restart durability bench "
+                         "(DESIGN.md §19) into BENCH_serve_restore.json")
     ap.add_argument("--seed", type=int, default=0,
                     help="one seed for ALL stochastic bench inputs: "
                          "workload prompt draws and engine sampling "
                          "streams (same seed => identical runs)")
     args = ap.parse_args()
     SEED = args.seed
-    if args.chaos:
+    if args.chaos and args.fault_kind == "process_kill":
+        out = bench_restore()
+        print(json.dumps(out, indent=2))
+        print(f"\nwrote {os.path.abspath(OUT_RESTORE_PATH)}")
+        r = out["restore"]
+        print(f"restore: killed at tick "
+              f"{out['workload']['kill_tick']}, "
+              f"{r['snapshots_taken']:.0f} snapshots, replayed "
+              f"{r['replayed_ticks']:.0f} ticks "
+              f"({r['restore_j']:.3g} J); {out['recovered_requests']} "
+              f"requests recovered, streams identical: "
+              f"{out['streams_identical']}")
+    elif args.chaos:
         out = bench_chaos()
         print(json.dumps(out, indent=2))
         print(f"\nwrote {os.path.abspath(OUT_FAULTS_PATH)}")

@@ -19,6 +19,7 @@ Layout:  <dir>/ckpt_00000042/{manifest.json, arrays.npz}
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import shutil
@@ -38,6 +39,26 @@ class CheckpointConfig:
     directory: str
     keep_last: int = 3
     async_save: bool = True
+
+
+def tree_checksum(named: List[Tuple[str, np.ndarray]],
+                  extra: Dict[str, Any]) -> str:
+    """Content checksum over a checkpoint's arrays (name, dtype, shape,
+    raw bytes — in manifest order) and its ``extra`` dict (canonical JSON).
+    Stored in the manifest at save and re-verified at restore: a flipped
+    bit anywhere in the payload makes restore refuse loudly instead of
+    serving corrupt state (DESIGN.md §19). Public so integrity tests can
+    re-sign a deliberately doctored manifest and prove the load-time
+    semantic checks are independent of this digest."""
+    h = hashlib.sha256()
+    for name, arr in named:
+        a = np.ascontiguousarray(np.asarray(arr))
+        h.update(name.encode("utf-8"))
+        h.update(str(a.dtype).encode("utf-8"))
+        h.update(repr(tuple(a.shape)).encode("utf-8"))
+        h.update(a.tobytes())
+    h.update(json.dumps(extra, sort_keys=True).encode("utf-8"))
+    return h.hexdigest()
 
 
 def _flatten_with_names(tree: PyTree) -> List[Tuple[str, np.ndarray]]:
@@ -93,6 +114,7 @@ class CheckpointManager:
             "dtypes": {n: str(a.dtype) for n, a in named},
             "extra": extra or {},
         }
+        manifest["checksum"] = tree_checksum(named, manifest["extra"])
 
         def _write():
             try:
@@ -138,6 +160,21 @@ class CheckpointManager:
                 shutil.rmtree(os.path.join(self.cfg.directory, name),
                               ignore_errors=True)
 
+    def peek_extra(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """Read a checkpoint's manifest ``extra`` without loading arrays —
+        restore paths that must rebuild their runtime to match the
+        snapshot (e.g. the serve engine's int8->fp fallback flag) peek
+        here BEFORE calling :meth:`restore` with a target tree."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoints in {self.cfg.directory}")
+        with open(os.path.join(self._step_dir(step),
+                               "manifest.json")) as f:
+            return json.load(f).get("extra", {})
+
     # -- restore -------------------------------------------------------------------
 
     def restore(self, step: Optional[int] = None, *, target: PyTree = None,
@@ -158,6 +195,21 @@ class CheckpointManager:
             manifest = json.load(f)
         arrays = np.load(os.path.join(d, "arrays.npz"))
         by_name = {n: arrays[n] for n in manifest["names"]}
+
+        # integrity gate: refuse a tampered/bit-rotted checkpoint before
+        # any of it reaches the caller (pre-checksum checkpoints from
+        # older saves carry no digest and skip the gate)
+        want_sum = manifest.get("checksum")
+        if want_sum is not None:
+            got_sum = tree_checksum(
+                [(n, by_name[n]) for n in manifest["names"]],
+                manifest.get("extra", {}))
+            if got_sum != want_sum:
+                raise RuntimeError(
+                    f"checkpoint {d} failed integrity check: manifest "
+                    f"checksum {want_sum[:16]}..., recomputed "
+                    f"{got_sum[:16]}... — refusing to restore corrupt "
+                    f"state")
 
         if target is None:
             raise ValueError("restore requires a target structure")

@@ -95,6 +95,18 @@ class CarbonAccountant:
         self._recovery_bytes = 0.0
         self._quarantined = 0.0
         self._shed = 0.0
+        # durability ledger (DESIGN.md §19): what crash-consistency costs —
+        # snapshot + journal bytes written to persistent storage (billed at
+        # the per-byte DRAM cost as a floor) and the replayed recompute a
+        # warm restart spent re-deriving post-snapshot state. The
+        # checkpoint-interval J/token vs. recovery-time tradeoff reads
+        # straight off these channels.
+        self._snapshot_bytes = 0.0
+        self._journal_bytes = 0.0
+        self._restore_flops = 0.0
+        self._restore_bytes = 0.0
+        self._replayed_ticks = 0.0
+        self._snapshots = 0.0
         # training-phase ledgers (DESIGN.md §13): forward and backward bill
         # separately — the per-phase split the edge-training literature
         # (DeepEn2023, Sobhani et al.) calls for
@@ -170,6 +182,25 @@ class CarbonAccountant:
                 getattr(metrics, "recovery_bytes", 0.0))
             self._quarantined += float(getattr(metrics, "quarantined", 0.0))
             self._shed += float(getattr(metrics, "shed", 0.0))
+
+    def observe_durability(self, *, snapshot_bytes: float = 0.0,
+                           journal_bytes: float = 0.0,
+                           restore_flops: float = 0.0,
+                           restore_bytes: float = 0.0,
+                           replayed_ticks: float = 0.0,
+                           snapshots: float = 0.0) -> None:
+        """Bill durability work (DESIGN.md §19): snapshot/journal writes as
+        they land on disk, and replayed recompute during a warm restart.
+        Replay's flops/bytes are ALSO observed via observe_serve (the
+        recompute is physically real) — this channel breaks the same
+        joules out so restore cost is visible next to recovery_j."""
+        with self._lock:
+            self._snapshot_bytes += float(snapshot_bytes)
+            self._journal_bytes += float(journal_bytes)
+            self._restore_flops += float(restore_flops)
+            self._restore_bytes += float(restore_bytes)
+            self._replayed_ticks += float(replayed_ticks)
+            self._snapshots += float(snapshots)
 
     def observe_train(self, metrics) -> None:
         """Bill one train-engine tick (train.TrainStepMetrics-shaped).
@@ -362,6 +393,22 @@ class CarbonAccountant:
                 (energy.compute_energy_j(self._recovery_flops, self._spec)
                  + energy.dram_energy_j(self._recovery_bytes))
                 / self._tokens if self._tokens > 0 else 0.0),
+            # durability tier (DESIGN.md §19): snapshot/journal write
+            # traffic and warm-restart replay recompute. All 0.0 on a run
+            # that never checkpoints (zero-state guard, regression-locked).
+            "snapshots_taken": self._snapshots,
+            "snapshot_bytes": self._snapshot_bytes,
+            "journal_bytes": self._journal_bytes,
+            "replayed_ticks": self._replayed_ticks,
+            "restore_j": (energy.compute_energy_j(self._restore_flops,
+                                                  self._spec)
+                          + energy.dram_energy_j(self._restore_bytes)),
+            "restore_j_per_token": (
+                (energy.compute_energy_j(self._restore_flops, self._spec)
+                 + energy.dram_energy_j(self._restore_bytes))
+                / self._tokens if self._tokens > 0 else 0.0),
+            "durability_write_j": energy.dram_energy_j(
+                self._snapshot_bytes + self._journal_bytes),
             "modeled_dram_j": self.modeled_dram_j,
             "modeled_compute_j": self.modeled_compute_j,
             "modeled_j_per_token": (modeled_j / self._tokens
@@ -382,6 +429,38 @@ class CarbonAccountant:
             "gco2_per_mtoken": (grid.joules_to_gco2(op, self.config.grid_mix)
                                 / (self._tokens / 1e6)) if self._tokens else None,
         }
+
+    # every accumulated ledger — the crash-consistent snapshot payload
+    # (DESIGN.md §19). Identity/config (_spec, _embodied_j_dev, config)
+    # and the wall-clock anchor (_wall_start) stay the restored
+    # instance's own: a restore resumes counting, not the dead clock.
+    _LEDGER_FIELDS = (
+        "_steps", "_tokens", "_active_s", "_bytes_moved", "_modeled_flops",
+        "_prefill_tokens", "_prefix_hit_tokens", "_saved_bytes",
+        "_saved_flops", "_prefill_gather_bytes", "_compaction_moves",
+        "_spec_draft_tokens", "_spec_accepted_tokens", "_draft_flops",
+        "_draft_bytes", "_verify_flops", "_verify_bytes",
+        "_cow_bytes", "_cow_copies", "_forks", "_fork_saved_bytes",
+        "_fork_saved_flops", "_recovery_tokens", "_recovery_flops",
+        "_recovery_bytes", "_quarantined", "_shed",
+        "_snapshot_bytes", "_journal_bytes", "_restore_flops",
+        "_restore_bytes", "_replayed_ticks", "_snapshots",
+        "_train_steps", "_train_samples", "_fwd_flops", "_bwd_flops",
+        "_fwd_bytes", "_bwd_bytes", "_opt_bytes")
+
+    def state_dict(self) -> Dict:
+        """JSON-serializable counter state for engine snapshots."""
+        with self._lock:
+            return {k: getattr(self, k) for k in self._LEDGER_FIELDS}
+
+    def load_state(self, d: Dict) -> None:
+        """Restore counters saved by :meth:`state_dict` (missing keys keep
+        their fresh-instance zeros — older snapshots stay loadable)."""
+        with self._lock:
+            for k in self._LEDGER_FIELDS:
+                if k in d:
+                    cast = int if k in ("_steps", "_train_steps") else float
+                    setattr(self, k, cast(d[k]))
 
     def dump(self, path: str) -> None:
         with open(path, "w") as f:

@@ -16,8 +16,8 @@ import numpy as np
 from repro.configs import base as cfgbase
 from repro.core import accounting
 from repro.models import transformer as tf_lib
-from repro.serve import (FAULT_KINDS, FaultPlan, Scheduler, SchedulerConfig,
-                         ServeConfig, ServeEngine)
+from repro.serve import (FAULT_KINDS, FaultPlan, ProcessKilled, Scheduler,
+                         SchedulerConfig, ServeConfig, ServeEngine)
 
 
 def validate_args(ap: argparse.ArgumentParser,
@@ -63,6 +63,20 @@ def validate_args(ap: argparse.ArgumentParser,
                  "speculation rides the speculative verify pass)")
     if args.spec_tree_m > 1 and args.spec_drafter != "ngram":
         ap.error("--spec-tree-m > 1 drafts with the ngram drafter only")
+    if args.checkpoint_interval < 0:
+        ap.error(f"--checkpoint-interval must be >= 0, got "
+                 f"{args.checkpoint_interval}")
+    if args.checkpoint_interval > 0 and args.checkpoint_dir is None:
+        ap.error("--checkpoint-interval requires --checkpoint-dir "
+                 "(snapshots need somewhere durable to land, "
+                 "DESIGN.md §19)")
+    if args.resume and args.checkpoint_dir is None:
+        ap.error("--resume requires --checkpoint-dir (restore loads the "
+                 "snapshot + journal written there)")
+    if args.fault_kind == "process_kill" and args.checkpoint_dir is None:
+        ap.error("--fault-kind process_kill requires --checkpoint-dir: "
+                 "the kill is only survivable with a snapshot + journal "
+                 "to restart from (DESIGN.md §19)")
 
 
 def main() -> None:
@@ -132,6 +146,19 @@ def main() -> None:
     ap.add_argument("--deadline-ticks", type=int, default=None,
                     help="per-request deadline in ticks; overdue queued "
                          "requests are shed, not served late")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="durability tier (DESIGN.md §19): journal every "
+                         "admission (fsync'd) and snapshot engine state "
+                         "here; a killed engine warm-restarts "
+                         "token-identically via --resume")
+    ap.add_argument("--checkpoint-interval", type=int, default=0,
+                    help="snapshot every N ticks (0 = journal only; "
+                         "requires --checkpoint-dir). Smaller = less "
+                         "replay after a crash, more write energy")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore from --checkpoint-dir before serving: "
+                         "load the latest snapshot, replay the journal "
+                         "tail, resume mid-stream requests exactly")
     args = ap.parse_args()
     validate_args(ap, args)
 
@@ -147,32 +174,53 @@ def main() -> None:
     params = tf_lib.init_lm(jax.random.PRNGKey(0), cfg, dtype=jnp.float32).params
     acct = accounting.CarbonAccountant(accounting.AccountantConfig(
         device="tpu_v5e", n_devices=jax.device_count(), grid_mix=args.grid_mix))
-    eng = ServeEngine(params, cfg,
-                      ServeConfig(max_slots=args.slots, max_len=256,
-                                  temperature=args.temperature,
-                                  quant=args.quant, paged=args.paged,
-                                  page_size=args.page_size,
-                                  num_pages=args.num_pages,
-                                  prefix_cache=not args.no_prefix_cache,
-                                  prefill_chunk=args.prefill_chunk,
-                                  spec_k=args.spec_k,
-                                  spec_drafter=args.spec_drafter,
-                                  spec_tree_m=args.spec_tree_m,
-                                  compact_threshold=args.compact_threshold,
-                                  evict_policy=args.evict_policy,
-                                  faults=(FaultPlan.single(
-                                      args.fault_kind, tick=args.fault_tick,
-                                      seed=args.fault_seed)
-                                      if args.fault_kind else None)),
-                      accountant=acct,
-                      scheduler=Scheduler(SchedulerConfig(policy=args.policy)))
+    scfg = ServeConfig(max_slots=args.slots, max_len=256,
+                       temperature=args.temperature,
+                       quant=args.quant, paged=args.paged,
+                       page_size=args.page_size,
+                       num_pages=args.num_pages,
+                       prefix_cache=not args.no_prefix_cache,
+                       prefill_chunk=args.prefill_chunk,
+                       spec_k=args.spec_k,
+                       spec_drafter=args.spec_drafter,
+                       spec_tree_m=args.spec_tree_m,
+                       compact_threshold=args.compact_threshold,
+                       evict_policy=args.evict_policy,
+                       faults=(FaultPlan.single(
+                           args.fault_kind, tick=args.fault_tick,
+                           seed=args.fault_seed)
+                           if args.fault_kind else None),
+                       checkpoint_dir=args.checkpoint_dir,
+                       checkpoint_interval=args.checkpoint_interval)
+
+    def build() -> ServeEngine:
+        return ServeEngine(params, cfg, scfg, accountant=acct,
+                           scheduler=Scheduler(
+                               SchedulerConfig(policy=args.policy)))
+
+    eng = build()
+    done = []
+    if args.resume:
+        done.extend(eng.restore())
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=rng.integers(4, 12))
         eng.submit(prompt, max_tokens=args.max_tokens,
                    deadline_ticks=args.deadline_ticks,
                    n_best=args.nbest)
-    done = eng.run_until_drained()
+    while True:
+        try:
+            done.extend(eng.run_until_drained())
+            break
+        except ProcessKilled as e:
+            # simulated crash (DESIGN.md §19): the old engine object is
+            # dead — restart purely from disk and keep serving
+            print(f"engine killed ({e}); warm-restarting from "
+                  f"{args.checkpoint_dir}")
+            eng = build()
+            done.extend(eng.restore())
+    # restore delivery is at-least-once: dedupe by uid, keep stream order
+    done = sorted({r.uid: r for r in done}.values(), key=lambda r: r.uid)
     for r in done:
         print(f"req {r.uid}: prompt_len={len(r.prompt)} -> {r.generated}")
         if r.nbest is not None:
@@ -211,6 +259,13 @@ def main() -> None:
               f"quarantined, {s['shed']} shed, recovery "
               f"{s['recovery_j']:.3e} J ({s['recovery_tokens']} toks), "
               f"{s['degraded_ticks']} degraded ticks")
+    if args.checkpoint_dir is not None:
+        print(f"durability: {s['snapshots_taken']:.0f} snapshots "
+              f"({s['snapshot_bytes']:.3g} B) + journal "
+              f"{s['journal_bytes']:.3g} B = "
+              f"{s['durability_write_j']:.3e} J writes; replayed "
+              f"{s['replayed_ticks']:.0f} ticks on restore "
+              f"({s['restore_j']:.3e} J)")
     if args.spec_k > 0:
         print(f"speculative decode (k={args.spec_k}, "
               f"{args.spec_drafter}): {s['accept_rate']:.1%} accept rate, "

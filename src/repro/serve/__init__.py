@@ -2,8 +2,14 @@
 
 from repro.serve.engine import (Request, ServeConfig, ServeEngine,  # noqa: F401
                                 StepMetrics)
-from repro.serve.faults import (FAULT_KINDS, FaultEvent,  # noqa: F401
-                                FaultInjector, FaultPlan, GuardrailConfig)
+from repro.serve.faults import (FAULT_KINDS,  # noqa: F401
+                                TRANSIENT_FAULT_KINDS, FaultEvent,
+                                FaultInjector, FaultPlan, GuardrailConfig,
+                                ProcessKilled)
+from repro.serve.snapshot import (Journal,  # noqa: F401
+                                  check_fingerprint, config_fingerprint,
+                                  host_state_dict, install_host_state,
+                                  reconcile_ownership)
 from repro.serve.pages import (PagePool, block_tokens,  # noqa: F401
                                fragmentation)
 from repro.serve.quality import (generation_agreement,  # noqa: F401

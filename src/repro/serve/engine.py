@@ -24,6 +24,7 @@ correctness oracle and the benchmark's "before").
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -31,13 +32,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
 from repro.core import accounting, energy
 from repro.models import transformer as tf_lib
 from repro.serve import spec as spec_lib
 from repro.serve.faults import (FaultInjector, FaultPlan, GuardrailConfig,
-                                corrupt_kv_page)
+                                ProcessKilled, corrupt_kv_page)
 from repro.serve.pages import ROOT, PagePool, block_tokens, fragmentation
 from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.serve.snapshot import (Journal, check_fingerprint,
+                                  host_state_dict, install_host_state,
+                                  reconcile_ownership)
 from repro.train.ft import Ewma
 
 PyTree = Any
@@ -113,6 +118,14 @@ class ServeConfig:
     faults: Optional[FaultPlan] = None
     guard: GuardrailConfig = dataclasses.field(
         default_factory=GuardrailConfig)
+    # durability tier (DESIGN.md §19): directory for crash-consistent
+    # snapshots + the write-ahead request journal (None = durability off,
+    # the pre-§19 behavior exactly). checkpoint_interval > 0 snapshots the
+    # full engine state every N completed ticks — the knob trades snapshot
+    # write J/token against recovery replay J (restore_j): shorter
+    # intervals write more, replay less.
+    checkpoint_dir: Optional[str] = None
+    checkpoint_interval: int = 0
 
 
 @dataclasses.dataclass
@@ -335,6 +348,13 @@ class ServeEngine:
         if not 0.0 <= serve_cfg.compact_threshold <= 1.0:
             raise ValueError(f"compact_threshold must be in [0, 1], got "
                              f"{serve_cfg.compact_threshold}")
+        if serve_cfg.checkpoint_interval < 0:
+            raise ValueError(f"checkpoint_interval must be >= 0, got "
+                             f"{serve_cfg.checkpoint_interval}")
+        if (serve_cfg.checkpoint_interval > 0
+                and serve_cfg.checkpoint_dir is None):
+            raise ValueError("checkpoint_interval > 0 requires a "
+                             "checkpoint_dir to write snapshots into")
         self.scfg = serve_cfg
         self.guard = serve_cfg.guard
         self.accountant = accountant
@@ -399,6 +419,30 @@ class ServeEngine:
         self.audit_failures = 0
         self.audit_log: List[str] = []
         self.readback_retries_total = 0
+        # durability tier (DESIGN.md §19): snapshot manager + write-ahead
+        # journal. Synchronous saves — a snapshot must be on disk before
+        # the tick that follows it can be journaled as replayable-after.
+        self._ckpt_mgr: Optional[CheckpointManager] = None
+        self._journal: Optional[Journal] = None
+        if serve_cfg.checkpoint_dir is not None:
+            self._ckpt_mgr = CheckpointManager(CheckpointConfig(
+                directory=os.path.join(serve_cfg.checkpoint_dir,
+                                       "snapshots"),
+                async_save=False))
+            self._journal = Journal(os.path.join(serve_cfg.checkpoint_dir,
+                                                 "journal.jsonl"))
+        # replay mode: journaling/snapshotting suppressed, recompute billed
+        # to the restore_* channels instead of silently folded into serve
+        self._replaying = False
+        # ticks at or before this index already fired their process_kill
+        # (the crash a restore recovered from); -1 = fresh engine
+        self._restore_boundary = -1
+        self.snapshots_taken = 0
+        self.snapshot_bytes_total = 0.0
+        self.journal_bytes_total = 0.0
+        self.replayed_ticks = 0
+        self.restore_flops = 0.0
+        self.restore_bytes = 0.0
         self._init_runtime(params, cfg)
 
     def _init_runtime(self, params: PyTree, cfg: tf_lib.LMConfig) -> None:
@@ -981,6 +1025,18 @@ class ServeEngine:
                     f"pool has only {self.pool.num_pages}; raise num_pages "
                     f"or lower max_tokens")
         self._uid += 1
+        if self._journal is not None and not self._replaying:
+            # WAL contract (DESIGN.md §19): the admission is durable
+            # (fsync'd) BEFORE it is acked — an acked request survives any
+            # crash and replays from the journal
+            nb = self._journal.append_submit(
+                uid=self._uid, prompt=[int(t) for t in prompt.tolist()],
+                max_tokens=max_tokens, temperature=temperature,
+                deadline_ticks=deadline_ticks, n_best=n_best,
+                tick=self._tick_idx)
+            self.journal_bytes_total += nb
+            if self.accountant is not None:
+                self.accountant.observe_durability(journal_bytes=nb)
         self.scheduler.submit(Request(self._uid, prompt, max_tokens,
                                       temperature,
                                       deadline_ticks=deadline_ticks,
@@ -1075,6 +1131,18 @@ class ServeEngine:
                         inj.count("pool_spike")
             elif ev.kind == "kv_bitflip" and self.scfg.paged:
                 self._inject_kv_bitflip(ev)
+            elif ev.kind == "process_kill":
+                # simulated process death (DESIGN.md §19): the exception
+                # propagates out of step() — recovery is restore(), not
+                # any in-tick rung. A kill at or before the restore
+                # boundary is the crash a restore already recovered from
+                # and must not re-fire during or after replay.
+                if ev.tick > self._restore_boundary:
+                    inj.count("process_kill")
+                    raise ProcessKilled(
+                        f"process_kill fault at tick {tick}: engine "
+                        f"state is gone; restart from checkpoint_dir "
+                        f"via ServeEngine.restore()")
 
     def _inject_kv_bitflip(self, ev) -> None:
         """Corrupt one K page of a decoding slot — inside its attended
@@ -2134,20 +2202,8 @@ class ServeEngine:
         no page listed twice by one slot). Violations are recorded, never
         raised — detection must not be the crash."""
         violations = self.pool.audit()
-        owned: Dict[int, int] = {}
-        for slot, pages in enumerate(self._slot_pages):
-            if len(set(pages)) != len(pages):
-                violations.append(f"slot {slot} lists a page twice")
-            for p in pages:
-                owned[p] = owned.get(p, 0) + 1
-        for _, pages in self._spike_holds:
-            for p in pages:
-                owned[p] = owned.get(p, 0) + 1
-        for p, n in owned.items():
-            ref = self.pool.refcount(p)
-            if ref < n:
-                violations.append(
-                    f"page {p}: engine holds {n} refs, pool says {ref}")
+        violations += reconcile_ownership(self.pool, self._slot_pages,
+                                          self._spike_holds)
         if violations:
             self.audit_failures += len(violations)
             self.audit_log.extend(
@@ -2389,6 +2445,40 @@ class ServeEngine:
         if self.accountant is not None:
             self.accountant.observe_serve(m)
         self._tick_idx += 1
+        if self._replaying:
+            # replayed recompute is physically honest work already billed
+            # via observe_serve above — restore_j breaks the SAME joules
+            # out as the recovery-cost channel (DESIGN.md §19), so the
+            # checkpoint-interval J/token tradeoff is first-class
+            self.replayed_ticks += 1
+            self.restore_flops += m.flops
+            self.restore_bytes += m.bytes_moved
+            if self.accountant is not None:
+                self.accountant.observe_durability(
+                    restore_flops=m.flops, restore_bytes=m.bytes_moved,
+                    replayed_ticks=1)
+        elif self._journal is not None:
+            # tick record first (replay needs every tick, even idle ones:
+            # fault schedules and deadlines key on absolute tick index),
+            # THEN the snapshot — its journal_seq cut must sit after this
+            # tick's record so replay resumes exactly at tick_idx
+            d_journal = self._journal.append_tick(
+                tick=tick,
+                finished=[[r.uid,
+                           [int(t) for t in r.generated],
+                           ([[int(t) for t in s] for s in r.nbest]
+                            if r.nbest is not None else None)]
+                          for r in finished])
+            self.journal_bytes_total += d_journal
+            d_snapshot = 0
+            if (self.scfg.checkpoint_interval > 0
+                    and self._tick_idx % self.scfg.checkpoint_interval
+                    == 0):
+                d_snapshot = self._write_snapshot()
+            if self.accountant is not None:
+                self.accountant.observe_durability(
+                    journal_bytes=d_journal, snapshot_bytes=d_snapshot,
+                    snapshots=1 if d_snapshot else 0)
         return finished
 
     def run_until_drained(self, max_ticks: int = 10000) -> List[Request]:
@@ -2399,6 +2489,144 @@ class ServeEngine:
                                                for r in self.slot_req):
                 break
         return done
+
+    # -- durability: crash-consistent snapshot + journal replay ---------------
+
+    def _write_snapshot(self) -> int:
+        """Persist a crash-consistent checkpoint of the full engine:
+        the device tree (caches, page table, positions, RNG keys) plus the
+        complete host mirror (snapshot.host_state_dict) ride one atomic
+        CheckpointManager save. ``journal_seq`` marks the replay cut:
+        journal records with seq below it are baked into this snapshot;
+        restore replays everything at or after it. Returns bytes written
+        (billed as durability DRAM traffic)."""
+        step = self._tick_idx
+        extra = host_state_dict(self)
+        extra["journal_seq"] = self._journal.seq
+        self._ckpt_mgr.save(step, self.state, extra=extra)
+        d = self._ckpt_mgr._step_dir(step)
+        nbytes = sum(os.path.getsize(os.path.join(d, f))
+                     for f in os.listdir(d))
+        self.snapshots_taken += 1
+        self.snapshot_bytes_total += nbytes
+        return nbytes
+
+    def restore(self) -> List[Request]:
+        """Warm restart from disk (DESIGN.md §19): load the latest
+        snapshot (if any), then deterministically replay the journal tail.
+        Must be called on a FRESH engine built with the same ServeConfig
+        and the same ``checkpoint_dir`` as the dead one. Replayed ticks
+        repeat the original run bit-identically (seeded RNG folds, sorted
+        host iteration, seeded fault plans) — divergence or a corrupted
+        snapshot fails loudly rather than serving wrong streams.
+
+        Returns every request finished up to now — both pre-crash
+        finishes reconstructed from the journal and finishes produced by
+        replay. Delivery is at-least-once: callers that already streamed
+        pre-crash results dedupe by uid."""
+        if self._ckpt_mgr is None or self._journal is None:
+            raise RuntimeError("restore() requires checkpoint_dir")
+        if self._tick_idx != 0 or self.metrics_log or len(self.scheduler):
+            raise RuntimeError("restore() must run on a fresh engine — "
+                               "this one has already ticked or admitted")
+        journal_seq = 0
+        step = self._ckpt_mgr.latest_step()
+        if step is not None:
+            extra = self._ckpt_mgr.peek_extra(step)
+            # config gate FIRST: a snapshot from a differently-configured
+            # engine must be diagnosed as such, not as a shape mismatch
+            # halfway through loading the device tree
+            check_fingerprint(self.scfg, extra.get("fingerprint", {}))
+            if extra.get("fell_back"):
+                # the snapshot's device tree is fp — rebuild the runtime
+                # from the fp oracle BEFORE restoring so dtypes line up
+                self._fell_back = True
+                self._init_runtime(*self._oracle)
+            _, tree, extra = self._ckpt_mgr.restore(step,
+                                                    target=self.state)
+            self.state = tree
+            install_host_state(self, extra)
+            journal_seq = int(extra.get("journal_seq", 0))
+            if self.scfg.paged:
+                # snapshot-load shares the audit's reconciliation checker
+                # (DESIGN.md §19) — but HERE violations refuse, loudly:
+                # restoring inconsistent ownership would corrupt streams
+                violations = self.pool.audit()
+                violations += reconcile_ownership(
+                    self.pool, self._slot_pages, self._spike_holds)
+                if violations:
+                    raise RuntimeError(
+                        "snapshot failed consistency check: "
+                        + "; ".join(violations))
+            self._tick = self._tick_for(self._cur_spec_k)
+        recovered: List[Request] = []
+        submits: Dict[int, dict] = {}
+        post: List[dict] = []
+        for rec in self._journal.records():
+            if rec["kind"] == "submit":
+                submits[int(rec["uid"])] = rec
+            if rec["seq"] < journal_seq:
+                if rec["kind"] == "tick":
+                    # pre-snapshot finishes: reconstruct the completed
+                    # requests so the caller sees every result exactly as
+                    # the dead engine emitted it
+                    for uid, gen, nbest in rec["finished"]:
+                        s = submits[int(uid)]
+                        recovered.append(Request(
+                            int(uid),
+                            np.asarray(s["prompt"], np.int32),
+                            max_tokens=int(s["max_tokens"]),
+                            temperature=s["temperature"],
+                            generated=[int(t) for t in gen],
+                            done=True,
+                            deadline_ticks=s["deadline_ticks"],
+                            submit_tick=int(s["tick"]),
+                            n_best=int(s["n_best"]),
+                            nbest=([[int(t) for t in st] for st in nbest]
+                                   if nbest is not None else None)))
+            else:
+                post.append(rec)
+        self._replaying = True
+        try:
+            for rec in post:
+                if rec["kind"] == "submit":
+                    uid = self.submit(
+                        np.asarray(rec["prompt"], np.int32),
+                        max_tokens=int(rec["max_tokens"]),
+                        temperature=rec["temperature"],
+                        deadline_ticks=rec["deadline_ticks"],
+                        n_best=int(rec["n_best"]))
+                    if uid != int(rec["uid"]):
+                        raise RuntimeError(
+                            f"replay diverged: journaled submit uid "
+                            f"{rec['uid']}, replay assigned {uid}")
+                else:
+                    if int(rec["tick"]) != self._tick_idx:
+                        raise RuntimeError(
+                            f"replay diverged: journal at tick "
+                            f"{rec['tick']}, engine at {self._tick_idx}")
+                    fins = self.step()
+                    got = {int(r.uid): ([int(t) for t in r.generated],
+                                        ([[int(t) for t in st]
+                                          for st in r.nbest]
+                                         if r.nbest is not None else None))
+                           for r in fins}
+                    want = {int(u): ([int(t) for t in g],
+                                     ([[int(t) for t in st] for st in nb]
+                                      if nb is not None else None))
+                            for u, g, nb in rec["finished"]}
+                    if got != want:
+                        raise RuntimeError(
+                            f"replay diverged at tick {rec['tick']}: "
+                            f"journaled finishes {sorted(want)} vs "
+                            f"replayed {sorted(got)} (or streams differ)")
+                    recovered.extend(fins)
+        finally:
+            self._replaying = False
+        # kills at or before this tick already happened pre-crash; a
+        # surviving fault plan must not re-fire them (crash loop)
+        self._restore_boundary = self._tick_idx
+        return recovered
 
     # -- aggregate metrics ----------------------------------------------------
 
@@ -2481,6 +2709,18 @@ class ServeEngine:
         out["fp_fallbacks"] = self.fp_fallbacks
         out["compaction_pauses"] = self.compaction_pauses
         out["audit_failures"] = self.audit_failures
+        # durability tier (DESIGN.md §19): all 0.0 on an engine that never
+        # checkpoints — the zero-state guard benches and dashboards rely on
+        out["snapshots_taken"] = self.snapshots_taken
+        out["snapshot_bytes"] = self.snapshot_bytes_total
+        out["journal_bytes"] = self.journal_bytes_total
+        out["replayed_ticks"] = self.replayed_ticks
+        out["restore_j"] = (energy.compute_energy_j(self.restore_flops)
+                            + energy.dram_energy_j(self.restore_bytes))
+        out["restore_j_per_token"] = (out["restore_j"] / toks
+                                      if toks > 0 else 0.0)
+        out["durability_write_j"] = energy.dram_energy_j(
+            self.snapshot_bytes_total + self.journal_bytes_total)
         return out
 
 

@@ -38,6 +38,14 @@ Fault classes and where they land:
   all on its first attempt; the engine validates ranges and re-reads.
   In-range flips are undetectable without ECC — a documented limit, not
   a silent one.
+* ``process_kill`` — the whole engine dies at the scheduled tick
+  (:class:`ProcessKilled` propagates out of ``step()``): preemption, OOM
+  kill, node failure. Unlike every transient kind above, recovery is not
+  in-tick — it is the durability tier (DESIGN.md §19): restart from the
+  latest snapshot, replay the journal, resume token-identically. A kill
+  at or before an engine's restore boundary is treated as already-fired
+  (it is the crash the restore just recovered from) and does not
+  re-raise.
 """
 
 from __future__ import annotations
@@ -49,7 +57,22 @@ import jax.numpy as jnp
 import numpy as np
 
 FAULT_KINDS = ("nan_logits", "inf_logits", "kv_bitflip", "pool_spike",
-               "stall", "readback_garble", "readback_drop")
+               "stall", "readback_garble", "readback_drop",
+               "process_kill")
+
+# transient kinds the in-tick ladder recovers from without restart; the
+# chaos matrix loops that drain a single engine iterate these —
+# ``process_kill`` needs the restart harness (benchmarks/serve_bench.py
+# ``bench_restore``) instead
+TRANSIENT_FAULT_KINDS = tuple(k for k in FAULT_KINDS
+                              if k != "process_kill")
+
+
+class ProcessKilled(RuntimeError):
+    """Raised out of ``ServeEngine.step()`` when a ``process_kill`` fault
+    fires: the simulated process death. Callers model the crash by
+    abandoning the engine object and restarting from disk via
+    ``ServeEngine.restore()`` (DESIGN.md §19)."""
 
 # host sleep per unit of a stall event's magnitude — big enough to spike a
 # tick-wall EWMA whose healthy ticks are milliseconds, small enough that a

@@ -470,6 +470,57 @@ class PagePool:
                 v.append(f"_page_depth entry for unpublished page {p}")
         return v
 
+    # -- snapshot serialization (DESIGN.md §19) -------------------------------
+
+    def state_dict(self) -> Dict:
+        """JSON-able snapshot of the whole allocator + registry. Order is
+        semantic and preserved exactly: ``free`` is the LIFO free list
+        (``alloc`` pops its tail), ``lru`` is park order (eviction pops its
+        head) — a reordered restore would allocate different physical
+        pages and break bit-identical replay."""
+        return {
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "evict_policy": self.evict_policy,
+            "free": list(self._free),
+            "ref": list(self._ref),
+            # the registry bijection, one entry per published page:
+            # [page, parent, block tokens]
+            "registry": [[p, key[0], list(key[1])]
+                         for p, key in self._page_key.items()
+                         if key is not None],
+            "children": {str(parent): sorted(kids)
+                         for parent, kids in self._children.items()},
+            "page_depth": {str(p): d for p, d in self._page_depth.items()},
+            "lru": list(self._lru),
+            "stats": dataclasses.asdict(self.stats),
+        }
+
+    def load_state(self, d: Dict) -> None:
+        """Restore :meth:`state_dict` in place (``block_cost`` and the
+        identity knobs stay as constructed). Refuses a snapshot taken
+        under different pool geometry — its page ids would be
+        meaningless here."""
+        for field in ("num_pages", "page_size", "evict_policy"):
+            if d[field] != getattr(self, field):
+                raise RuntimeError(
+                    f"pool snapshot mismatch: {field} = {d[field]!r} in "
+                    f"snapshot, {getattr(self, field)!r} in this pool")
+        self._free = [int(p) for p in d["free"]]
+        self._ref = [int(r) for r in d["ref"]]
+        self._key_to_page = {}
+        self._page_key = {}
+        for page, parent, block in d["registry"]:
+            key: BlockKey = (int(parent), tuple(int(t) for t in block))
+            self._page_key[int(page)] = key
+            self._key_to_page[key] = int(page)
+        self._children = {int(parent): set(int(k) for k in kids)
+                          for parent, kids in d["children"].items()}
+        self._page_depth = {int(p): int(depth)
+                            for p, depth in d["page_depth"].items()}
+        self._lru = OrderedDict((int(p), None) for p in d["lru"])
+        self.stats = PoolStats(**d["stats"])
+
     # -- introspection --------------------------------------------------------
 
     def refcount(self, page: int) -> int:

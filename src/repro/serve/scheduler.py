@@ -101,6 +101,12 @@ class Scheduler:
         self._q = deque(r for r in self._q if id(r) not in chosen)
         return picked
 
+    def load(self, reqs: List["Request"]) -> None:
+        """Replace the queue wholesale, in order — snapshot restore
+        (DESIGN.md §19) rebuilds the exact pending sequence so replayed
+        admission decisions repeat bit-identically."""
+        self._q = deque(reqs)
+
     def requeue_front(self, reqs: List["Request"]) -> None:
         """Return selected-but-not-admitted requests to the queue head
         (e.g. SSD archs admit only equal-length groups per prefill call)."""

@@ -20,9 +20,9 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.models import transformer as tf_lib
-from repro.serve import (FAULT_KINDS, FaultEvent, FaultInjector, FaultPlan,
-                         GuardrailConfig, PagePool, Scheduler,
-                         SchedulerConfig, ServeConfig, ServeEngine,
+from repro.serve import (FAULT_KINDS, TRANSIENT_FAULT_KINDS, FaultEvent,
+                         FaultInjector, FaultPlan, GuardrailConfig, PagePool,
+                         Scheduler, SchedulerConfig, ServeConfig, ServeEngine,
                          generation_agreement)
 from repro.serve.engine import Request
 from repro.serve.faults import GARBLE_VALUE, corrupt_kv_page
@@ -128,7 +128,10 @@ class TestChaosMatrix:
         the cache tree ends NaN-free (quarantine teardown scrubs the
         poisoned private pages before they are recycled)."""
         _, base = _run(model)
-        for kind in FAULT_KINDS:
+        # transient kinds only: process_kill has no in-tick recovery — it
+        # aborts the process and restarts via ServeEngine.restore(),
+        # locked in tests/test_serve_snapshot.py (DESIGN.md §19)
+        for kind in TRANSIENT_FAULT_KINDS:
             plan = FaultPlan.single(kind, tick=2, seed=11, slot=1)
             eng, got = _run(model, plan)
             s = eng.summary()
@@ -466,7 +469,8 @@ class TestValidation:
             spec_k=0, page_size=16, prefill_chunk=0, compact_threshold=0.0,
             num_pages=None, paged=False, fault_kind=None, fault_tick=2,
             deadline_ticks=None, slots=4, nbest=1, spec_tree_m=1,
-            spec_drafter="ngram")
+            spec_drafter="ngram", checkpoint_dir=None,
+            checkpoint_interval=0, resume=False)
         vars(ns).update(over)
         return ns
 
@@ -479,7 +483,11 @@ class TestValidation:
         dict(nbest=0), dict(nbest=2, paged=False),
         dict(nbest=8, slots=4, paged=True),
         dict(spec_tree_m=0), dict(spec_tree_m=2, spec_k=0, paged=True),
-        dict(spec_tree_m=2, spec_k=2, paged=True, spec_drafter="oracle")])
+        dict(spec_tree_m=2, spec_k=2, paged=True, spec_drafter="oracle"),
+        dict(checkpoint_interval=-1),
+        dict(checkpoint_interval=2, checkpoint_dir=None),
+        dict(resume=True, checkpoint_dir=None),
+        dict(fault_kind="process_kill", checkpoint_dir=None)])
     def test_launcher_rejects_bad_flags(self, over):
         from repro.launch.serve import validate_args
         with pytest.raises(SystemExit):
@@ -490,6 +498,9 @@ class TestValidation:
         validate_args(argparse.ArgumentParser(),
                       self._ns(paged=True, prefill_chunk=32, page_size=16,
                                spec_k=2, fault_kind="nan_logits"))
+        validate_args(argparse.ArgumentParser(),
+                      self._ns(checkpoint_dir="ckpt", checkpoint_interval=3,
+                               resume=True, fault_kind="process_kill"))
 
 
 # -----------------------------------------------------------------------------

@@ -1,0 +1,499 @@
+"""Durability tier (DESIGN.md §19): crash-consistent engine snapshots,
+write-ahead journal replay, token-identical warm restart.
+
+The load-bearing invariant, locked across serving modes (paged fp32/int8,
+speculative, COW n-best, chunked mid-prefill): an engine snapshotted at an
+ARBITRARY tick and restored into a fresh process continues every stream —
+and every deterministic summary counter — exactly as the uninterrupted run
+would have. Plus: the integrity gates refuse corrupted or inconsistent
+snapshots loudly, the journal survives torn tails, process_kill
+chaos round-trips through restore(), durability counters 0.0-guard on
+checkpoint-free engines, and bench JSON emission is kill-atomic.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import tree_checksum
+from repro.core import accounting
+from repro.models import transformer as tf_lib
+from repro.serve import (FaultEvent, FaultPlan, Journal, ProcessKilled,
+                         ServeConfig, ServeEngine)
+
+
+def _cfg():
+    return tf_lib.LMConfig(name="t", d_model=48, n_heads=4, n_kv_heads=2,
+                           d_ff=96, vocab=61, pattern=(tf_lib.BlockSpec(),),
+                           repeats=2, remat="none", vocab_pad_multiple=1)
+
+
+_MODEL = []
+
+
+def _model():
+    if not _MODEL:
+        cfg = _cfg()
+        params = tf_lib.init_lm(jax.random.PRNGKey(0), cfg,
+                                dtype=jnp.float32).params
+        _MODEL.append((cfg, params))
+    return _MODEL[0]
+
+
+@pytest.fixture(scope="module")
+def model():
+    return _model()
+
+
+PROMPTS = [np.arange(15), np.arange(11) + 7, np.arange(8) + 30]
+LONG_PROMPTS = [np.arange(40) % 50, (np.arange(36) + 3) % 50]
+
+# serving-mode matrix: every mode must snapshot/restore bit-identically.
+# Each entry: (ServeConfig overrides, prompts, submit kwargs)
+MODES = {
+    "plain": (dict(), PROMPTS, dict(max_tokens=8)),
+    "int8": (dict(quant="int8"), PROMPTS, dict(max_tokens=8)),
+    "spec": (dict(spec_k=2), PROMPTS, dict(max_tokens=8)),
+    "nbest": (dict(max_slots=4, num_pages=64, temperature=0.7),
+              [np.arange(18), np.arange(12) + 5],
+              dict(max_tokens=8, n_best=2)),
+    "chunk": (dict(max_len=128, num_pages=80, prefill_chunk=8),
+              LONG_PROMPTS, dict(max_tokens=6)),
+}
+
+# counters that must match the continuous run exactly after a restore
+# (wall-clock and durability channels legitimately differ)
+EQUIV_KEYS = ("ticks", "decode_tokens", "prefill_tokens",
+              "prefix_hit_tokens", "shed", "quarantined", "forks",
+              "cow_copies")
+
+
+def _scfg(over, **kw):
+    base = dict(max_slots=2, max_len=64, paged=True, page_size=4, seed=0)
+    base.update(over)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _streams(reqs):
+    return {r.uid: (list(r.generated),
+                    ([[int(t) for t in s] for s in r.nbest]
+                     if r.nbest is not None else None)) for r in reqs}
+
+
+def _submit_all(eng, prompts, sub_kw):
+    for p in prompts:
+        eng.submit(p, **sub_kw)
+
+
+_BASELINES = {}
+
+
+def _baseline(model, mode):
+    """Continuous (checkpoint-free) run of a mode, cached per module."""
+    if mode not in _BASELINES:
+        cfg, params = model
+        over, prompts, sub_kw = MODES[mode]
+        eng = ServeEngine(params, cfg, _scfg(over))
+        _submit_all(eng, prompts, sub_kw)
+        done = eng.run_until_drained(max_ticks=400)
+        _BASELINES[mode] = (_streams(done), eng.summary())
+    return _BASELINES[mode]
+
+
+def _restore_check(model, mode, n_ticks, tmpdir, interval=2):
+    """Run a durable engine ``n_ticks`` ticks, abandon it (simulated
+    crash), restore a fresh engine from disk, drain, and assert stream +
+    counter equivalence with the continuous run."""
+    cfg, params = model
+    over, prompts, sub_kw = MODES[mode]
+    want, want_s = _baseline(model, mode)
+    d = os.path.join(str(tmpdir), f"{mode}_{n_ticks}")
+    scfg = _scfg(over, checkpoint_dir=d, checkpoint_interval=interval)
+    eng = ServeEngine(params, cfg, scfg)
+    _submit_all(eng, prompts, sub_kw)
+    for _ in range(n_ticks):
+        eng.step()
+        if not len(eng.scheduler) and all(r is None for r in eng.slot_req):
+            break                      # drained before the crash tick
+    # crash: the half-run engine object is simply dropped
+    eng2 = ServeEngine(params, cfg, scfg)
+    recovered = eng2.restore()
+    done = eng2.run_until_drained(max_ticks=400)
+    got = _streams(recovered)
+    got.update(_streams(done))          # at-least-once: dedupe by uid
+    assert got == want, (mode, n_ticks)
+    s = eng2.summary()
+    for key in EQUIV_KEYS:
+        if key in want_s:
+            assert s[key] == want_s[key], (mode, n_ticks, key)
+    assert eng2.pool.audit() == [] and eng2.pool.live == 0
+
+
+# -----------------------------------------------------------------------------
+# Tentpole: snapshot/restore stream equivalence across serving modes
+# -----------------------------------------------------------------------------
+
+class TestRestoreEquivalence:
+    @pytest.mark.parametrize("mode", sorted(MODES))
+    def test_mid_run_restore_matches_continuous(self, model, mode, tmpdir):
+        _restore_check(model, mode, n_ticks=3, tmpdir=tmpdir)
+
+    def test_restore_before_any_snapshot_replays_journal_only(
+            self, model, tmpdir):
+        """Crash before the first snapshot lands: restore finds no
+        checkpoint and rebuilds purely from the fsync'd journal."""
+        _restore_check(model, "plain", n_ticks=1, tmpdir=tmpdir,
+                       interval=100)
+
+    def test_restore_journal_only_mode(self, model, tmpdir):
+        """checkpoint_interval=0: journal-only durability (every tick
+        replayed from tick 0)."""
+        _restore_check(model, "plain", n_ticks=4, tmpdir=tmpdir,
+                       interval=0)
+
+    def test_restore_after_drain_returns_everything(self, model, tmpdir):
+        """Restore of a COMPLETED run reconstructs every finished stream
+        (the redelivery path a crashed-after-drain caller reads)."""
+        cfg, params = model
+        want, _ = _baseline(model, "plain")
+        d = os.path.join(str(tmpdir), "drained")
+        scfg = _scfg({}, checkpoint_dir=d, checkpoint_interval=2)
+        eng = ServeEngine(params, cfg, scfg)
+        _submit_all(eng, PROMPTS, dict(max_tokens=8))
+        eng.run_until_drained(max_ticks=400)
+        eng2 = ServeEngine(params, cfg, scfg)
+        got = _streams(eng2.restore())
+        assert got == want
+        assert eng2.run_until_drained(max_ticks=10) == []
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(1, 10), st.sampled_from(sorted(MODES)),
+           st.sampled_from((1, 2, 3)))
+    def test_restore_at_arbitrary_tick(self, n_ticks, mode, interval):
+        """Property: for ANY (crash tick, serving mode, snapshot cadence),
+        restore + drain is stream- and counter-identical to never
+        crashing. The cached baselines make each example one short drain."""
+        import tempfile
+        _restore_check(_model(), mode, n_ticks,
+                       tempfile.mkdtemp(prefix="snap_hyp."),
+                       interval=interval)
+
+    def test_restore_requires_fresh_engine(self, model, tmpdir):
+        cfg, params = model
+        scfg = _scfg({}, checkpoint_dir=str(tmpdir), checkpoint_interval=2)
+        eng = ServeEngine(params, cfg, scfg)
+        eng.submit(PROMPTS[0], max_tokens=4)
+        eng.step()
+        with pytest.raises(RuntimeError, match="fresh engine"):
+            eng.restore()
+
+    def test_restore_requires_checkpoint_dir(self, model):
+        cfg, params = model
+        eng = ServeEngine(params, cfg, _scfg({}))
+        with pytest.raises(RuntimeError, match="checkpoint_dir"):
+            eng.restore()
+
+
+# -----------------------------------------------------------------------------
+# process_kill chaos arm: kill, restart, token-identical continuation
+# -----------------------------------------------------------------------------
+
+class TestProcessKill:
+    def test_kill_restore_drain_identical(self, model, tmpdir):
+        cfg, params = model
+        want, _ = _baseline(model, "plain")
+        d = os.path.join(str(tmpdir), "kill")
+        scfg = _scfg(dict(faults=FaultPlan.single("process_kill", tick=7,
+                                                  seed=3)),
+                     checkpoint_dir=d, checkpoint_interval=2)
+        eng = ServeEngine(params, cfg, scfg)
+        _submit_all(eng, PROMPTS, dict(max_tokens=8))
+        with pytest.raises(ProcessKilled):
+            eng.run_until_drained(max_ticks=400)
+        assert eng._injector.counts["process_kill"] == 1
+        acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        eng2 = ServeEngine(params, cfg, scfg, accountant=acct)
+        got = _streams(eng2.restore())
+        got.update(_streams(eng2.run_until_drained(max_ticks=400)))
+        assert got == want
+        s = eng2.summary()
+        # kill at tick 7, snapshots every 2: the latest snapshot covers
+        # ticks 0..5, so replay repeats tick 6 — billed as restore_j
+        assert s["replayed_ticks"] == 1
+        assert s["restore_j"] > 0.0
+        assert s["snapshots_taken"] > 0
+        assert s["journal_bytes"] > 0.0
+        rep = acct.report()
+        assert rep["replayed_ticks"] == 1
+        assert rep["restore_j"] > 0.0
+
+    def test_restored_kill_does_not_refire(self, model, tmpdir):
+        """The restart carries the same fault plan; a kill at or before
+        the restore boundary already happened pre-crash and must not fire
+        again (the crash-loop guard). A LATER kill still fires, and a
+        second restore survives it too."""
+        cfg, params = model
+        want, _ = _baseline(model, "plain")
+        d = os.path.join(str(tmpdir), "kill2")
+        plan = FaultPlan(seed=3, events=(
+            FaultEvent(tick=4, kind="process_kill"),
+            FaultEvent(tick=8, kind="process_kill")))
+        scfg = _scfg(dict(faults=plan), checkpoint_dir=d,
+                     checkpoint_interval=2)
+        eng = ServeEngine(params, cfg, scfg)
+        _submit_all(eng, PROMPTS, dict(max_tokens=8))
+        with pytest.raises(ProcessKilled):
+            eng.run_until_drained(max_ticks=400)
+        eng2 = ServeEngine(params, cfg, scfg)
+        got = _streams(eng2.restore())
+        with pytest.raises(ProcessKilled):      # tick-8 kill still fires
+            eng2.run_until_drained(max_ticks=400)
+        eng3 = ServeEngine(params, cfg, scfg)
+        got.update(_streams(eng3.restore()))
+        got.update(_streams(eng3.run_until_drained(max_ticks=400)))
+        assert got == want
+
+
+# -----------------------------------------------------------------------------
+# Integrity gates: corrupted and inconsistent snapshots refuse loudly
+# -----------------------------------------------------------------------------
+
+def _latest_ckpt_dir(checkpoint_dir):
+    snaps = os.path.join(checkpoint_dir, "snapshots")
+    return os.path.join(snaps, sorted(os.listdir(snaps))[-1])
+
+
+def _durable_run(model, tmpdir, name):
+    cfg, params = model
+    d = os.path.join(str(tmpdir), name)
+    scfg = _scfg({}, checkpoint_dir=d, checkpoint_interval=2)
+    eng = ServeEngine(params, cfg, scfg)
+    _submit_all(eng, PROMPTS, dict(max_tokens=8))
+    for _ in range(5):
+        eng.step()
+    return scfg, d
+
+
+class TestIntegrityGates:
+    def test_bitflip_in_arrays_refuses(self, model, tmpdir):
+        cfg, params = model
+        scfg, d = _durable_run(model, tmpdir, "bitrot")
+        path = os.path.join(_latest_ckpt_dir(d), "arrays.npz")
+        with open(path, "r+b") as f:
+            f.seek(os.path.getsize(path) // 2)
+            b = f.read(1)
+            f.seek(-1, os.SEEK_CUR)
+            f.write(bytes([b[0] ^ 0xFF]))
+        eng2 = ServeEngine(params, cfg, scfg)
+        # the zip layer's CRC or the manifest checksum — either way the
+        # corrupt snapshot must never install
+        with pytest.raises(Exception):
+            eng2.restore()
+
+    def test_tampered_extra_fails_checksum(self, model, tmpdir):
+        cfg, params = model
+        scfg, d = _durable_run(model, tmpdir, "tamper")
+        mpath = os.path.join(_latest_ckpt_dir(d), "manifest.json")
+        with open(mpath) as f:
+            man = json.load(f)
+        man["extra"]["tick_idx"] += 1          # doctored, NOT re-signed
+        with open(mpath, "w") as f:
+            json.dump(man, f)
+        eng2 = ServeEngine(params, cfg, scfg)
+        with pytest.raises(RuntimeError, match="integrity check"):
+            eng2.restore()
+
+    def test_resigned_inconsistent_snapshot_names_invariant(
+            self, model, tmpdir):
+        """A tamper that re-signs the checksum gets past the digest — the
+        shared refcount/ownership reconciliation (the same checker the
+        in-tick audit uses) must still refuse, naming the violation."""
+        cfg, params = model
+        scfg, d = _durable_run(model, tmpdir, "resign")
+        ck = _latest_ckpt_dir(d)
+        mpath = os.path.join(ck, "manifest.json")
+        with open(mpath) as f:
+            man = json.load(f)
+        held = next(pages[0] for pages in man["extra"]["slot_pages"]
+                    if pages)                  # a page the engine holds
+        man["extra"]["pool"]["ref"][held] = 0  # ...that the pool forgets
+        arrays = np.load(os.path.join(ck, "arrays.npz"))
+        named = [(n, arrays[n]) for n in man["names"]]
+        man["checksum"] = tree_checksum(named, man["extra"])
+        with open(mpath, "w") as f:
+            json.dump(man, f)
+        eng2 = ServeEngine(params, cfg, scfg)
+        with pytest.raises(RuntimeError,
+                           match="consistency check.*pool says"):
+            eng2.restore()
+
+    def test_config_fingerprint_mismatch_refuses(self, model, tmpdir):
+        cfg, params = model
+        _, d = _durable_run(model, tmpdir, "fprint")
+        other = _scfg(dict(page_size=8, checkpoint_dir=d,
+                           checkpoint_interval=2))
+        eng2 = ServeEngine(params, cfg, other)
+        with pytest.raises(RuntimeError, match="page_size"):
+            eng2.restore()
+
+
+# -----------------------------------------------------------------------------
+# Journal: WAL contract, torn tails, replay divergence
+# -----------------------------------------------------------------------------
+
+class TestJournal:
+    def test_round_trip_and_seq(self, tmpdir):
+        path = os.path.join(str(tmpdir), "j.jsonl")
+        j = Journal(path)
+        n1 = j.append_submit(uid=1, prompt=[1, 2], max_tokens=4,
+                             temperature=None, deadline_ticks=None,
+                             n_best=1, tick=0)
+        n2 = j.append_tick(tick=0, finished=[[1, [5, 6], None]])
+        assert n1 > 0 and n2 > 0
+        assert j.bytes_written == n1 + n2
+        recs = j.records()
+        assert [r["seq"] for r in recs] == [0, 1]
+        assert recs[0]["kind"] == "submit" and recs[1]["kind"] == "tick"
+        j.close()
+
+    def test_torn_tail_truncated_on_open(self, tmpdir):
+        path = os.path.join(str(tmpdir), "j.jsonl")
+        j = Journal(path)
+        j.append_submit(uid=1, prompt=[1], max_tokens=4, temperature=None,
+                        deadline_ticks=None, n_best=1, tick=0)
+        j.append_tick(tick=0, finished=[])
+        j.close()
+        with open(path, "a") as f:
+            f.write('{"kind": "tick", "tick": 1, "fini')   # torn write
+        j2 = Journal(path)
+        recs = j2.records()
+        assert len(recs) == 2                  # torn record dropped
+        assert j2.seq == 2                     # next seq continues
+        with open(path) as f:
+            assert f.read().endswith("\n")     # file physically truncated
+        j2.close()
+
+    def test_replay_divergence_raises(self, model, tmpdir):
+        """A journal whose recorded emissions can't be reproduced (here:
+        doctored generated tokens) must refuse — serving silently
+        different streams after 'recovery' is the one unforgivable
+        failure mode."""
+        cfg, params = model
+        d = os.path.join(str(tmpdir), "diverge")
+        scfg = _scfg({}, checkpoint_dir=d, checkpoint_interval=0)
+        eng = ServeEngine(params, cfg, scfg)
+        _submit_all(eng, PROMPTS, dict(max_tokens=8))
+        eng.run_until_drained(max_ticks=400)
+        jpath = os.path.join(d, "journal.jsonl")
+        with open(jpath) as f:
+            recs = [json.loads(ln) for ln in f]
+        for r in recs:
+            if r["kind"] == "tick" and r["finished"]:
+                r["finished"][0][1][0] ^= 1    # flip one emitted token
+                break
+        with open(jpath, "w") as f:
+            for r in recs:
+                f.write(json.dumps(r, sort_keys=True) + "\n")
+        eng2 = ServeEngine(params, cfg, scfg)
+        with pytest.raises(RuntimeError, match="replay diverged"):
+            eng2.restore()
+
+
+# -----------------------------------------------------------------------------
+# Zero-state guards (satellite): durability counters on checkpoint-free runs
+# -----------------------------------------------------------------------------
+
+class TestZeroStateGuards:
+    def test_engine_summary_durability_zeros(self, model):
+        cfg, params = model
+        eng = ServeEngine(params, cfg, _scfg({}))
+        s = eng.summary()
+        for key in ("snapshots_taken", "snapshot_bytes", "journal_bytes",
+                    "replayed_ticks", "restore_j", "restore_j_per_token",
+                    "durability_write_j"):
+            assert s[key] == 0.0, key
+
+    def test_accountant_report_durability_zeros(self):
+        acct = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        rep = acct.report()
+        for key in ("snapshots_taken", "snapshot_bytes", "journal_bytes",
+                    "replayed_ticks", "restore_j", "restore_j_per_token",
+                    "durability_write_j"):
+            assert rep[key] == 0.0, key
+
+    def test_accountant_state_round_trip(self):
+        a = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        a.observe_step(0.5, n_tokens=10)
+        a.observe_durability(snapshot_bytes=100.0, journal_bytes=7.0,
+                             restore_flops=2.0, restore_bytes=3.0,
+                             replayed_ticks=1, snapshots=1)
+        b = accounting.CarbonAccountant(accounting.AccountantConfig(
+            device="tpu_v5e", n_devices=1, grid_mix="NY"))
+        b.load_state(a.state_dict())
+        ra, rb = a.report(), b.report()
+        for key in ("tokens", "steps", "snapshots_taken", "snapshot_bytes",
+                    "journal_bytes", "replayed_ticks", "restore_j",
+                    "durability_write_j"):
+            assert ra[key] == rb[key], key
+
+    def test_engine_rejects_bad_checkpoint_config(self, model):
+        cfg, params = model
+        with pytest.raises(ValueError, match="checkpoint_interval"):
+            ServeEngine(params, cfg, _scfg(dict(checkpoint_interval=-1)))
+        with pytest.raises(ValueError, match="checkpoint_dir"):
+            ServeEngine(params, cfg, _scfg(dict(checkpoint_interval=2)))
+
+
+# -----------------------------------------------------------------------------
+# Costing helpers + atomic bench emission (satellites)
+# -----------------------------------------------------------------------------
+
+class TestDurabilityCosting:
+    def test_expected_replay_ticks(self):
+        from repro.models import costing
+        assert costing.expected_replay_ticks(0) == 0.0
+        assert costing.expected_replay_ticks(1) == 0.0
+        assert costing.expected_replay_ticks(5) == 2.0
+
+    def test_overhead_bytes_per_tick_tradeoff(self):
+        from repro.models import costing
+        # shrinking the interval raises write overhead, lowers replay
+        hi = costing.durability_overhead_bytes_per_tick(1000.0, 10.0, 2)
+        lo = costing.durability_overhead_bytes_per_tick(1000.0, 10.0, 10)
+        assert hi > lo
+        assert costing.durability_overhead_bytes_per_tick(
+            1000.0, 10.0, 0) == 10.0
+        assert (costing.expected_replay_ticks(2)
+                < costing.expected_replay_ticks(10))
+
+
+class TestAtomicBenchWrite:
+    def test_mid_write_kill_never_leaves_partial(self, tmpdir):
+        import sys
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "benchmarks"))
+        try:
+            from bench_util import atomic_write_json
+        finally:
+            sys.path.pop(0)
+        path = os.path.join(str(tmpdir), "BENCH_x.json")
+        atomic_write_json(path, {"ok": 1})
+        # a payload that serializes half-way then dies simulates a kill
+        # mid-write: the old complete file must survive, no tmp debris
+        with pytest.raises(TypeError):
+            atomic_write_json(path, {"a": 1, "bad": object()})
+        with open(path) as f:
+            assert json.load(f) == {"ok": 1}
+        assert os.listdir(str(tmpdir)) == ["BENCH_x.json"]
+        atomic_write_json(path, {"ok": 2})
+        with open(path) as f:
+            assert json.load(f) == {"ok": 2}

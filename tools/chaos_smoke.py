@@ -1,13 +1,15 @@
-"""Quick chaos smoke: every fault kind must drain with streams identical
-to the fault-free baseline. Dev tool — the real gate is
-tests/test_serve_faults.py + benchmarks/serve_bench.py --chaos."""
+"""Quick chaos smoke: every transient fault kind must drain with streams
+identical to the fault-free baseline (process_kill has no in-tick
+recovery — its smoke is serve_bench --chaos --fault-kind process_kill).
+Dev tool — the real gate is tests/test_serve_faults.py +
+benchmarks/serve_bench.py --chaos."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as tf_lib
 from repro.serve import ServeConfig, ServeEngine
-from repro.serve.faults import FAULT_KINDS, FaultPlan
+from repro.serve.faults import TRANSIENT_FAULT_KINDS, FaultPlan
 
 cfg = tf_lib.LMConfig(name="t", d_model=48, n_heads=4, n_kv_heads=2,
                       d_ff=96, vocab=61, pattern=(tf_lib.BlockSpec(),),
@@ -27,7 +29,7 @@ def run(plan=None):
 
 _, base = run()
 print("baseline:", base)
-for kind in FAULT_KINDS:
+for kind in TRANSIENT_FAULT_KINDS:
     plan = FaultPlan.single(kind, tick=2, seed=11, slot=1)
     eng, got = run(plan)
     s = eng.summary()
