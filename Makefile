@@ -1,10 +1,17 @@
 # Tier-1 verify — exactly as ROADMAP.md specifies.
 PY ?= python
 
-.PHONY: verify bench bench-serve bench-train
+.PHONY: verify lint bench bench-serve bench-train
 
 verify:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# repro-lint (DESIGN.md §20): AST invariant passes over src/ — trace
+# purity, readback budget, replay determinism, accounting completeness,
+# donation safety. Exits nonzero on any finding not justified in
+# tools/lint_baseline.txt. Runs in CI before the test suite.
+lint:
+	PYTHONPATH=src $(PY) tools/repro_lint.py --baseline tools/lint_baseline.txt
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run

@@ -1,12 +1,37 @@
-"""Shared bench helpers: timing CSV rows + crash-safe JSON emission."""
+"""Shared bench helpers: timing CSV rows, crash-safe JSON emission, and
+the schema check the CI smoke gates share."""
 
 import json
 import os
 import tempfile
 import time
-from typing import Any, Callable, List, Tuple
+from typing import Any, Callable, Iterable, List, Tuple
 
 Row = Tuple[str, float, str]
+
+
+def required_keys(payload: Any, keys: Iterable[str], *,
+                  where: str = "result") -> Any:
+    """Assert every key path in ``keys`` exists in ``payload`` and return
+    the payload (chainable). Key paths are dotted: ``"paged.j_per_token"``
+    descends nested dicts. All missing paths are reported in ONE error so
+    a schema drift shows the full damage, not the first casualty — this is
+    what the BENCH_*.json smoke gates in verify.yml call instead of
+    per-job ad-hoc ``assert key in res`` loops."""
+    missing = []
+    for path in keys:
+        node = payload
+        for part in path.split("."):
+            if isinstance(node, dict) and part in node:
+                node = node[part]
+            else:
+                missing.append(path)
+                break
+    if missing:
+        raise AssertionError(
+            f"{where}: missing required key(s): {', '.join(missing)}; "
+            f"have: {sorted(payload) if isinstance(payload, dict) else type(payload).__name__}")
+    return payload
 
 
 def atomic_write_json(path: str, payload: Any, *, indent: int = 2) -> None:

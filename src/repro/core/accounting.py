@@ -95,6 +95,15 @@ class CarbonAccountant:
         self._recovery_bytes = 0.0
         self._quarantined = 0.0
         self._shed = 0.0
+        # chaos-exposure counters (repro-lint L401 closed the gap): faults
+        # the injector landed, ticks served under a degradation rung, and
+        # torn-readback re-reads — each retry is a real extra device→host
+        # transfer the ONE-readback budget had to pay twice for. Needed to
+        # interpret recovery_j (joules per fault, not just per run) and to
+        # weigh degraded-mode J/token in the advisor.
+        self._faults_injected = 0.0
+        self._degraded_ticks = 0.0
+        self._readback_retries = 0.0
         # durability ledger (DESIGN.md §19): what crash-consistency costs —
         # snapshot + journal bytes written to persistent storage (billed at
         # the per-byte DRAM cost as a floor) and the replayed recompute a
@@ -182,6 +191,11 @@ class CarbonAccountant:
                 getattr(metrics, "recovery_bytes", 0.0))
             self._quarantined += float(getattr(metrics, "quarantined", 0.0))
             self._shed += float(getattr(metrics, "shed", 0.0))
+            self._faults_injected += float(
+                getattr(metrics, "faults_injected", 0.0))
+            self._degraded_ticks += float(getattr(metrics, "degraded", 0.0))
+            self._readback_retries += float(
+                getattr(metrics, "readback_retries", 0.0))
 
     def observe_durability(self, *, snapshot_bytes: float = 0.0,
                            journal_bytes: float = 0.0,
@@ -385,7 +399,17 @@ class CarbonAccountant:
             # 0.0 on fault-free runs (never NaN/raise).
             "quarantined": self._quarantined,
             "shed": self._shed,
+            "faults_injected": self._faults_injected,
+            "degraded_ticks": self._degraded_ticks,
+            "degraded_tick_rate": (self._degraded_ticks / self._steps
+                                   if self._steps > 0 else 0.0),
+            "readback_retries": self._readback_retries,
             "recovery_tokens": self._recovery_tokens,
+            "recovery_j_per_fault": (
+                (energy.compute_energy_j(self._recovery_flops, self._spec)
+                 + energy.dram_energy_j(self._recovery_bytes))
+                / self._faults_injected
+                if self._faults_injected > 0 else 0.0),
             "recovery_j": (energy.compute_energy_j(self._recovery_flops,
                                                    self._spec)
                            + energy.dram_energy_j(self._recovery_bytes)),
@@ -443,6 +467,7 @@ class CarbonAccountant:
         "_cow_bytes", "_cow_copies", "_forks", "_fork_saved_bytes",
         "_fork_saved_flops", "_recovery_tokens", "_recovery_flops",
         "_recovery_bytes", "_quarantined", "_shed",
+        "_faults_injected", "_degraded_ticks", "_readback_retries",
         "_snapshot_bytes", "_journal_bytes", "_restore_flops",
         "_restore_bytes", "_replayed_ticks", "_snapshots",
         "_train_steps", "_train_samples", "_fwd_flops", "_bwd_flops",

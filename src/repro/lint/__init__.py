@@ -1,0 +1,49 @@
+"""repro-lint: AST-based invariant linter for the repro codebase.
+
+Five composable passes turn DESIGN.md §20's load-bearing invariants into
+machine-checked contracts (run via ``tools/repro_lint.py`` / ``make
+lint``):
+
+========================  =====  =========================================
+pass                      rules  contract
+========================  =====  =========================================
+trace-purity              L10x   no host syncs reachable from jax.jit
+readback-budget           L20x   ONE compact readback per engine tick
+replay-determinism        L30x   replay = pure function of journal bytes
+accounting-completeness   L40x   every metrics channel billed + guarded
+donation-safety           L50x   donated buffers never read after donate
+========================  =====  =========================================
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from . import accounting, determinism, donation, purity, readback
+from .base import (Context, Finding, RULES, load_baseline, split_by_baseline,
+                   write_baseline)
+
+#: registration order == report order
+PASSES: Dict[str, Callable[[Context], List[Finding]]] = {
+    purity.NAME: purity.run,
+    readback.NAME: readback.run,
+    determinism.NAME: determinism.run,
+    accounting.NAME: accounting.run,
+    donation.NAME: donation.run,
+}
+
+
+def run_passes(ctx: Context, names: List[str] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for name, fn in PASSES.items():
+        if names and name not in names:
+            continue
+        findings.extend(fn(ctx))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.detail))
+    return findings
+
+
+__all__ = [
+    "Context", "Finding", "PASSES", "RULES", "load_baseline",
+    "run_passes", "split_by_baseline", "write_baseline",
+]

@@ -1,0 +1,264 @@
+"""accounting-completeness pass (L401-L402): every metrics channel is
+billed, every summary ratio is zero-guarded.
+
+The paper's J/token claims are only as trustworthy as the accountant's
+coverage: a StepMetrics field that never reaches a CarbonAccountant bill
+site is a silently-uncounted energy channel (L401), and an unguarded
+division in a ``summary()``/``*report()`` is exactly the zero-div
+regression class PRs 5/7 shipped fixes for (L402).
+
+* L401 — introspects the metrics dataclass fields (AnnAssign entries) and
+  cross-checks each against the billing method's reads — both
+  ``metrics.<field>`` attribute access and ``getattr(metrics, "<field>",
+  ...)`` string constants. Fields that are intentionally observability-
+  only (not energy channels) must be listed in an ``ACCOUNTING_EXEMPT``
+  frozenset next to the dataclass; everything else must be billed.
+* L402 — flags ``a / b`` in summary/report functions unless the
+  denominator is a literal, wrapped in ``max(...)``, covered by the
+  enclosing ``IfExp`` test, or dominated by an early-return guard that
+  mentions the denominator (through one level of local aliasing, e.g.
+  ``n = self._train_steps`` after ``if self._train_steps == 0: return``).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from .base import Context, Finding, Module
+
+NAME = "accounting-completeness"
+
+
+@dataclasses.dataclass(frozen=True)
+class BillingPair:
+    metrics_path: str       # module holding the metrics dataclass
+    metrics_class: str
+    exempt_const: str       # name of the ACCOUNTING_EXEMPT frozenset
+    bill_path: str          # module holding the accountant
+    bill_qual: str          # billing method qualname
+    bill_param: str = "metrics"
+
+
+BILLING_PAIRS: Tuple[BillingPair, ...] = (
+    BillingPair("src/repro/serve/engine.py", "StepMetrics",
+                "ACCOUNTING_EXEMPT",
+                "src/repro/core/accounting.py",
+                "CarbonAccountant.observe_serve"),
+    BillingPair("src/repro/train/engine.py", "TrainStepMetrics",
+                "TRAIN_ACCOUNTING_EXEMPT",
+                "src/repro/core/accounting.py",
+                "CarbonAccountant.observe_train"),
+)
+
+#: functions whose ratios must be zero-guarded
+SUMMARY_FN_RE = re.compile(r"(^summary$|^report$|_report$|^hit_rate$)")
+
+
+def _dataclass_fields(mod: Module, cls_name: str) -> List[Tuple[str, int]]:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls_name:
+            out = []
+            for st in node.body:
+                if isinstance(st, ast.AnnAssign) and \
+                        isinstance(st.target, ast.Name):
+                    out.append((st.target.id, st.lineno))
+            return out
+    return []
+
+
+def _exempt_fields(mod: Module, const: str) -> Set[str]:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == const:
+                    return {n.value for n in ast.walk(node.value)
+                            if isinstance(n, ast.Constant) and
+                            isinstance(n.value, str)}
+    return set()
+
+
+def _billed_fields(fn: ast.AST, param: str) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and node.value.id == param:
+            out.add(node.attr)
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Name) and \
+                node.func.id == "getattr" and len(node.args) >= 2 and \
+                isinstance(node.args[0], ast.Name) and \
+                node.args[0].id == param and \
+                isinstance(node.args[1], ast.Constant):
+            out.add(node.args[1].value)
+    return out
+
+
+def _check_billing(ctx: Context, pair: BillingPair) -> List[Finding]:
+    mmod = ctx.modules.get(pair.metrics_path)
+    bmod = ctx.modules.get(pair.bill_path)
+    if mmod is None or bmod is None:
+        return []
+    fields = _dataclass_fields(mmod, pair.metrics_class)
+    if not fields:
+        return []
+    bill_fn = ctx.lookup_function(pair.bill_path, pair.bill_qual)
+    if bill_fn is None:
+        return [Finding("L401", pair.bill_path, 0, pair.bill_qual,
+                        f"billing method {pair.bill_qual} not found for "
+                        f"{pair.metrics_class}")]
+    billed = _billed_fields(bill_fn, pair.bill_param)
+    exempt = _exempt_fields(mmod, pair.exempt_const)
+    out: List[Finding] = []
+    for name, line in fields:
+        if name in billed or name in exempt:
+            continue
+        out.append(Finding(
+            "L401", mmod.path, line, pair.metrics_class,
+            f"field `{name}` has no bill site in {pair.bill_qual} and is "
+            f"not listed in {pair.exempt_const}"))
+    return out
+
+
+# -- L402: unguarded divisions in summaries ----------------------------------
+
+
+def _names_in(node: ast.expr) -> Set[str]:
+    """All Name/Attribute spellings inside an expression."""
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, (ast.Name, ast.Attribute)):
+            try:
+                out.add(ast.unparse(n))
+            except Exception:       # pragma: no cover - defensive
+                pass
+    return out
+
+
+def _literal_denominator(node: ast.expr) -> bool:
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float)) and node.value != 0
+    if isinstance(node, ast.UnaryOp):
+        return _literal_denominator(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _literal_denominator(node.left) and \
+            _literal_denominator(node.right)
+    return False
+
+
+def _guarded_by_max(node: ast.expr) -> bool:
+    return isinstance(node, ast.Call) and (
+        (isinstance(node.func, ast.Name) and node.func.id == "max") or
+        (isinstance(node.func, ast.Attribute) and
+         node.func.attr in ("maximum", "clip")))
+
+
+class _DivChecker:
+    def __init__(self, mod: Module, qual: str):
+        self.mod = mod
+        self.qual = qual
+        self.findings: List[Finding] = []
+
+    def check(self, fn: ast.AST) -> List[Finding]:
+        aliases = self._local_aliases(fn)
+        guards = self._early_guards(fn, aliases)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Div):
+                self._check_div(node, fn, aliases, guards)
+        return self.findings
+
+    def _local_aliases(self, fn: ast.AST) -> Dict[str, str]:
+        """name -> unparse(value) for simple top-level assignments."""
+        out: Dict[str, str] = {}
+        for st in getattr(fn, "body", []):
+            if isinstance(st, ast.Assign) and len(st.targets) == 1 and \
+                    isinstance(st.targets[0], ast.Name):
+                try:
+                    out[st.targets[0].id] = ast.unparse(st.value)
+                except Exception:   # pragma: no cover - defensive
+                    pass
+        return out
+
+    def _early_guards(self, fn: ast.AST,
+                      aliases: Dict[str, str]) -> Set[str]:
+        """Names covered by `if <test mentioning name>: return ...` at the
+        top level of the function body."""
+        covered: Set[str] = set()
+        for st in getattr(fn, "body", []):
+            if isinstance(st, ast.If) and st.body and \
+                    isinstance(st.body[0], (ast.Return, ast.Raise)):
+                covered |= _names_in(st.test)
+        return covered
+
+    def _expand(self, names: Set[str], aliases: Dict[str, str]) -> Set[str]:
+        out = set(names)
+        for n in names:
+            if n in aliases:
+                out.add(aliases[n])
+            for k, v in aliases.items():
+                if v == n or n in _names_in_str(v):
+                    out.add(k)
+        return out
+
+    def _check_div(self, div: ast.BinOp, fn: ast.AST,
+                   aliases: Dict[str, str], guards: Set[str]) -> None:
+        den = div.right
+        if _literal_denominator(den) or _guarded_by_max(den):
+            return
+        den_names = self._expand(_names_in(den), aliases)
+        if not den_names:
+            return      # e.g. dividing by len(...) of a literal — rare
+        # (1) enclosing IfExp whose test mentions the denominator
+        for node in ast.walk(fn):
+            if isinstance(node, ast.IfExp):
+                inside = any(sub is div for sub in ast.walk(node.body)) or \
+                    any(sub is div for sub in ast.walk(node.orelse))
+                if inside and den_names & self._expand(
+                        _names_in(node.test), aliases):
+                    return
+            # plain `if den: x = a / den` statement guards count too
+            if isinstance(node, ast.If):
+                inside = any(sub is div for st in node.body
+                             for sub in ast.walk(st))
+                if inside and den_names & self._expand(
+                        _names_in(node.test), aliases):
+                    return
+        # (2) early-return guard mentioning the denominator
+        if den_names & self._expand(guards, aliases):
+            return
+        self.findings.append(Finding(
+            "L402", self.mod.path, div.lineno, self.qual,
+            f"unguarded division `{self.mod.segment(div)}` in a "
+            f"summary/report (guard the denominator against zero)"))
+
+
+def _names_in_str(expr_src: str) -> Set[str]:
+    try:
+        return _names_in(ast.parse(expr_src, mode="eval").body)
+    except SyntaxError:             # pragma: no cover - defensive
+        return set()
+
+
+#: modules whose summary/report functions are in scope
+SUMMARY_SCOPE = (
+    "src/repro/serve/engine.py",
+    "src/repro/serve/pages.py",
+    "src/repro/train/engine.py",
+    "src/repro/core/accounting.py",
+)
+
+
+def run(ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    for pair in BILLING_PAIRS:
+        out.extend(_check_billing(ctx, pair))
+    for path in SUMMARY_SCOPE:
+        mod = ctx.modules.get(path)
+        if mod is None:
+            continue
+        for qual, fn in ctx.functions[mod.path].items():
+            if SUMMARY_FN_RE.search(qual.split(".")[-1]):
+                out.extend(_DivChecker(mod, qual).check(fn))
+    return out

@@ -1,0 +1,257 @@
+"""repro-lint core: parsed-repo context, findings, baseline semantics.
+
+The linter turns the invariants that nine PRs of engine growth left as
+prose in DESIGN.md into machine-checked contracts (DESIGN.md §20): each
+pass walks the repo's ASTs and emits :class:`Finding`s carrying an
+invariant ID + file:line. A checked-in baseline (tools/lint_baseline.txt,
+modeled on tools/check_skips.py) holds *justified* suppressions keyed by a
+line-number-free fingerprint, so refactors don't churn it; any finding not
+in the baseline is NEW and fails CI before the test suite even runs.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+#: rule id -> (invariant slug, one-line contract) — the §20 catalog, in code
+RULES: Dict[str, Tuple[str, str]] = {
+    # trace purity (PRs 1/3/15: the jitted tick must stay on device)
+    "L101": ("trace-purity", "host sync (.item()/.tolist()) on a traced value"),
+    "L102": ("trace-purity", "host cast (float/int/bool) on a traced value"),
+    "L103": ("trace-purity", "host-library call (np./math.) on a traced value"),
+    "L104": ("trace-purity", "Python control flow on a traced value"),
+    "L105": ("trace-purity", "host print of a traced value inside jit"),
+    # readback budget (PRs 1/5/7: ONE compact readback per tick)
+    "L201": ("readback-budget", "more than one readback on a tick path"),
+    "L202": ("readback-budget", "readback inside a nested loop of the tick"),
+    "L203": ("readback-budget", "raw device transfer outside the counted funnel"),
+    # replay determinism (PR 9: token-identical warm restart)
+    "L301": ("replay-determinism", "wall-clock time in a replayed/serialized path"),
+    "L302": ("replay-determinism", "unseeded RNG in a replayed/serialized path"),
+    "L303": ("replay-determinism", "unordered iteration feeding a serialized record"),
+    # accounting completeness (PRs 2/5/7/9: every channel billed + guarded)
+    "L401": ("accounting-completeness", "metrics field with no accountant bill site"),
+    "L402": ("accounting-completeness", "unguarded division in a summary/report"),
+    # donation safety (PRs 1/3: donated buffers die at the call)
+    "L501": ("donation-safety", "donated argument read after the donating call"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str           # e.g. "L301"
+    path: str           # repo-relative posix path
+    line: int           # 1-based
+    func: str           # enclosing qualname ("" = module level)
+    detail: str         # human-readable description of THIS occurrence
+
+    @property
+    def invariant(self) -> str:
+        return RULES[self.rule][0]
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable suppression key: no line numbers (they drift), just
+        rule + file + enclosing function + a slug of the detail."""
+        slug = re.sub(r"[^a-z0-9]+", "-", self.detail.lower()).strip("-")
+        return f"{self.rule}:{self.path}:{self.func}:{slug[:80]}"
+
+    def render(self) -> str:
+        where = f"{self.path}:{self.line}"
+        fn = f" [{self.func}]" if self.func else ""
+        return f"{where}: {self.rule} ({self.invariant}){fn}: {self.detail}"
+
+
+# -- parsed-repo context ------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Module:
+    path: str               # repo-relative posix path
+    dotted: str             # import path ("repro.serve.engine"; "" if none)
+    tree: ast.Module
+    source: str
+
+    def segment(self, node: ast.AST) -> str:
+        try:
+            return ast.unparse(node)
+        except Exception:           # pragma: no cover - defensive
+            return "<unparseable>"
+
+
+def _dotted_for(rel: str) -> str:
+    parts = rel.replace("\\", "/").split("/")
+    if parts[0] == "src":
+        parts = parts[1:]
+    if not parts or not parts[-1].endswith(".py"):
+        return ""
+    parts[-1] = parts[-1][:-3]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+class Context:
+    """Every scanned module parsed once, plus the cross-module indexes the
+    passes share: function defs by (path, qualname), import alias maps, and
+    module lookup by dotted import path."""
+
+    def __init__(self, root: str, rel_paths: Iterable[str]):
+        self.root = root
+        self.modules: Dict[str, Module] = {}
+        self.by_dotted: Dict[str, Module] = {}
+        for rel in sorted(set(rel_paths)):
+            full = os.path.join(root, rel)
+            try:
+                with open(full, "r", encoding="utf-8") as f:
+                    src = f.read()
+                tree = ast.parse(src, filename=rel)
+            except (OSError, SyntaxError):
+                continue
+            mod = Module(rel.replace(os.sep, "/"), _dotted_for(rel), tree, src)
+            self.modules[mod.path] = mod
+            if mod.dotted:
+                self.by_dotted[mod.dotted] = mod
+        # (module path -> qualname -> def node); parent links for lookups
+        self.functions: Dict[str, Dict[str, ast.AST]] = {}
+        self.imports: Dict[str, Dict[str, str]] = {}        # alias -> module
+        self.from_imports: Dict[str, Dict[str, Tuple[str, str]]] = {}
+        for mod in self.modules.values():
+            self.functions[mod.path] = index_functions(mod.tree)
+            self.imports[mod.path], self.from_imports[mod.path] = \
+                index_imports(mod.tree)
+
+    @classmethod
+    def for_root(cls, root: str,
+                 subdirs: Tuple[str, ...] = ("src",)) -> "Context":
+        rels: List[str] = []
+        for sub in subdirs:
+            base = os.path.join(root, sub)
+            for dirpath, _dirs, files in os.walk(base):
+                for f in files:
+                    if f.endswith(".py"):
+                        rels.append(os.path.relpath(
+                            os.path.join(dirpath, f), root))
+        return cls(root, rels)
+
+    # -- lookups --------------------------------------------------------------
+
+    def module_for_dotted(self, dotted: str) -> Optional[Module]:
+        return self.by_dotted.get(dotted)
+
+    def lookup_function(self, path: str, qualname: str) -> Optional[ast.AST]:
+        return self.functions.get(path, {}).get(qualname)
+
+
+def index_functions(tree: ast.Module) -> Dict[str, ast.AST]:
+    """Map dotted qualnames (Class.method, func.nested) to def nodes."""
+    out: Dict[str, ast.AST] = {}
+
+    def walk(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                if not isinstance(child, ast.ClassDef):
+                    out[qual] = child
+                walk(child, qual)
+            else:
+                walk(child, prefix)
+
+    walk(tree, "")
+    return out
+
+
+def index_imports(tree: ast.Module) -> Tuple[Dict[str, str],
+                                             Dict[str, Tuple[str, str]]]:
+    """(alias -> module dotted path, name -> (module, attr)) maps."""
+    mods: Dict[str, str] = {}
+    names: Dict[str, Tuple[str, str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                mods[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                names[a.asname or a.name] = (node.module, a.name)
+    return mods, names
+
+
+def attr_chain(node: ast.AST) -> Optional[List[str]]:
+    """['jax', 'device_get'] for jax.device_get; None for non-chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+def enclosing_qualname(tree: ast.Module, target: ast.AST) -> str:
+    """Qualname of the innermost def/class containing ``target``."""
+    best = ""
+
+    def walk(node: ast.AST, prefix: str) -> None:
+        nonlocal best
+        for child in ast.iter_child_nodes(node):
+            qual = prefix
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+            if child is target or any(n is target for n in ast.walk(child)):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    best = qual
+                walk(child, qual)
+                return
+
+    walk(tree, "")
+    return best
+
+
+# -- baseline semantics -------------------------------------------------------
+
+
+def load_baseline(path: str) -> Dict[str, str]:
+    """fingerprint -> justification. Lines are ``<fingerprint>  # why``;
+    blank lines and full-line comments are skipped."""
+    out: Dict[str, str] = {}
+    if not os.path.exists(path):
+        return out
+    with open(path, "r", encoding="utf-8") as f:
+        for raw in f:
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            fp, _, why = line.partition("#")
+            out[fp.strip()] = why.strip()
+    return out
+
+
+def split_by_baseline(findings: List[Finding], baseline: Dict[str, str]
+                      ) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """(new, suppressed, stale-baseline-fingerprints). A baseline entry
+    that no longer matches any finding is *stale* — the violation was
+    fixed; the entry should be removed in the same PR (expire semantics)."""
+    fps = {f.fingerprint for f in findings}
+    new = [f for f in findings if f.fingerprint not in baseline]
+    supp = [f for f in findings if f.fingerprint in baseline]
+    stale = [fp for fp in baseline if fp not in fps]
+    return new, supp, stale
+
+
+def write_baseline(path: str, findings: List[Finding]) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        f.write("# repro-lint baseline: one fingerprint per line; trailing "
+                "'# why' is the justification.\n"
+                "# New findings (not listed here) fail CI. Stale entries "
+                "should be deleted in the same PR.\n")
+        for fp in sorted({x.fingerprint for x in findings}):
+            f.write(fp + "  # TODO: justify or fix\n")

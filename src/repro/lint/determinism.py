@@ -1,0 +1,219 @@
+"""replay-determinism pass (L301-L303): replayed paths must be pure
+functions of journal + snapshot content.
+
+PR 9's durability contract is *token-identical* warm restart: replaying
+the journal against a snapshot must reproduce every stream bit-for-bit.
+Three hazard classes break that silently:
+
+* L301 — wall-clock reads (``time.time``/``time_ns``, ``datetime.now``)
+  anywhere in the replay-scope modules. ``time.monotonic`` /
+  ``perf_counter`` stay legal: they only feed wall-second *measurement*
+  channels that are never replayed.
+* L302 — unseeded RNG: argless ``np.random.default_rng()``, the global
+  ``np.random.*`` draw functions, stdlib ``random.*`` draws.
+* L303 — unordered iteration feeding a serialized record: a ``for`` or
+  comprehension over a ``set``-typed value, or a list/tuple
+  materialization of dict ``.items()/.keys()/.values()``, inside a
+  serialization function (``state_dict``/``to_dict``/``append*``/
+  ``*fingerprint*``/``*snapshot*``/``*journal*``) without ``sorted()``.
+  Dict comprehensions are exempt (JSON objects are key-addressed), and
+  iterations consumed by order-insensitive reducers (``sorted``, ``sum``,
+  ``min``, ``max``, ``any``, ``all``, ``len``, ``set``, ``frozenset``)
+  are fine.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional, Set
+
+from .base import Context, Finding, Module, attr_chain, enclosing_qualname
+
+NAME = "replay-determinism"
+
+#: modules on the replay path or serialized into snapshots/journals
+SCOPE = (
+    "src/repro/serve/engine.py",
+    "src/repro/serve/snapshot.py",
+    "src/repro/serve/pages.py",
+    "src/repro/serve/scheduler.py",
+    "src/repro/serve/faults.py",
+    "src/repro/serve/spec.py",
+    "src/repro/checkpoint/manager.py",
+    "src/repro/core/accounting.py",
+    "src/repro/train/ft.py",
+)
+
+WALL_CLOCK = {("time", "time"), ("time", "time_ns"),
+              ("datetime", "now"), ("datetime", "utcnow"),
+              ("datetime", "today")}
+GLOBAL_NP_DRAWS = {"rand", "randn", "randint", "random", "choice",
+                   "shuffle", "permutation", "uniform", "normal"}
+STDLIB_RANDOM = "random"
+SERIAL_FN_RE = re.compile(
+    r"(state_dict|to_dict|fingerprint|append|snapshot|journal)")
+ORDER_INSENSITIVE = {"sorted", "sum", "min", "max", "any", "all", "len",
+                     "set", "frozenset", "dict"}
+DICT_VIEWS = {"items", "keys", "values"}
+
+
+def _wall_clock_call(node: ast.Call) -> bool:
+    chain = attr_chain(node.func)
+    return bool(chain) and len(chain) >= 2 and \
+        tuple(chain[-2:]) in WALL_CLOCK
+
+
+def _unseeded_rng(node: ast.Call, mod: Module, ctx: Context) -> Optional[str]:
+    chain = attr_chain(node.func)
+    if not chain:
+        return None
+    imports = ctx.imports[mod.path]
+    base = imports.get(chain[0], "")
+    # np.random.default_rng() with no seed
+    if chain[-1] == "default_rng" and not node.args and not node.keywords:
+        return "argless default_rng() (unseeded)"
+    # global numpy draws: np.random.rand / randint / ...
+    if base.startswith("numpy") and len(chain) >= 2 and \
+            "random" in chain[1:-1] + [chain[1]] and \
+            chain[-1] in GLOBAL_NP_DRAWS:
+        return f"global numpy RNG `{'.'.join(chain)}`"
+    # stdlib random module draws
+    if base == STDLIB_RANDOM and chain[-1] not in ("Random", "SystemRandom",
+                                                   "seed"):
+        return f"stdlib `{'.'.join(chain)}` (process-global RNG)"
+    return None
+
+
+def _collect_set_typed(ctx: Context) -> Set[str]:
+    """Names (attributes or locals) assigned set-like values anywhere in
+    the scope modules — the index L303 uses to type iteration targets."""
+    names: Set[str] = set()
+    for path in SCOPE:
+        mod = ctx.modules.get(path)
+        if mod is None:
+            continue
+        for node in ast.walk(mod.tree):
+            val = None
+            tgts: List[ast.expr] = []
+            if isinstance(node, ast.Assign):
+                val, tgts = node.value, node.targets
+            elif isinstance(node, ast.AnnAssign):
+                ann = ast.unparse(node.annotation) if node.annotation else ""
+                if "set" in ann.lower():
+                    tgts = [node.target]
+                    val = node.value or ast.Constant(None)
+            if val is None:
+                continue
+            is_setty = isinstance(val, (ast.Set, ast.SetComp)) or (
+                isinstance(val, ast.Call) and
+                isinstance(val.func, ast.Name) and
+                val.func.id in ("set", "frozenset"))
+            if not (is_setty or isinstance(node, ast.AnnAssign)):
+                continue
+            for t in tgts:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+                elif isinstance(t, ast.Attribute):
+                    names.add(t.attr)
+    return names
+
+
+def _terminal_name(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+class _SerialVisitor:
+    """L303 inside one serialization function."""
+
+    def __init__(self, mod: Module, qual: str, set_typed: Set[str]):
+        self.mod = mod
+        self.qual = qual
+        self.set_typed = set_typed
+        self.findings: List[Finding] = []
+        # comprehensions/calls sitting directly under an order-insensitive
+        # reducer are fine: sorted(x for x in some_set)
+        self.absorbed: Set[int] = set()
+
+    def visit(self, fn: ast.AST) -> List[Finding]:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in ORDER_INSENSITIVE:
+                for a in node.args:
+                    for sub in ast.walk(a):
+                        self.absorbed.add(id(sub))
+        for node in ast.walk(fn):
+            if isinstance(node, ast.For):
+                self._check_iter(node.iter, node)
+            elif isinstance(node, (ast.ListComp, ast.GeneratorExp,
+                                   ast.SetComp)):
+                if id(node) in self.absorbed:
+                    continue
+                for gen in node.generators:
+                    self._check_iter(gen.iter, node)
+                    self._check_dict_view(gen.iter, node)
+        return self.findings
+
+    def _check_iter(self, it: ast.expr, site: ast.AST) -> None:
+        if id(it) in self.absorbed:
+            return
+        if isinstance(it, ast.Call):
+            chain = attr_chain(it.func)
+            if chain and chain[-1] == "sorted":
+                return
+            if isinstance(it.func, ast.Name) and \
+                    it.func.id in ORDER_INSENSITIVE:
+                return
+            return      # other calls: unknown type, stay quiet
+        name = _terminal_name(it)
+        if name is not None and name in self.set_typed:
+            self.findings.append(Finding(
+                "L303", self.mod.path, getattr(site, "lineno", 0),
+                self.qual,
+                f"iteration over set-typed `{self.mod.segment(it)}` "
+                f"feeds a serialized record (wrap in sorted())"))
+
+    def _check_dict_view(self, it: ast.expr, site: ast.AST) -> None:
+        if id(it) in self.absorbed:
+            return
+        if isinstance(it, ast.Call) and \
+                isinstance(it.func, ast.Attribute) and \
+                it.func.attr in DICT_VIEWS:
+            self.findings.append(Finding(
+                "L303", self.mod.path, getattr(site, "lineno", 0),
+                self.qual,
+                f"list-materialized dict view "
+                f"`{self.mod.segment(it)}` feeds a serialized record "
+                f"(sort or emit a dict)"))
+
+
+def run(ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    set_typed = _collect_set_typed(ctx)
+    for path in SCOPE:
+        mod = ctx.modules.get(path)
+        if mod is None:
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _wall_clock_call(node):
+                qual = enclosing_qualname(mod.tree, node)
+                out.append(Finding(
+                    "L301", mod.path, node.lineno, qual,
+                    f"wall-clock `{mod.segment(node.func)}` on the "
+                    f"replay path (use time.monotonic or inject `now`)"))
+            why = _unseeded_rng(node, mod, ctx)
+            if why:
+                qual = enclosing_qualname(mod.tree, node)
+                out.append(Finding("L302", mod.path, node.lineno, qual,
+                                   f"{why} on the replay path"))
+        for qual, fn in ctx.functions[mod.path].items():
+            if SERIAL_FN_RE.search(qual.split(".")[-1]):
+                out.extend(_SerialVisitor(mod, qual, set_typed).visit(fn))
+    return out

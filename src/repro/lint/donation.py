@@ -1,0 +1,293 @@
+"""donation-safety pass (L501): donated buffers die at the call.
+
+``jax.jit(..., donate_argnums=...)`` hands the argument's device buffer
+to XLA for reuse; touching that Python reference afterwards reads freed
+memory (JAX raises on CPU, silently corrupts on some backends). The
+engines' convention is to *rebind in the same statement* —
+``self.state, packed = self._tick(self.params, self.state, poison)`` —
+so the dead reference is unreachable by construction.
+
+The pass resolves donating callables three ways:
+
+* direct bindings: ``f = jax.jit(impl, donate_argnums=(0,))`` (local
+  name) or ``self._x = jax.jit(...)`` (attribute),
+* factory methods whose returned value is such a jit (the engine's
+  ``_tick_for``/``_admit_exe`` pattern, including ``donate_argnums=
+  self._donate()`` resolved through the ``_donate`` method's literal
+  return), bound via ``self._tick = self._tick_for(k)`` or called
+  inline as ``self._admit_exe(b)(args...)``.
+
+At each call site, every donated positional argument must either be
+rebound by the enclosing assignment's targets or never be read again in
+the enclosing function after the call statement.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .base import Context, Finding, Module, attr_chain, enclosing_qualname
+
+NAME = "donation-safety"
+
+
+def _is_jit_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    chain = attr_chain(node.func)
+    return bool(chain) and chain[-1] == "jit"
+
+
+def _literal_ints(node: ast.expr) -> Optional[Tuple[int, ...]]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                out.append(e.value)
+            else:
+                return None
+        return tuple(out)
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    return None
+
+
+def _donate_positions(jit_call: ast.Call, mod: Module,
+                      funcs: Dict[str, ast.AST],
+                      enclosing: str) -> Optional[Tuple[int, ...]]:
+    for kw in jit_call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        lit = _literal_ints(kw.value)
+        if lit is not None:
+            return lit
+        # self._donate()-style indirection: resolve the method's literal
+        # returns (the engine centralizes its donation policy there)
+        if isinstance(kw.value, ast.Call):
+            chain = attr_chain(kw.value.func)
+            if chain and chain[0] == "self" and len(chain) == 2:
+                segs = enclosing.split(".")
+                for n in range(len(segs), 0, -1):
+                    cand = ".".join(segs[:n - 1] + [chain[1]]) \
+                        if n > 1 else chain[1]
+                    fn = funcs.get(cand)
+                    if fn is not None:
+                        for ret in ast.walk(fn):
+                            if isinstance(ret, ast.Return) and \
+                                    ret.value is not None:
+                                lit = _literal_ints(ret.value)
+                                if lit is not None:
+                                    return lit
+        return None
+    return None
+
+
+class _Donors:
+    """Resolved donating callables for one module."""
+
+    def __init__(self) -> None:
+        self.attrs: Dict[str, Tuple[int, ...]] = {}     # self.X(...)
+        self.locals: Dict[str, Tuple[int, ...]] = {}    # f(...)
+        self.factories: Dict[str, Tuple[int, ...]] = {}  # self.F(...)(...)
+
+
+def _collect_donors(ctx: Context, mod: Module) -> _Donors:
+    donors = _Donors()
+    funcs = ctx.functions[mod.path]
+
+    # factories: methods any of whose returns is/aliases a donating jit
+    for qual, fn in funcs.items():
+        jit_by_name: Dict[str, Tuple[int, ...]] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and _is_jit_call(node.value):
+                pos = _donate_positions(node.value, mod, funcs, qual)
+                if pos:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            jit_by_name[t.id] = pos
+                        elif isinstance(t, ast.Attribute):
+                            donors.attrs[t.attr] = pos
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Return) or node.value is None:
+                continue
+            if _is_jit_call(node.value):
+                pos = _donate_positions(node.value, mod, funcs, qual)
+                if pos:
+                    donors.factories[qual.split(".")[-1]] = pos
+            elif isinstance(node.value, ast.Name) and \
+                    node.value.id in jit_by_name:
+                donors.factories[qual.split(".")[-1]] = \
+                    jit_by_name[node.value.id]
+
+    # attribute/local bindings at any scope (incl. module level)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign) and _is_jit_call(node.value):
+            qual = enclosing_qualname(mod.tree, node)
+            pos = _donate_positions(node.value, mod, funcs, qual)
+            if not pos:
+                continue
+            for t in node.targets:
+                if isinstance(t, ast.Attribute):
+                    donors.attrs[t.attr] = pos
+                elif isinstance(t, ast.Name):
+                    donors.locals[t.id] = pos
+        # self.X = self.<factory>(...): X donates like the factory
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            chain = attr_chain(node.value.func)
+            if chain and chain[0] == "self" and len(chain) == 2 and \
+                    chain[1] in donors.factories:
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute):
+                        donors.attrs[t.attr] = donors.factories[chain[1]]
+                    elif isinstance(t, ast.Name):
+                        donors.locals[t.id] = donors.factories[chain[1]]
+    return donors
+
+
+def _donated_call(node: ast.Call, donors: _Donors
+                  ) -> Optional[Tuple[int, ...]]:
+    """Donation positions if this call invokes a donating callable."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        chain = attr_chain(f)
+        if chain and chain[0] == "self" and len(chain) == 2 and \
+                chain[1] in donors.attrs:
+            return donors.attrs[chain[1]]
+    if isinstance(f, ast.Name) and f.id in donors.locals:
+        return donors.locals[f.id]
+    # factory-call-call: self._admit_exe(b)(params, state, ...)
+    if isinstance(f, ast.Call):
+        fchain = attr_chain(f.func)
+        if fchain and fchain[0] == "self" and len(fchain) == 2 and \
+                fchain[1] in donors.factories:
+            return donors.factories[fchain[1]]
+    return None
+
+
+def _stmt_of(fn: ast.AST, call: ast.Call) -> Optional[ast.stmt]:
+    for st in ast.walk(fn):
+        if isinstance(st, ast.stmt) and \
+                any(sub is call for sub in ast.walk(st)) and \
+                not isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # innermost simple statement containing the call
+            inner = [s for s in ast.walk(st)
+                     if isinstance(s, ast.stmt) and s is not st and
+                     any(sub is call for sub in ast.walk(s))]
+            if not inner:
+                return st
+    return None
+
+
+def _reads_of(nodes: List[ast.stmt], spelling: str) -> List[ast.AST]:
+    hits: List[ast.AST] = []
+    for st in nodes:
+        for sub in ast.walk(st):
+            if isinstance(sub, (ast.Name, ast.Attribute)):
+                try:
+                    if ast.unparse(sub) == spelling:
+                        hits.append(sub)
+                except Exception:   # pragma: no cover - defensive
+                    pass
+    return hits
+
+
+def _check_function(mod: Module, qual: str, fn: ast.AST,
+                    donors: _Donors) -> List[Finding]:
+    out: List[Finding] = []
+    body: List[ast.stmt] = list(getattr(fn, "body", []))
+    for call in ast.walk(fn):
+        if not isinstance(call, ast.Call):
+            continue
+        pos = _donated_call(call, donors)
+        if pos is None:
+            continue
+        stmt = _stmt_of(fn, call)
+        if stmt is None:
+            continue
+        targets: Set[str] = set()
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, (ast.Name, ast.Attribute)):
+                        try:
+                            targets.add(ast.unparse(sub))
+                        except Exception:  # pragma: no cover
+                            pass
+        for p in pos:
+            if p >= len(call.args):
+                continue
+            arg = call.args[p]
+            if not isinstance(arg, (ast.Name, ast.Attribute)):
+                continue        # fresh temporaries can't be reused
+            spelling = ast.unparse(arg)
+            if spelling in targets:
+                continue        # rebound in the same statement: safe
+            # scan the remainder of the function for reads
+            later = _later_stmts(fn, stmt)
+            hits = _reads_of(later, spelling)
+            if hits:
+                out.append(Finding(
+                    "L501", mod.path, hits[0].lineno, qual,
+                    f"`{spelling}` donated at line {call.lineno} "
+                    f"(donate_argnums position {p}) is read again "
+                    f"afterwards"))
+    return out
+
+
+def _later_stmts(fn: ast.AST, stmt: ast.stmt) -> List[ast.stmt]:
+    """Statements that can execute after ``stmt`` in ``fn``: siblings
+    after it at every nesting level, plus the bodies of enclosing loops
+    (the next iteration re-reads)."""
+    out: List[ast.stmt] = []
+
+    def walk(body: List[ast.stmt], in_loop: bool) -> bool:
+        found = False
+        for i, st in enumerate(body):
+            contains = any(sub is stmt for sub in ast.walk(st))
+            if st is stmt or contains:
+                found = True
+                if st is not stmt:
+                    for blk, looped in _blocks(st):
+                        if walk(blk, looped or in_loop) and looped:
+                            out.extend(blk)
+                out.extend(body[i + 1:])
+                return found
+        return found
+
+    def _blocks(st: ast.stmt):
+        if isinstance(st, (ast.For, ast.While)):
+            yield st.body, True
+            yield st.orelse, False
+        elif isinstance(st, ast.If):
+            yield st.body, False
+            yield st.orelse, False
+        elif isinstance(st, ast.With):
+            yield st.body, False
+        elif isinstance(st, ast.Try):
+            yield st.body, False
+            for h in st.handlers:
+                yield h.body, False
+            yield st.orelse, False
+            yield st.finalbody, False
+
+    walk(list(getattr(fn, "body", [])), False)
+    # dedupe while keeping order
+    seen: Set[int] = set()
+    uniq: List[ast.stmt] = []
+    for st in out:
+        if id(st) not in seen and st is not stmt:
+            seen.add(id(st))
+            uniq.append(st)
+    return uniq
+
+
+def run(ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in ctx.modules.values():
+        donors = _collect_donors(ctx, mod)
+        if not (donors.attrs or donors.locals or donors.factories):
+            continue
+        for qual, fn in ctx.functions[mod.path].items():
+            out.extend(_check_function(mod, qual, fn, donors))
+    return out

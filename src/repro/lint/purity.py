@@ -1,0 +1,539 @@
+"""trace-purity pass (L101-L105): no host syncs reachable from jit.
+
+Discovers every jit root in the repo — ``@jax.jit`` /
+``@functools.partial(jax.jit, static_argnames=...)`` decorators,
+``jax.jit(fn, ...)`` call sites (including the engine's factory pattern,
+where ``jax.jit(self._make_tick_impl(k))`` wraps functions *returned* by
+the factory) — then walks the call graph from each root with a simple
+per-argument taint: a root's non-static parameters are traced values, and
+anything computed from a traced value is traced. Host-sync constructs on
+traced values (``.item()``, ``float()/int()/bool()``, ``np.*``/``math.*``
+calls, Python ``if``/``while``/``assert``, ``print``) would silently add
+device→host transfers inside the tick, so they are findings.
+
+Deliberately NOT findings: ``.shape``/``.dtype``/``.ndim``/``.size``
+chains (static under trace), ``len()``, ``x is None`` checks (static),
+and anything inside ``pl.pallas_call`` kernel bodies (Refs can't sync).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from .base import Context, Finding, Module, attr_chain
+
+NAME = "trace-purity"
+
+HOST_SYNC_ATTRS = {"item", "tolist", "to_py", "__array__"}
+HOST_CASTS = {"float", "int", "bool", "complex"}
+HOST_MODULE_PREFIXES = ("numpy", "math")
+DEVICE_MODULE_PREFIXES = ("jax", "jax.numpy", "jax.lax")
+SHAPE_ATTRS = {"shape", "dtype", "ndim", "size", "weak_type", "sharding",
+               "itemsize", "nbytes"}
+UNTAINTED_BUILTINS = {"len", "range", "enumerate", "isinstance", "type",
+                      "hasattr", "getattr", "zip", "slice", "id", "repr",
+                      "str"}
+MAX_DEPTH = 40
+
+
+def _is_jit_chain(chain: Optional[List[str]]) -> bool:
+    return bool(chain) and chain[-1] == "jit"
+
+
+def _static_names(call: ast.Call) -> Set[str]:
+    """Parameter names marked static via static_argnames=..."""
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.add(n.value)
+    return out
+
+
+def _static_nums(call: ast.Call) -> Set[int]:
+    out: Set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    out.add(n.value)
+    return out
+
+
+class _Root:
+    def __init__(self, module: Module, fn: ast.AST, qual: str,
+                 static_names: Set[str], static_nums: Set[int]):
+        self.module = module
+        self.fn = fn
+        self.qual = qual
+        self.static_names = static_names
+        self.static_nums = static_nums
+
+
+def _find_roots(ctx: Context) -> List[_Root]:
+    roots: List[_Root] = []
+    for mod in ctx.modules.values():
+        funcs = ctx.functions[mod.path]
+        qual_of = {id(fn): q for q, fn in funcs.items()}
+
+        def local_def(name: str, near_qual: str) -> Optional[Tuple[str, ast.AST]]:
+            # prefer the candidate sharing the longest qualname prefix with
+            # the jit call's own scope (nested defs shadow module-level)
+            cands = [(q, f) for q, f in funcs.items()
+                     if q.split(".")[-1] == name]
+            if not cands:
+                return None
+            def score(q: str) -> int:
+                a, b = q.split("."), near_qual.split(".")
+                n = 0
+                while n < min(len(a), len(b)) and a[n] == b[n]:
+                    n += 1
+                return n
+            return max(cands, key=lambda qf: score(qf[0]))
+
+        for node in ast.walk(mod.tree):
+            # decorator form
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    sn: Set[str] = set()
+                    nums: Set[int] = set()
+                    hit = False
+                    if _is_jit_chain(attr_chain(dec)):
+                        hit = True
+                    elif isinstance(dec, ast.Call):
+                        dchain = attr_chain(dec.func)
+                        if _is_jit_chain(dchain):
+                            hit = True
+                            sn, nums = _static_names(dec), _static_nums(dec)
+                        elif dchain and dchain[-1] == "partial" and dec.args \
+                                and _is_jit_chain(attr_chain(dec.args[0])):
+                            hit = True
+                            sn, nums = _static_names(dec), _static_nums(dec)
+                    if hit:
+                        roots.append(_Root(mod, node,
+                                           qual_of.get(id(node), node.name),
+                                           sn, nums))
+                        break
+            # call form: jax.jit(target, ...)
+            if isinstance(node, ast.Call) and _is_jit_chain(
+                    attr_chain(node.func)) and node.args:
+                target = node.args[0]
+                sn, nums = _static_names(node), _static_nums(node)
+                from .base import enclosing_qualname
+                here = enclosing_qualname(mod.tree, node)
+                if isinstance(target, ast.Lambda):
+                    roots.append(_Root(mod, target, f"{here}.<lambda>"
+                                       if here else "<lambda>", sn, nums))
+                elif isinstance(target, ast.Name):
+                    got = local_def(target.id, here)
+                    if got:
+                        roots.append(_Root(mod, got[1], got[0], sn, nums))
+                elif isinstance(target, ast.Call):
+                    # factory indirection: jit(self._make_tick_impl(k)) —
+                    # the functions the factory RETURNS are the real roots
+                    fchain = attr_chain(target.func)
+                    fname = fchain[-1] if fchain else None
+                    fac = local_def(fname, here) if fname else None
+                    if fac and isinstance(fac[1], (ast.FunctionDef,
+                                                   ast.AsyncFunctionDef)):
+                        for ret in ast.walk(fac[1]):
+                            if not isinstance(ret, ast.Return):
+                                continue
+                            # unwrap `return a if cond else b` too
+                            vals = [ret.value]
+                            if isinstance(ret.value, ast.IfExp):
+                                vals = [ret.value.body, ret.value.orelse]
+                            for v in vals:
+                                if isinstance(v, ast.Name):
+                                    got = local_def(v.id, fac[0])
+                                    if got:
+                                        roots.append(_Root(
+                                            mod, got[1], got[0], sn, nums))
+    return roots
+
+
+class _Scope:
+    """Mutable per-function analysis state."""
+
+    def __init__(self, tainted: Set[str]):
+        self.taint = set(tainted)
+        self.local_funcs: Dict[str, ast.AST] = {}
+
+
+class _Analyzer:
+    def __init__(self, ctx: Context):
+        self.ctx = ctx
+        self.findings: List[Finding] = []
+        self._seen: Set[Tuple[str, str, FrozenSet[str], FrozenSet[str]]] = set()
+
+    # -- entry ---------------------------------------------------------------
+
+    def analyze(self, mod: Module, fn: ast.AST, qual: str,
+                tainted_params: Set[str],
+                closure_taint: FrozenSet[str] = frozenset(),
+                depth: int = 0) -> None:
+        if depth > MAX_DEPTH:
+            return
+        key = (mod.path, qual, frozenset(tainted_params), closure_taint)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        scope = _Scope(tainted_params | set(closure_taint))
+        body = fn.body if isinstance(fn.body, list) else [ast.Expr(fn.body)]
+        # pre-register nested defs so forward calls resolve
+        for st in body:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scope.local_funcs[st.name] = st
+        for st in body:
+            self._stmt(st, mod, qual, scope, depth)
+
+    # -- statements ----------------------------------------------------------
+
+    def _stmt(self, node: ast.stmt, mod: Module, qual: str, scope: _Scope,
+              depth: int) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scope.local_funcs[node.name] = node
+            return
+        if isinstance(node, ast.Assign):
+            t = self._expr(node.value, mod, qual, scope, depth)
+            if isinstance(node.value, ast.Lambda) and \
+                    len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name):
+                scope.local_funcs[node.targets[0].id] = node.value
+            for tgt in node.targets:
+                self._bind(tgt, t, node.value, scope)
+            return
+        if isinstance(node, ast.AnnAssign) and node.value is not None:
+            t = self._expr(node.value, mod, qual, scope, depth)
+            self._bind(node.target, t, node.value, scope)
+            return
+        if isinstance(node, ast.AugAssign):
+            t = self._expr(node.value, mod, qual, scope, depth)
+            if isinstance(node.target, ast.Name) and t:
+                scope.taint.add(node.target.id)
+            return
+        if isinstance(node, (ast.If, ast.While)):
+            if self._expr(node.test, mod, qual, scope, depth):
+                self._emit("L104", mod, qual, node.test,
+                           f"branch on traced value "
+                           f"`{mod.segment(node.test)}`")
+            for st in node.body + node.orelse:
+                self._stmt(st, mod, qual, scope, depth)
+            return
+        if isinstance(node, ast.Assert):
+            if self._expr(node.test, mod, qual, scope, depth):
+                self._emit("L104", mod, qual, node.test,
+                           f"assert on traced value "
+                           f"`{mod.segment(node.test)}`")
+            return
+        if isinstance(node, ast.For):
+            it = self._expr(node.iter, mod, qual, scope, depth)
+            self._bind(node.target, it, None, scope)
+            for st in node.body + node.orelse:
+                self._stmt(st, mod, qual, scope, depth)
+            return
+        if isinstance(node, ast.With):
+            for item in node.items:
+                t = self._expr(item.context_expr, mod, qual, scope, depth)
+                if item.optional_vars is not None:
+                    self._bind(item.optional_vars, t, None, scope)
+            for st in node.body:
+                self._stmt(st, mod, qual, scope, depth)
+            return
+        if isinstance(node, ast.Try):
+            for st in node.body + node.orelse + node.finalbody:
+                self._stmt(st, mod, qual, scope, depth)
+            for h in node.handlers:
+                for st in h.body:
+                    self._stmt(st, mod, qual, scope, depth)
+            return
+        if isinstance(node, ast.Return) and node.value is not None:
+            self._expr(node.value, mod, qual, scope, depth)
+            return
+        if isinstance(node, ast.Expr):
+            self._expr(node.value, mod, qual, scope, depth)
+            return
+        # anything else: visit contained expressions generically
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self._expr(child, mod, qual, scope, depth)
+            elif isinstance(child, ast.stmt):
+                self._stmt(child, mod, qual, scope, depth)
+
+    def _bind(self, target: ast.expr, tainted: bool,
+              value: Optional[ast.expr], scope: _Scope) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                scope.taint.add(target.id)
+            else:
+                scope.taint.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            if isinstance(value, (ast.Tuple, ast.List)) and \
+                    len(value.elts) == len(target.elts):
+                for t, v in zip(target.elts, value.elts):
+                    self._bind(t, self._quick_taint(v, scope), v, scope)
+            else:
+                for t in target.elts:
+                    self._bind(t, tainted, None, scope)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted, None, scope)
+        # Subscript/Attribute targets introduce no new local names
+
+    def _quick_taint(self, node: ast.expr, scope: _Scope) -> bool:
+        """Taint of an expr without emitting findings (for tuple unpack)."""
+        if isinstance(node, ast.Name):
+            return node.id in scope.taint
+        if isinstance(node, ast.Attribute):
+            if node.attr in SHAPE_ATTRS:
+                return False
+            return self._quick_taint(node.value, scope)
+        return any(self._quick_taint(c, scope)
+                   for c in ast.iter_child_nodes(node)
+                   if isinstance(c, ast.expr))
+
+    # -- expressions: returns "is this value traced?" ------------------------
+
+    def _expr(self, node: ast.expr, mod: Module, qual: str, scope: _Scope,
+              depth: int) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in scope.taint
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Attribute):
+            if node.attr in SHAPE_ATTRS:
+                self._expr(node.value, mod, qual, scope, depth)
+                return False
+            return self._expr(node.value, mod, qual, scope, depth)
+        if isinstance(node, ast.Call):
+            return self._call(node, mod, qual, scope, depth)
+        if isinstance(node, ast.Compare):
+            left = self._expr(node.left, mod, qual, scope, depth)
+            rest = [self._expr(c, mod, qual, scope, depth)
+                    for c in node.comparators]
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False        # identity checks are static under trace
+            return left or any(rest)
+        if isinstance(node, ast.IfExp):
+            if self._expr(node.test, mod, qual, scope, depth):
+                self._emit("L104", mod, qual, node.test,
+                           f"conditional expression on traced value "
+                           f"`{mod.segment(node.test)}`")
+            a = self._expr(node.body, mod, qual, scope, depth)
+            b = self._expr(node.orelse, mod, qual, scope, depth)
+            return a or b
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            added: Set[str] = set()
+            for gen in node.generators:
+                it = self._expr(gen.iter, mod, qual, scope, depth)
+                if it:
+                    for n in ast.walk(gen.target):
+                        if isinstance(n, ast.Name) and \
+                                n.id not in scope.taint:
+                            scope.taint.add(n.id)
+                            added.add(n.id)
+                for cond in gen.ifs:
+                    self._expr(cond, mod, qual, scope, depth)
+            if isinstance(node, ast.DictComp):
+                out = self._expr(node.key, mod, qual, scope, depth) or \
+                    self._expr(node.value, mod, qual, scope, depth)
+            else:
+                out = self._expr(node.elt, mod, qual, scope, depth)
+            scope.taint -= added
+            return out
+        if isinstance(node, ast.Lambda):
+            return False            # analyzed only when called / passed
+        if isinstance(node, ast.NamedExpr):
+            t = self._expr(node.value, mod, qual, scope, depth)
+            self._bind(node.target, t, node.value, scope)
+            return t
+        # BinOp / BoolOp / UnaryOp / Subscript / Tuple / List / Dict / etc.
+        out = False
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                out = self._expr(child, mod, qual, scope, depth) or out
+        return out
+
+    # -- calls ---------------------------------------------------------------
+
+    def _call(self, node: ast.Call, mod: Module, qual: str, scope: _Scope,
+              depth: int) -> bool:
+        arg_taints = [self._expr(a.value if isinstance(a, ast.Starred) else a,
+                                 mod, qual, scope, depth)
+                      for a in node.args]
+        kw_taints = {kw.arg: self._expr(kw.value, mod, qual, scope, depth)
+                     for kw in node.keywords}
+        any_tainted = any(arg_taints) or any(kw_taints.values())
+        chain = attr_chain(node.func)
+
+        # method-style host syncs: x.item(), x.tolist()
+        if isinstance(node.func, ast.Attribute):
+            recv_taint = self._quick_taint(node.func.value, scope)
+            if node.func.attr in HOST_SYNC_ATTRS and recv_taint:
+                self._emit("L101", mod, qual, node,
+                           f"`.{node.func.attr}()` on traced value "
+                           f"`{mod.segment(node.func.value)}`")
+                return False
+
+        if isinstance(node.func, ast.Name):
+            name = node.func.id
+            if name in HOST_CASTS and any_tainted:
+                self._emit("L102", mod, qual, node,
+                           f"host cast `{name}(...)` on traced value "
+                           f"`{mod.segment(node)}`")
+                return False
+            if name == "print" and any_tainted:
+                self._emit("L105", mod, qual, node,
+                           f"host print of traced value "
+                           f"`{mod.segment(node)}`")
+                return False
+            if name in UNTAINTED_BUILTINS:
+                return False
+
+        # module-qualified calls: host libs flag, device libs taint
+        dotted = self._resolve_module(chain, mod)
+        if dotted is not None:
+            if dotted.startswith(HOST_MODULE_PREFIXES):
+                if any_tainted:
+                    self._emit("L103", mod, qual, node,
+                               f"host-library call "
+                               f"`{'.'.join(chain)}` on traced value")
+                return any_tainted
+            if dotted.startswith(DEVICE_MODULE_PREFIXES):
+                if not (chain and chain[0] in ("pl", "pltpu")):
+                    self._descend_hofs(node, mod, qual, scope, depth)
+                return True
+
+        # repo-internal callee: map taint onto its params and recurse
+        target = self._resolve_callee(node, chain, mod, qual, scope)
+        if target is not None:
+            tmod, tqual, tfn, is_method, closure = target
+            params = [a.arg for a in tfn.args.args] \
+                if not isinstance(tfn, ast.Lambda) else \
+                [a.arg for a in tfn.args.args]
+            if is_method and params and params[0] in ("self", "cls"):
+                params = params[1:]
+            tainted_params: Set[str] = set()
+            for i, t in enumerate(arg_taints):
+                if isinstance(node.args[i], ast.Starred):
+                    if t:
+                        tainted_params.update(params[i:])
+                elif t and i < len(params):
+                    tainted_params.add(params[i])
+            for k, t in kw_taints.items():
+                if t and k in params:
+                    tainted_params.add(k)
+            self.analyze(tmod, tfn, tqual, tainted_params, closure,
+                         depth + 1)
+            return any_tainted
+
+        # unresolved external HOF carrying a local function/lambda argument:
+        # analyze that function with all params traced (conservative)
+        self._descend_hofs(node, mod, qual, scope, depth)
+        # a method call on a traced receiver yields a traced value
+        # (st.sum(), x.astype(...), hist.at[i].set(...))
+        if isinstance(node.func, ast.Attribute) and \
+                self._quick_taint(node.func.value, scope):
+            return True
+        return any_tainted
+
+    def _descend_hofs(self, node: ast.Call, mod: Module, qual: str,
+                      scope: _Scope, depth: int) -> None:
+        for a in list(node.args) + [kw.value for kw in node.keywords]:
+            fn: Optional[ast.AST] = None
+            fq = qual
+            if isinstance(a, ast.Lambda):
+                fn, fq = a, f"{qual}.<lambda>"
+            elif isinstance(a, ast.Name) and a.id in scope.local_funcs:
+                fn, fq = scope.local_funcs[a.id], f"{qual}.{a.id}"
+            if fn is not None:
+                params = {p.arg for p in fn.args.args}
+                self.analyze(mod, fn, fq, params,
+                             frozenset(scope.taint), depth + 1)
+
+    def _resolve_module(self, chain: Optional[List[str]],
+                        mod: Module) -> Optional[str]:
+        if not chain or len(chain) < 2:
+            return None
+        imports = self.ctx.imports[mod.path]
+        base = imports.get(chain[0])
+        if base is None:
+            froms = self.ctx.from_imports[mod.path]
+            if chain[0] in froms:
+                m, attr = froms[chain[0]]
+                return f"{m}.{attr}"
+            return None
+        return base
+
+    def _resolve_callee(self, node: ast.Call, chain: Optional[List[str]],
+                        mod: Module, qual: str, scope: _Scope
+                        ) -> Optional[Tuple[Module, str, ast.AST, bool,
+                                            FrozenSet[str]]]:
+        funcs = self.ctx.functions[mod.path]
+        # local nested function (closure taint flows in)
+        if isinstance(node.func, ast.Name):
+            name = node.func.id
+            if name in scope.local_funcs:
+                return (mod, f"{qual}.{name}", scope.local_funcs[name],
+                        False, frozenset(scope.taint))
+            if name in funcs:
+                return (mod, name, funcs[name], False, frozenset())
+            froms = self.ctx.from_imports[mod.path]
+            if name in froms:
+                dotted, attr = froms[name]
+                other = self.ctx.module_for_dotted(dotted)
+                if other is not None and attr in \
+                        self.ctx.functions[other.path]:
+                    return (other, attr,
+                            self.ctx.functions[other.path][attr],
+                            False, frozenset())
+            return None
+        # self.method: try each enclosing qual prefix as the class
+        if chain and chain[0] == "self" and len(chain) == 2:
+            segs = qual.split(".")
+            for n in range(len(segs) - 1, 0, -1):
+                cand = ".".join(segs[:n] + [chain[1]])
+                if cand in funcs:
+                    return (mod, cand, funcs[cand], True, frozenset())
+            return None
+        # alias.func in another repo module
+        if chain and len(chain) == 2:
+            dotted = self.ctx.imports[mod.path].get(chain[0])
+            if dotted:
+                other = self.ctx.module_for_dotted(dotted)
+                if other is not None and chain[1] in \
+                        self.ctx.functions[other.path]:
+                    return (other, chain[1],
+                            self.ctx.functions[other.path][chain[1]],
+                            False, frozenset())
+        return None
+
+    def _emit(self, rule: str, mod: Module, qual: str, node: ast.AST,
+              detail: str) -> None:
+        self.findings.append(Finding(rule, mod.path,
+                                     getattr(node, "lineno", 0), qual,
+                                     detail))
+
+
+def run(ctx: Context) -> List[Finding]:
+    an = _Analyzer(ctx)
+    for root in _find_roots(ctx):
+        fn = root.fn
+        args = fn.args.args
+        tainted = {a.arg for a in args if a.arg not in ("self", "cls")}
+        tainted -= root.static_names
+        for i, a in enumerate(args):
+            if i in root.static_nums:
+                tainted.discard(a.arg)
+        an.analyze(root.module, fn, root.qual, tainted)
+    # dedupe (same violation reachable from several roots)
+    seen: Set[Tuple[str, str, int, str]] = set()
+    out: List[Finding] = []
+    for f in an.findings:
+        k = (f.rule, f.path, f.line, f.detail)
+        if k not in seen:
+            seen.add(k)
+            out.append(f)
+    return out

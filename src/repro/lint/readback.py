@@ -1,0 +1,162 @@
+"""readback-budget pass (L201-L203): ONE compact readback per tick.
+
+The engines' hot loops are contractually allowed exactly one device→host
+transfer per tick, and it must go through the counted funnel
+(``ServeEngine._readback`` / ``_checked_readback``, which increment
+``host_readbacks`` and validate torn transfers). This pass:
+
+* L201 — counts funnel calls + raw ``jax.device_get`` along every control
+  path of each *tick scope* (``ServeEngine.step``, ``TrainEngine.run``)
+  with branch-aware max: ``if/elif/else`` arms take the max, sequential
+  statements sum, and a loop body counts once (the budget is per tick,
+  and ``TrainEngine.run``'s per-tick readback lives in its step loop).
+* L202 — flags a readback nested deeper in loops than the scope allows
+  (a per-slot readback inside the tick loop is the classic regression).
+* L203 — flags raw ``jax.device_get``/``np.asarray``-style transfers in
+  the engine modules *outside* the funnel helpers, which would escape the
+  ``host_readbacks`` counter and the chaos tier's torn-readback checks.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from .base import Context, Finding, Module, attr_chain, enclosing_qualname
+
+NAME = "readback-budget"
+
+
+@dataclasses.dataclass(frozen=True)
+class TickScope:
+    path: str               # module repo-relative path
+    qualname: str           # tick function
+    budget: int = 1         # max readbacks on any one control path
+    loop_depth_allowed: int = 0   # loops the per-tick readback may sit in
+
+
+#: the engines' hot loops and their counted funnels
+TICK_SCOPES: Tuple[TickScope, ...] = (
+    TickScope("src/repro/serve/engine.py", "ServeEngine.step",
+              budget=1, loop_depth_allowed=0),
+    TickScope("src/repro/train/engine.py", "TrainEngine.run",
+              budget=1, loop_depth_allowed=1),
+)
+
+FUNNELS: Dict[str, Set[str]] = {
+    "src/repro/serve/engine.py": {"_readback", "_checked_readback"},
+    "src/repro/train/engine.py": set(),
+}
+
+RAW_TRANSFER_CHAINS = {("jax", "device_get")}
+
+
+def _is_raw_transfer(node: ast.Call) -> bool:
+    chain = attr_chain(node.func)
+    return bool(chain) and tuple(chain[-2:]) in RAW_TRANSFER_CHAINS
+
+
+def _is_funnel_call(node: ast.Call, funnel: Set[str]) -> bool:
+    chain = attr_chain(node.func)
+    return bool(chain) and chain[-1] in funnel
+
+
+class _PathCounter:
+    """Max readbacks along any single control path through a statement
+    list, plus the loop depth of every readback site found."""
+
+    def __init__(self, funnel: Set[str]):
+        self.funnel = funnel
+        self.sites: List[Tuple[ast.Call, int]] = []   # (call, loop depth)
+
+    def count_body(self, body: List[ast.stmt], loop_depth: int) -> int:
+        return sum(self.count_stmt(s, loop_depth) for s in body)
+
+    def count_stmt(self, node: ast.stmt, loop_depth: int) -> int:
+        if isinstance(node, ast.If):
+            t = self._count_expr(node.test, loop_depth)
+            return t + max(self.count_body(node.body, loop_depth),
+                           self.count_body(node.orelse, loop_depth))
+        if isinstance(node, (ast.For, ast.While)):
+            head = self._count_expr(node.iter, loop_depth) \
+                if isinstance(node, ast.For) else \
+                self._count_expr(node.test, loop_depth)
+            # the budget is per tick: a loop body's readbacks count once
+            return head + self.count_body(node.body, loop_depth + 1) + \
+                self.count_body(node.orelse, loop_depth)
+        if isinstance(node, ast.Try):
+            return max(self.count_body(node.body, loop_depth),
+                       max((self.count_body(h.body, loop_depth)
+                            for h in node.handlers), default=0)) + \
+                self.count_body(node.orelse, loop_depth) + \
+                self.count_body(node.finalbody, loop_depth)
+        if isinstance(node, ast.With):
+            return sum(self._count_expr(i.context_expr, loop_depth)
+                       for i in node.items) + \
+                self.count_body(node.body, loop_depth)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return 0        # nested defs are separate call sites
+        n = 0
+        for child in ast.walk(node):
+            if isinstance(child, ast.Call) and (
+                    _is_funnel_call(child, self.funnel) or
+                    _is_raw_transfer(child)):
+                self.sites.append((child, loop_depth))
+                n += 1
+        return n
+
+    def _count_expr(self, node: Optional[ast.expr], loop_depth: int) -> int:
+        if node is None:
+            return 0
+        n = 0
+        for child in ast.walk(node):
+            if isinstance(child, ast.Call) and (
+                    _is_funnel_call(child, self.funnel) or
+                    _is_raw_transfer(child)):
+                self.sites.append((child, loop_depth))
+                n += 1
+        return n
+
+
+def run(ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    for scope in TICK_SCOPES:
+        mod = ctx.modules.get(scope.path)
+        if mod is None:
+            continue
+        fn = ctx.lookup_function(scope.path, scope.qualname)
+        if fn is None:
+            continue
+        counter = _PathCounter(FUNNELS.get(scope.path, set()))
+        worst = counter.count_body(fn.body, 0)
+        if worst > scope.budget:
+            out.append(Finding(
+                "L201", mod.path, fn.lineno, scope.qualname,
+                f"{worst} readback sites on a single tick path "
+                f"(budget {scope.budget})"))
+        for call, depth in counter.sites:
+            if depth > scope.loop_depth_allowed:
+                out.append(Finding(
+                    "L202", mod.path, call.lineno, scope.qualname,
+                    f"readback `{mod.segment(call.func)}` at loop depth "
+                    f"{depth} (allowed {scope.loop_depth_allowed})"))
+
+    # L203: raw transfers escaping the funnel anywhere in engine modules
+    for path, funnel in FUNNELS.items():
+        mod = ctx.modules.get(path)
+        if mod is None or not funnel:
+            continue
+        tick_quals = {s.qualname for s in TICK_SCOPES if s.path == path}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and _is_raw_transfer(node):
+                qual = enclosing_qualname(mod.tree, node)
+                leaf = qual.split(".")[-1] if qual else ""
+                if leaf in funnel or qual in tick_quals:
+                    continue
+                out.append(Finding(
+                    "L203", mod.path, node.lineno, qual,
+                    f"raw `{mod.segment(node.func)}` outside the counted "
+                    f"readback funnel"))
+    return out

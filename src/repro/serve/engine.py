@@ -228,6 +228,15 @@ class StepMetrics:
         return self.weight_bytes + self.kv_bytes
 
 
+# StepMetrics fields that are deliberately NOT energy channels — pure
+# occupancy/queue observability with no joule interpretation. Everything
+# else MUST have a bill site in CarbonAccountant.observe_serve; the
+# accounting-completeness lint pass (repro-lint L401, DESIGN.md §20)
+# fails CI on any field that is neither billed nor listed here, so a new
+# channel can never ship half-wired.
+ACCOUNTING_EXEMPT = frozenset({"active_slots", "admitted", "queue_depth"})
+
+
 @dataclasses.dataclass
 class _AdmitInfo:
     """What one admission pass did + its modeled traffic/compute bill."""

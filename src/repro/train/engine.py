@@ -80,6 +80,14 @@ class TrainStepMetrics:
         return self.fwd_bytes + self.bwd_bytes + self.opt_bytes
 
 
+# TrainStepMetrics fields that are deliberately NOT energy channels —
+# training-quality telemetry (loss curves, gradient norms) with no joule
+# interpretation. Everything else MUST be billed in
+# CarbonAccountant.observe_train; the accounting-completeness lint pass
+# (repro-lint L401, DESIGN.md §20) fails CI otherwise.
+TRAIN_ACCOUNTING_EXEMPT = frozenset({"loss", "loss_mean", "grad_norm"})
+
+
 class TrainEngine:
     def __init__(self, *, loss_fn: LossFn, params: PyTree,
                  opt_cfg: AdamWConfig,

@@ -1,0 +1,663 @@
+"""repro-lint: the invariant linter itself (DESIGN.md §20).
+
+Fixture-driven true-positive/true-negative snippets for all five passes,
+baseline add/expire semantics, the CLI's exit-code contract, and a
+self-lint asserting the real repo is clean modulo the justified baseline.
+Also locks the accounting fix the linter surfaced (L401: faults_injected/
+degraded/readback_retries were unbilled until this PR).
+"""
+
+import os
+import sys
+import textwrap
+
+import pytest
+
+from repro.lint import (Context, PASSES, load_baseline, run_passes,
+                        split_by_baseline, write_baseline)
+from repro.lint.base import Finding
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def lint_files(tmp_path, files, passes=None):
+    """Write a mini-repo ({relpath: source}) and run the passes on it."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    ctx = Context(str(tmp_path), list(files))
+    return run_passes(ctx, passes)
+
+
+def rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# -- trace purity (L101-L105) -------------------------------------------------
+
+
+class TestTracePurity:
+    def test_true_positives_all_rules(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/serve/hot.py": """
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def tick(params, st):
+                if st.sum() > 0:            # L104
+                    y = float(st.mean())    # L102
+                z = np.asarray(st)          # L103
+                print(st)                   # L105
+                return st.item()            # L101
+        """}, ["trace-purity"])
+        assert rules(fs) == ["L101", "L102", "L103", "L104", "L105"]
+        assert all(f.path == "src/repro/serve/hot.py" for f in fs)
+        assert all(f.func == "tick" for f in fs)
+
+    def test_true_negative_static_constructs(self, tmp_path):
+        # shape branches, `is None`, len(), static_argnames params, and
+        # host work on closure config are all legal inside jit
+        fs = lint_files(tmp_path, {"src/repro/serve/hot.py": """
+            import functools
+            import jax
+            import jax.numpy as jnp
+            import numpy as np
+
+            @functools.partial(jax.jit, static_argnames=("k",))
+            def tick(params, st, k):
+                if st.shape[1] > 0:          # shapes are static
+                    st = st + 1
+                if k > 2:                    # static_argnames param
+                    st = st * 2
+                if params is None:           # identity check is static
+                    params = jnp.zeros(())
+                n = len(st)                  # len() is static
+                host = np.zeros(int(n))     # np on static values only
+                return st + jnp.asarray(host)
+        """}, ["trace-purity"])
+        assert fs == []
+
+    def test_interprocedural_taint_reaches_callee(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/serve/hot.py": """
+            import jax
+
+            def helper(x, cfg):
+                if cfg:              # untainted: called with a constant
+                    x = x + 1
+                return x.item()      # L101: x IS the traced arg
+
+            @jax.jit
+            def tick(st):
+                return helper(st, True)
+        """}, ["trace-purity"])
+        assert rules(fs) == ["L101"]
+        assert fs[0].func == "helper"
+
+    def test_factory_returned_ticks_are_roots(self, tmp_path):
+        # the engine idiom: jax.jit(self._make_impl(k)) — the functions
+        # the factory returns (incl. via `a if c else b`) are jit roots
+        fs = lint_files(tmp_path, {"src/repro/serve/hot.py": """
+            import jax
+
+            class Eng:
+                def _make_impl(self, k):
+                    def tick_a(st):
+                        return st.item()     # L101, root via factory
+                    def tick_b(st):
+                        return st + 1
+                    if k > 2:
+                        return tick_a
+                    return tick_b if k else tick_a
+
+                def build(self, k):
+                    return jax.jit(self._make_impl(k), donate_argnums=(0,))
+        """}, ["trace-purity"])
+        assert rules(fs) == ["L101"]
+
+    def test_closure_taint_flows_into_nested_helper(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/serve/hot.py": """
+            import jax
+
+            @jax.jit
+            def tick(st):
+                def finisher():
+                    return float(st.sum())   # L102 via closure
+                return finisher()
+        """}, ["trace-purity"])
+        assert rules(fs) == ["L102"]
+
+
+# -- readback budget (L201-L203) ----------------------------------------------
+
+
+ENGINE_PREAMBLE = """
+    import jax
+    import numpy as np
+
+    class ServeEngine:
+        def _readback(self, x):
+            return np.asarray(jax.device_get(x))
+
+        def _checked_readback(self, x):
+            for _ in range(3):
+                out = self._readback(x)
+            return out
+"""
+
+
+class TestReadbackBudget:
+    def test_double_readback_on_one_path_flags(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/serve/engine.py":
+                                   ENGINE_PREAMBLE + """
+        def step(self):
+            a = self._checked_readback(self.state)
+            b = self._checked_readback(self.state)   # second on same path
+            return a, b
+        """}, ["readback-budget"])
+        assert "L201" in rules(fs)
+
+    def test_exclusive_branches_take_max_not_sum(self, tmp_path):
+        # one readback per if/elif/else arm == budget 1: the real step()
+        fs = lint_files(tmp_path, {"src/repro/serve/engine.py":
+                                   ENGINE_PREAMBLE + """
+        def step(self):
+            if self.tree:
+                out = self._checked_readback(self.a)
+            elif self.spec:
+                out = self._checked_readback(self.b)
+            else:
+                out = self._checked_readback(self.c)
+            return out
+        """}, ["readback-budget"])
+        assert fs == []
+
+    def test_readback_inside_loop_flags(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/serve/engine.py":
+                                   ENGINE_PREAMBLE + """
+        def step(self):
+            outs = []
+            for s in self.slots:
+                outs.append(self._readback(s))   # per-slot readback
+            return outs
+        """}, ["readback-budget"])
+        assert "L202" in rules(fs)
+
+    def test_train_run_loop_readback_is_legal(self, tmp_path):
+        # TrainEngine.run's ONE per-tick readback lives in the step loop;
+        # its scope allows loop depth 1
+        fs = lint_files(tmp_path, {"src/repro/train/engine.py": """
+            import jax
+
+            class TrainEngine:
+                def run(self, n):
+                    for _ in range(n):
+                        ms = self._tick(self.params)
+                        ms_host = jax.device_get(ms)
+                    return ms_host
+        """}, ["readback-budget"])
+        assert fs == []
+
+    def test_raw_device_get_outside_funnel_flags(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/serve/engine.py":
+                                   ENGINE_PREAMBLE + """
+        def step(self):
+            return self._checked_readback(self.state)
+
+        def peek(self):
+            return jax.device_get(self.state)    # escapes host_readbacks
+        """}, ["readback-budget"])
+        assert rules(fs) == ["L203"]
+        assert fs[0].func == "ServeEngine.peek"
+
+
+# -- replay determinism (L301-L303) -------------------------------------------
+
+
+class TestReplayDeterminism:
+    def test_wall_clock_and_unseeded_rng_flag(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/serve/snapshot.py": """
+            import time
+            import numpy as np
+
+            def append_tick(journal, rec):
+                rec["t"] = time.time()                 # L301
+                rec["jitter"] = np.random.default_rng().random()   # L302
+                journal.write(rec)
+        """}, ["replay-determinism"])
+        assert rules(fs) == ["L301", "L302"]
+
+    def test_monotonic_and_seeded_rng_are_legal(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/serve/snapshot.py": """
+            import time
+            import numpy as np
+
+            def append_tick(journal, rec):
+                t0 = time.monotonic()        # measurement, never replayed
+                rng = np.random.default_rng(0)
+                rec["jitter"] = rng.random()
+                journal.write(rec)
+        """}, ["replay-determinism"])
+        assert fs == []
+
+    def test_set_iteration_into_journal_flags(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/serve/snapshot.py": """
+            def host_state_dict(eng):
+                fit = set()
+                return {"fit_checked": [int(u) for u in fit]}   # L303
+        """}, ["replay-determinism"])
+        assert rules(fs) == ["L303"]
+
+    def test_sorted_set_iteration_is_legal(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/serve/snapshot.py": """
+            def host_state_dict(eng):
+                fit = set()
+                return {"fit_checked": sorted(int(u) for u in fit)}
+        """}, ["replay-determinism"])
+        assert fs == []
+
+    def test_unsorted_dict_items_into_record_flags(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/serve/pages.py": """
+            class PagePool:
+                def state_dict(self):
+                    return {"registry": [[k, v] for k, v in
+                                         self._page_key.items()]}   # L303
+        """}, ["replay-determinism"])
+        assert rules(fs) == ["L303"]
+
+    def test_dict_comprehension_is_legal(self, tmp_path):
+        # JSON objects are key-addressed: emitting a dict is order-safe
+        fs = lint_files(tmp_path, {"src/repro/serve/pages.py": """
+            class PagePool:
+                def state_dict(self):
+                    return {"depth": {str(k): v for k, v in
+                                      self._depth.items()}}
+        """}, ["replay-determinism"])
+        assert fs == []
+
+    def test_out_of_scope_module_not_flagged(self, tmp_path):
+        # wall-clock in launch/ tooling is not on the replay path
+        fs = lint_files(tmp_path, {"src/repro/launch/dryrun.py": """
+            import time
+
+            def stamp():
+                return time.time()
+        """}, ["replay-determinism"])
+        assert fs == []
+
+
+# -- accounting completeness (L401-L402) --------------------------------------
+
+
+METRICS_MOD = """
+    import dataclasses
+
+    @dataclasses.dataclass
+    class StepMetrics:
+        tokens: int
+        wall_s: float
+        kv_bytes: float = 0.0
+        mystery_j: float = 0.0      # the half-wired field under test
+        queue_depth: int = 0
+
+    ACCOUNTING_EXEMPT = frozenset({"queue_depth"})
+"""
+
+
+def accountant_mod(bill_mystery):
+    extra = ('self._x += float(getattr(metrics, "mystery_j", 0.0))\n'
+             if bill_mystery else "pass\n")
+    return """
+    class CarbonAccountant:
+        def observe_serve(self, metrics):
+            self._t += float(metrics.tokens)
+            self._w += float(metrics.wall_s)
+            self._b += float(getattr(metrics, "kv_bytes", 0.0))
+            """ + extra
+
+
+class TestAccountingCompleteness:
+    def test_half_wired_field_flags(self, tmp_path):
+        fs = lint_files(tmp_path, {
+            "src/repro/serve/engine.py": METRICS_MOD,
+            "src/repro/core/accounting.py": accountant_mod(False),
+        }, ["accounting-completeness"])
+        assert rules(fs) == ["L401"]
+        assert "mystery_j" in fs[0].detail
+
+    def test_billed_and_exempt_fields_pass(self, tmp_path):
+        fs = lint_files(tmp_path, {
+            "src/repro/serve/engine.py": METRICS_MOD,
+            "src/repro/core/accounting.py": accountant_mod(True),
+        }, ["accounting-completeness"])
+        assert fs == []
+
+    def test_unguarded_division_flags(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/core/accounting.py": """
+            class CarbonAccountant:
+                def observe_serve(self, metrics):
+                    pass
+
+                def report(self):
+                    return {"j_per_token": self._j / self._tokens}  # L402
+        """}, ["accounting-completeness"])
+        assert rules(fs) == ["L402"]
+
+    def test_guarded_divisions_pass(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/core/accounting.py": """
+            class CarbonAccountant:
+                def observe_serve(self, metrics):
+                    pass
+
+                def report(self):
+                    return {
+                        "a": self._j / self._tokens
+                             if self._tokens > 0 else 0.0,   # IfExp guard
+                        "b": self._j / 1e6,                  # literal
+                        "c": self._j / max(self._steps, 1),  # max() guard
+                    }
+
+                def train_report(self):
+                    if self._train_steps == 0:
+                        return None
+                    n = self._train_steps
+                    return {"per_step": self._j / n}   # early-return guard
+        """}, ["accounting-completeness"])
+        assert fs == []
+
+
+# -- donation safety (L501) ---------------------------------------------------
+
+
+class TestDonationSafety:
+    def test_use_after_donate_flags(self, tmp_path):
+        fs = lint_files(tmp_path, {"src/repro/serve/hot.py": """
+            import jax
+
+            def _impl(params, st):
+                return st + 1
+
+            _tick = jax.jit(_impl, donate_argnums=(1,))
+
+            def run(params, state):
+                out = _tick(params, state)
+                return state.sum()     # L501: state's buffer is gone
+        """}, ["donation-safety"])
+        assert rules(fs) == ["L501"]
+        assert "state" in fs[0].detail
+
+    def test_same_statement_rebinding_is_safe(self, tmp_path):
+        # the engine convention: self.state, out = self._tick(..., self.state)
+        fs = lint_files(tmp_path, {"src/repro/serve/hot.py": """
+            import jax
+
+            class Eng:
+                def _donate(self):
+                    return (1,)
+
+                def _build(self):
+                    def impl(params, st):
+                        return st, st.sum()
+                    fn = jax.jit(impl, donate_argnums=self._donate())
+                    return fn
+
+                def setup(self):
+                    self._tick = self._build()
+
+                def step(self):
+                    self.state, out = self._tick(self.params, self.state)
+                    return out, self.state.shape
+        """}, ["donation-safety"])
+        assert fs == []
+
+    def test_factory_call_call_use_after_donate_flags(self, tmp_path):
+        # self._admit_exe(b)(params, state): donation via factory result
+        fs = lint_files(tmp_path, {"src/repro/serve/hot.py": """
+            import jax
+
+            class Eng:
+                def _admit_exe(self, b):
+                    def admit(params, st):
+                        return st
+                    fn = jax.jit(admit, donate_argnums=(1,))
+                    return fn
+
+                def step(self):
+                    new = self._admit_exe(4)(self.params, self.state)
+                    junk = self.state.sum()    # L501
+                    self.state = new
+                    return junk
+        """}, ["donation-safety"])
+        assert rules(fs) == ["L501"]
+
+
+# -- baseline semantics -------------------------------------------------------
+
+
+class TestBaseline:
+    def _findings(self):
+        return [Finding("L301", "src/repro/serve/snapshot.py", 10,
+                        "append_tick", "wall-clock `time.time`"),
+                Finding("L303", "src/repro/serve/pages.py", 20,
+                        "PagePool.state_dict", "set iteration")]
+
+    def test_add_suppresses_and_expire_warns(self, tmp_path):
+        fs = self._findings()
+        path = str(tmp_path / "baseline.txt")
+        write_baseline(path, fs)
+        baseline = load_baseline(path)
+        assert len(baseline) == 2
+        new, supp, stale = split_by_baseline(fs, baseline)
+        assert new == [] and len(supp) == 2 and stale == []
+        # the violation behind entry 0 gets fixed -> its entry goes stale
+        new, supp, stale = split_by_baseline(fs[1:], baseline)
+        assert new == [] and len(supp) == 1
+        assert stale == [fs[0].fingerprint]
+
+    def test_new_finding_not_suppressed(self, tmp_path):
+        fs = self._findings()
+        path = str(tmp_path / "baseline.txt")
+        write_baseline(path, fs[:1])
+        new, supp, stale = split_by_baseline(fs, load_baseline(path))
+        assert [f.rule for f in new] == ["L303"]
+
+    def test_fingerprint_survives_line_drift(self):
+        a = Finding("L301", "m.py", 10, "f", "wall-clock `time.time`")
+        b = Finding("L301", "m.py", 99, "f", "wall-clock `time.time`")
+        assert a.fingerprint == b.fingerprint
+
+    def test_justifications_parse(self, tmp_path):
+        p = tmp_path / "b.txt"
+        p.write_text("# header comment\n\n"
+                     "L301:m.py:f:slug  # heartbeat is wall-clock\n")
+        assert load_baseline(str(p)) == {
+            "L301:m.py:f:slug": "heartbeat is wall-clock"}
+
+
+# -- the CLI ------------------------------------------------------------------
+
+
+class TestCli:
+    def _cli(self):
+        sys.path.insert(0, os.path.join(REPO_ROOT, "tools"))
+        try:
+            import repro_lint
+        finally:
+            sys.path.pop(0)
+        return repro_lint
+
+    def test_clean_repo_exits_zero_and_seeded_violation_fails(self, tmp_path):
+        cli = self._cli()
+        (tmp_path / "src/repro/serve").mkdir(parents=True)
+        eng = tmp_path / "src/repro/serve/hot.py"
+        eng.write_text("import jax\n\n@jax.jit\ndef tick(st):\n"
+                       "    return st + 1\n")
+        assert cli.main(["--root", str(tmp_path)]) == 0
+        # seed the synthetic violation the CI lint job must catch
+        eng.write_text("import jax\n\n@jax.jit\ndef tick(st):\n"
+                       "    return st.item()\n")
+        assert cli.main(["--root", str(tmp_path)]) == 1
+
+    def test_write_baseline_then_clean_then_strict_stale(self, tmp_path, capsys):
+        cli = self._cli()
+        (tmp_path / "src/repro/serve").mkdir(parents=True)
+        eng = tmp_path / "src/repro/serve/hot.py"
+        eng.write_text("import jax\n\n@jax.jit\ndef tick(st):\n"
+                       "    return st.item()\n")
+        base = str(tmp_path / "baseline.txt")
+        assert cli.main(["--root", str(tmp_path), "--baseline", base,
+                         "--write-baseline"]) == 0
+        assert cli.main(["--root", str(tmp_path), "--baseline", base]) == 0
+        # fix the violation: entry goes stale; --strict turns that red
+        eng.write_text("import jax\n\n@jax.jit\ndef tick(st):\n"
+                       "    return st + 1\n")
+        assert cli.main(["--root", str(tmp_path), "--baseline", base]) == 0
+        assert "stale" in capsys.readouterr().out
+        assert cli.main(["--root", str(tmp_path), "--baseline", base,
+                         "--strict"]) == 1
+
+    def test_report_artifact_schema(self, tmp_path):
+        import json
+        cli = self._cli()
+        (tmp_path / "src/repro/serve").mkdir(parents=True)
+        (tmp_path / "src/repro/serve/hot.py").write_text(
+            "import jax\n\n@jax.jit\ndef tick(st):\n    return st.item()\n")
+        rpt = str(tmp_path / "findings.json")
+        assert cli.main(["--root", str(tmp_path), "--report", rpt]) == 1
+        payload = json.load(open(rpt))
+        assert payload["total"] == 1
+        assert payload["new"][0]["rule"] == "L101"
+        assert payload["new"][0]["fingerprint"].startswith("L101:")
+
+    def test_unknown_pass_is_usage_error(self, tmp_path):
+        cli = self._cli()
+        assert cli.main(["--root", str(tmp_path),
+                         "--passes", "no-such-pass"]) == 2
+
+
+# -- self-lint: the repo is clean modulo the justified baseline ---------------
+
+
+class TestSelfLint:
+    def test_repo_clean_modulo_baseline(self):
+        ctx = Context.for_root(REPO_ROOT)
+        findings = run_passes(ctx)
+        baseline = load_baseline(
+            os.path.join(REPO_ROOT, "tools", "lint_baseline.txt"))
+        new, _supp, stale = split_by_baseline(findings, baseline)
+        assert new == [], "new lint findings:\n" + "\n".join(
+            f.render() for f in new)
+        assert stale == [], f"stale baseline entries (delete them): {stale}"
+
+    def test_baseline_is_small_and_justified(self):
+        baseline = load_baseline(
+            os.path.join(REPO_ROOT, "tools", "lint_baseline.txt"))
+        assert 0 < len(baseline) <= 5
+        for fp, why in baseline.items():
+            assert why, f"baseline entry lacks a justification: {fp}"
+
+    def test_all_five_passes_registered(self):
+        assert sorted(PASSES) == [
+            "accounting-completeness", "donation-safety",
+            "readback-budget", "replay-determinism", "trace-purity"]
+
+    def test_engine_ticks_are_discovered_roots(self):
+        # guards the pass against silently losing its traversal targets
+        from repro.lint import purity
+        ctx = Context.for_root(REPO_ROOT)
+        quals = {r.qual for r in purity._find_roots(ctx)}
+        for expected in ("ServeEngine._make_tick_impl.tick",
+                         "ServeEngine._make_tick_impl.spec_tick",
+                         "ServeEngine._make_tick_impl.tree_tick",
+                         "TrainEngine._build_tick.tick"):
+            assert expected in quals, expected
+
+
+# -- the violations the linter surfaced, fixed + locked -----------------------
+
+
+def _accountant():
+    from repro.core.accounting import AccountantConfig, CarbonAccountant
+    return CarbonAccountant(AccountantConfig(device="tpu_v5e", n_devices=1,
+                                             grid_mix="NY"))
+
+
+class TestLintSurfacedAccountingFix:
+    def test_chaos_exposure_channels_are_billed(self):
+        # L401 found faults_injected/degraded/readback_retries unbilled
+        from repro.serve.engine import StepMetrics
+
+        acct = _accountant()
+        m = StepMetrics(tokens=8, active_slots=2, wall_s=0.1,
+                        faults_injected=3, degraded=1, readback_retries=2)
+        acct.observe_serve(m)
+        acct.observe_serve(m)
+        rep = acct.report()
+        assert rep["faults_injected"] == 6.0
+        assert rep["degraded_ticks"] == 2.0
+        assert rep["readback_retries"] == 4.0
+        assert rep["degraded_tick_rate"] == pytest.approx(1.0)
+
+    def test_chaos_exposure_channels_zero_guarded_and_snapshotted(self):
+        acct = _accountant()
+        rep = acct.report()     # no ticks observed: ratios must be 0.0
+        assert rep["degraded_tick_rate"] == 0.0
+        assert rep["recovery_j_per_fault"] == 0.0
+        # and the new ledgers survive the snapshot round-trip
+        state = acct.state_dict()
+        for k in ("_faults_injected", "_degraded_ticks",
+                  "_readback_retries"):
+            assert k in state
+        fresh = _accountant()
+        fresh.load_state(state)
+        assert fresh.report()["faults_injected"] == 0.0
+
+    def test_exempt_lists_only_name_real_fields(self):
+        import dataclasses
+        from repro.serve import engine as se
+        from repro.train import engine as te
+        serve_fields = {f.name for f in dataclasses.fields(se.StepMetrics)}
+        train_fields = {f.name
+                        for f in dataclasses.fields(te.TrainStepMetrics)}
+        assert se.ACCOUNTING_EXEMPT <= serve_fields
+        assert te.TRAIN_ACCOUNTING_EXEMPT <= train_fields
+
+
+# -- bench_util.required_keys (the smoke gates' shared schema check) ----------
+
+
+class TestRequiredKeys:
+    def _rk(self):
+        sys.path.insert(0, os.path.join(REPO_ROOT, "benchmarks"))
+        try:
+            from bench_util import required_keys
+        finally:
+            sys.path.pop(0)
+        return required_keys
+
+    def test_present_keys_pass_and_chain(self):
+        rk = self._rk()
+        payload = {"speedup": 1.4, "paged": {"j_per_token": 0.2}}
+        assert rk(payload, ("speedup", "paged.j_per_token")) is payload
+
+    def test_missing_top_level_key_raises(self):
+        rk = self._rk()
+        with pytest.raises(AssertionError, match="speedup"):
+            rk({"paged": {}}, ("speedup",), where="BENCH_x.json")
+
+    def test_missing_nested_key_names_full_path(self):
+        rk = self._rk()
+        with pytest.raises(AssertionError, match=r"paged\.j_per_token"):
+            rk({"paged": {"other": 1}}, ("paged.j_per_token",))
+
+    def test_all_missing_paths_reported_in_one_error(self):
+        rk = self._rk()
+        with pytest.raises(AssertionError) as ei:
+            rk({"a": 1}, ("b", "c.d", "a"))
+        msg = str(ei.value)
+        assert "b" in msg and "c.d" in msg
+
+    def test_descent_through_non_dict_is_missing(self):
+        rk = self._rk()
+        with pytest.raises(AssertionError, match=r"a\.b"):
+            rk({"a": 3}, ("a.b",))

@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""repro-lint CLI: run the invariant passes, diff against the baseline.
+
+Usage (what `make lint` and the CI lint job run):
+
+    PYTHONPATH=src python tools/repro_lint.py --baseline tools/lint_baseline.txt
+
+Exit codes: 0 = clean modulo baseline; 1 = NEW findings (or stale
+baseline entries under --strict); 2 = usage error.
+
+The baseline holds *justified* suppressions keyed by line-number-free
+fingerprints (see src/repro/lint/base.py). New findings must be fixed or
+justified in the same PR; stale entries (violation fixed, entry left
+behind) warn and should be deleted. ``--write-baseline`` regenerates the
+file from current findings for bootstrap; every entry it writes carries a
+TODO justification that review should replace.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.lint import (Context, PASSES, load_baseline, run_passes,  # noqa: E402
+                        split_by_baseline, write_baseline)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro_lint", description=__doc__)
+    ap.add_argument("--root", default=_ROOT,
+                    help="repo root to scan (default: this repo)")
+    ap.add_argument("--baseline", default=None,
+                    help="path to the justified-suppressions file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from current findings")
+    ap.add_argument("--passes", default=None,
+                    help="comma-separated pass names (default: all): " +
+                    ", ".join(PASSES))
+    ap.add_argument("--report", default=None,
+                    help="write a JSON findings report (CI artifact)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--strict", action="store_true",
+                    help="stale baseline entries also fail")
+    args = ap.parse_args(argv)
+
+    names = None
+    if args.passes:
+        names = [p.strip() for p in args.passes.split(",") if p.strip()]
+        unknown = [n for n in names if n not in PASSES]
+        if unknown:
+            print(f"repro-lint: unknown pass(es): {', '.join(unknown)}; "
+                  f"known: {', '.join(PASSES)}", file=sys.stderr)
+            return 2
+
+    ctx = Context.for_root(args.root)
+    findings = run_passes(ctx, names)
+
+    if args.write_baseline:
+        if not args.baseline:
+            print("repro-lint: --write-baseline requires --baseline",
+                  file=sys.stderr)
+            return 2
+        write_baseline(args.baseline, findings)
+        print(f"repro-lint: wrote {len(findings)} fingerprint(s) to "
+              f"{args.baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline) if args.baseline else {}
+    new, suppressed, stale = split_by_baseline(findings, baseline)
+
+    if args.report:
+        payload = {
+            "total": len(findings),
+            "new": [f.__dict__ | {"fingerprint": f.fingerprint}
+                    for f in new],
+            "suppressed": [f.__dict__ | {
+                "fingerprint": f.fingerprint,
+                "justification": baseline.get(f.fingerprint, "")}
+                for f in suppressed],
+            "stale_baseline_entries": stale,
+        }
+        with open(args.report, "w", encoding="utf-8") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+
+    if args.format == "json":
+        print(json.dumps([f.__dict__ | {"fingerprint": f.fingerprint}
+                          for f in new], indent=2, sort_keys=True))
+    else:
+        for f in new:
+            print(f.render())
+        if suppressed:
+            print(f"repro-lint: {len(suppressed)} finding(s) suppressed "
+                  f"by baseline")
+        for fp in stale:
+            print(f"repro-lint: stale baseline entry (violation fixed — "
+                  f"delete the line): {fp}")
+
+    if new:
+        print(f"repro-lint: FAIL — {len(new)} new finding(s). Fix them or "
+              f"add a justified line to the baseline "
+              f"({args.baseline or 'tools/lint_baseline.txt'}).",
+              file=sys.stderr)
+        return 1
+    if stale and args.strict:
+        print(f"repro-lint: FAIL (--strict) — {len(stale)} stale baseline "
+              f"entr(ies).", file=sys.stderr)
+        return 1
+    print(f"repro-lint: OK — {len(findings)} finding(s), all baselined; "
+          f"{len(PASSES) if names is None else len(names)} pass(es).")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
